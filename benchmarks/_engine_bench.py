@@ -1,0 +1,137 @@
+"""All multi-device engine benchmarks, run inside one 8/16-fake-device
+process (spawned by benchmarks.run). Prints ``name,us_per_call,derived``
+CSV rows on stdout. Each section maps to a paper figure (see DESIGN.md S8).
+"""
+import os
+import sys
+
+ndev = int(os.environ.get("BENCH_DEVICES", "8"))
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+
+import time
+
+import numpy as np
+import jax
+from jax.sharding import AxisType
+
+from repro.core import CascadeMode, TascadeConfig
+from repro.graph import apps
+from repro.graph.partition import shard_graph
+from repro.graph.rmat import rmat_graph
+
+
+def mesh_of(shape, axes):
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def timed(fn, *args, reps=3):
+    fn(*args)  # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out[0] if isinstance(out, tuple) else out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def cfg_for(mode, region=("model",), cascade=("data",), C=8, sync=False):
+    return TascadeConfig(region_axes=region, cascade_axes=cascade,
+                         capacity_ratio=C, mode=mode, sync_merge=sync,
+                         exchange_slack=2.0, max_exchange_rounds=8)
+
+
+def main():
+    scale = int(os.environ.get("BENCH_SCALE", "10"))
+    g = rmat_graph(scale, edge_factor=8, seed=1, weighted=True)
+    gsym = rmat_graph(scale, edge_factor=8, seed=1, symmetrize=True)
+    mesh = mesh_of((ndev // 4, 4), ("data", "model"))
+    sg = shard_graph(g, ndev)
+    sgsym = shard_graph(gsym, ndev)
+    root = int(np.argmax(g.degrees))
+    e = g.num_edges
+
+    # ---- Fig. 4: accumulative feature ablation (per app) ----
+    for app_name, runner in (
+        ("sssp", lambda c: apps.run_sssp(mesh, sg, root, c)),
+        ("bfs", lambda c: apps.run_bfs(mesh, sg, root, c)),
+        ("pagerank", lambda c: apps.run_pagerank(mesh, sg, c, iters=5)),
+        ("spmv", lambda c: apps.run_spmv(
+            mesh, sg, np.ones(g.num_vertices, np.float32), c)),
+    ):
+        base_hop = None
+        for mode in (CascadeMode.OWNER_DIRECT, CascadeMode.PROXY_MERGE,
+                     CascadeMode.FULL_CASCADE, CascadeMode.TASCADE):
+            us, (res, m) = timed(runner, cfg_for(mode))
+            hop = float(m.hop_bytes if hasattr(m, "hop_bytes")
+                        else m["hop_bytes"])
+            sent = int(m.sent_total if hasattr(m, "sent_total")
+                       else m["sent_total"])
+            if base_hop is None:
+                base_hop = max(hop, 1.0)
+            row(f"fig4/{app_name}/{mode.value}", us,
+                f"hop_bytes={hop:.0f};traffic_x={base_hop / max(hop, 1):.2f};"
+                f"msgs={sent}")
+
+    # ---- Fig. 5: proxy region size (region axis width) ----
+    for shape, axes, region in (((ndev, 1), ("data", "model"), 1),
+                                ((ndev // 2, 2), ("data", "model"), 2),
+                                ((ndev // 4, 4), ("data", "model"), 4),
+                                ((1, ndev), ("data", "model"), ndev)):
+        m2 = mesh_of(shape, axes)
+        sg2 = shard_graph(g, ndev)
+        us, (res, met) = timed(
+            lambda c: apps.run_sssp(m2, sg2, root, c), cfg_for(CascadeMode.TASCADE))
+        row(f"fig5/sssp/region_w{region}", us,
+            f"hop_bytes={float(met.hop_bytes):.0f};msgs={int(met.sent_total)}")
+
+    # ---- Fig. 6: P-cache capacity ratio C ----
+    for C in (1, 4, 16, 64):
+        us, (res, met) = timed(
+            lambda c: apps.run_sssp(mesh, sg, root, c),
+            cfg_for(CascadeMode.TASCADE, C=C))
+        row(f"fig6/sssp/C{C}", us,
+            f"hop_bytes={float(met.hop_bytes):.0f};"
+            f"filtered={int(met.filtered)};coalesced={int(met.coalesced)}")
+        us, (res, met) = timed(
+            lambda c: apps.run_pagerank(mesh, sg, c, iters=5),
+            cfg_for(CascadeMode.TASCADE, C=C))
+        row(f"fig6/pagerank/C{C}", us,
+            f"hop_bytes={float(met.hop_bytes):.0f};"
+            f"coalesced={int(met.coalesced)}")
+
+    # ---- Fig. 7: asynchronous vs barrier-synchronized merge ----
+    for sync in (False, True):
+        us, (res, met) = timed(
+            lambda c: apps.run_sssp(mesh, sg, root, c),
+            cfg_for(CascadeMode.TASCADE, sync=sync))
+        row(f"fig7/sssp/{'sync' if sync else 'async'}", us,
+            f"epochs={int(met.epochs)};msgs={int(met.sent_total)};"
+            f"hop_bytes={float(met.hop_bytes):.0f}")
+
+    # ---- Fig. 3: scaling (Dalorex vs Tascade traffic) on WCC ----
+    for mode in (CascadeMode.OWNER_DIRECT, CascadeMode.TASCADE):
+        us, (res, met) = timed(
+            lambda c: apps.run_wcc(mesh, sgsym, c), cfg_for(mode))
+        row(f"fig3/wcc/{mode.value}/ndev{ndev}", us,
+            f"hop_bytes={float(met.hop_bytes):.0f};"
+            f"msgs={int(met.sent_total)};edges={e}")
+
+    # ---- Histogram (write-back coalescing, single phase) ----
+    rng = np.random.default_rng(0)
+    keys = np.minimum(rng.zipf(1.3, size=(ndev, 2048)) - 1, 1023).astype(np.int32)
+    for mode in (CascadeMode.OWNER_DIRECT, CascadeMode.TASCADE):
+        us, (h, stats) = timed(
+            lambda c: apps.run_histogram(mesh, keys, 1024, c), cfg_for(mode))
+        row(f"hist/{mode.value}", us,
+            f"msgs={int(stats['sent_total'])};"
+            f"coalesced={int(stats['coalesced'])};"
+            f"hop_bytes={float(stats['hop_bytes']):.0f}")
+
+    print("ENGINE_BENCH_DONE", flush=True)
+
+
+if __name__ == "__main__":
+    main()

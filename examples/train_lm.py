@@ -1,0 +1,33 @@
+"""End-to-end LM training driver: a ~15M-param qwen2-family model trained
+for a few hundred steps on synthetic tokens, with async checkpointing and
+preemption-safe resume (rerun the same command after a kill).
+
+  PYTHONPATH=src python examples/train_lm.py [steps] [ckpt_dir]
+"""
+import sys
+
+from repro.models.lm.config import LMConfig
+from repro.train.loop import TrainJob, run
+
+
+def main():
+    steps = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+    ckpt = sys.argv[2] if len(sys.argv) > 2 else "/tmp/repro_lm_ckpt"
+    # qwen2-family block at ~15M params — trainable on CPU in minutes
+    cfg = LMConfig(name="qwen2-nano", n_layers=4, d_model=256, n_heads=4,
+                   n_kv_heads=2, head_dim=64, d_ff=1024, vocab=4096,
+                   qkv_bias=True, dtype="float32", q_block=64, kv_block=64,
+                   loss_chunk=32)
+    print(f"training {cfg.name} ({cfg.param_count/1e6:.1f}M params) "
+          f"for {steps} steps; ckpt -> {ckpt}")
+    losses = run(TrainJob(cfg=cfg, steps=steps, ckpt_dir=ckpt,
+                          ckpt_every=50, log_every=20, lr=3e-4))
+    if not losses:
+        print("TRAIN_LM_OK (already complete; resumed past final step)")
+        return
+    assert losses[-1] < losses[0], "loss did not improve"
+    print(f"TRAIN_LM_OK first_loss={losses[0]:.4f} last_loss={losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Arch bundle interface: every assigned architecture exposes one of these.
+
+A bundle binds (exact published config) x (its shape set) to concrete jit-able
+step functions plus abstract inputs (ShapeDtypeStruct) and shardings, so the
+dry-run / roofline / benchmarks can treat all ten architectures uniformly:
+
+    cell = bundle.cell(shape_name, mesh)
+    jax.jit(cell.fn, in_shardings=cell.in_shardings,
+            donate_argnums=cell.donate).lower(*cell.args).compile()
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Cell:
+    """One (arch x shape x mesh) dry-run cell."""
+
+    name: str                 # "<arch>/<shape>"
+    fn: Callable              # function to jit
+    args: tuple               # pytree of ShapeDtypeStruct (abstract ok)
+    in_shardings: tuple       # matching pytree of NamedSharding
+    donate: tuple = ()        # donated arg indices
+    model_flops: float = 0.0  # analytic useful FLOPs per step (6ND etc.)
+    kind: str = "train"       # train | prefill | decode | serve
+
+
+@dataclasses.dataclass
+class ArchBundle:
+    name: str
+    family: str                       # lm | gnn | recsys
+    config: Any
+    shapes: tuple[str, ...]           # runnable shapes
+    skipped: dict                     # shape -> reason (e.g. long_500k)
+    cell_fn: Callable                 # (shape, mesh) -> Cell
+    smoke_fn: Callable                # () -> None; tiny CPU train/fwd step
+    # scan-over-layers cost calibration: XLA cost_analysis counts a while
+    # body once, so archs that scan provide (shape, mesh, n_layers) -> Cell
+    # with layers UNROLLED; the dry-run compiles n=1 and n=2 to recover
+    # per-layer terms and extrapolates to n_loop_layers.
+    calib_fn: Callable | None = None
+    n_loop_layers: int = 0
+
+    def cell(self, shape: str, mesh) -> Cell:
+        if shape in self.skipped:
+            raise ValueError(f"{self.name}/{shape} skipped: {self.skipped[shape]}")
+        if shape not in self.shapes:
+            raise ValueError(f"{self.name} has no shape {shape}")
+        return self.cell_fn(shape, mesh)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Data-parallel axes: every mesh axis except 'model'."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def all_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def ns(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_ns(mesh, specs):
+    return jax.tree.map(lambda s: ns(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def apply_fsdp(specs, params_sds, mesh, *, min_size: int = 1 << 16,
+               prefer_dim: str = "largest"):
+    """FSDP/ZeRO-3: additionally shard each parameter's largest still-
+    unsharded dim over the data-parallel axes (weights are all-gathered
+    per layer at compute time by SPMD). Dims must divide evenly; small
+    tensors stay as-is.
+
+    ``prefer_dim``: "largest" (default) or "leading" (perf experiment:
+    shard the layer-stack dim so gathers happen per layer slice).
+    """
+    import math
+    import os
+    from jax.sharding import PartitionSpec as P
+
+    prefer_dim = os.environ.get("REPRO_FSDP_DIM", prefer_dim)
+    dp = dp_axes(mesh)
+    dpn = math.prod(mesh.devices.shape[list(mesh.axis_names).index(a)]
+                    for a in dp)
+    if dpn <= 1:
+        return specs
+
+    def fix(spec, arr):
+        if not isinstance(spec, P):
+            return spec
+        shape = arr.shape
+        if math.prod(shape, start=1) < min_size:
+            return spec
+        spec_t = tuple(spec) + (None,) * (len(shape) - len(spec))
+        # candidate dims: unsharded, divisible; pick per preference
+        cands = [i for i, (s, n) in enumerate(zip(spec_t, shape))
+                 if s is None and n % dpn == 0]
+        if not cands:
+            return spec
+        if prefer_dim == "leading":
+            best = cands[0]
+        else:
+            best = max(cands, key=lambda i: shape[i])
+        out = list(spec_t)
+        out[best] = dp if len(dp) > 1 else dp[0]
+        return P(*out)
+
+    return jax.tree.map(fix, specs, params_sds,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def pad_to(n: int, multiple: int) -> int:
+    return -(-n // multiple) * multiple

@@ -1,0 +1,18 @@
+"""DeepSeekMoE 16B [arXiv:2401.06066]: 28L d2048 16H(MHA) vocab 102400,
+64 routed experts top-6 + 2 shared, fine-grained ff 1408."""
+from repro.configs.lm_family import make_bundle
+from repro.models.lm.config import LMConfig, MoEConfig
+
+CONFIG = LMConfig(
+    name="deepseek-moe-16b",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=102400,
+    moe=MoEConfig(num_experts=64, top_k=6, d_ff_expert=1408, num_shared=2),
+    dtype="bfloat16",
+)
+
+bundle = lambda: make_bundle(CONFIG)

@@ -1,0 +1,4 @@
+"""dimenet GNN architecture (assigned config; see repro.models.gnn.dimenet)."""
+from repro.configs.gnn_family import make_bundle
+
+bundle = lambda: make_bundle("dimenet")

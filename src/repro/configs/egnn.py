@@ -1,0 +1,4 @@
+"""egnn GNN architecture (assigned config; see repro.models.gnn.egnn)."""
+from repro.configs.gnn_family import make_bundle
+
+bundle = lambda: make_bundle("egnn")

@@ -1,0 +1,366 @@
+"""Bundle builder for the four GNN architectures.
+
+Shapes (assignment):
+  full_graph_sm  N=2708  E=10556   d_feat=1433  full-batch (Cora-sized)
+  minibatch_lg   N=232965 E=114.6M d_feat=602   sampled: batch_nodes=1024,
+                 fanout 15-10 -> per-replica block (union subgraph of the
+                 two sampled layers; GraphSAINT-style), data-parallel.
+  ogb_products   N=2449029 E=61859140 d_feat=100 full-batch-large
+  molecule       30 nodes / 64 edges x batch 128 -> merged batch graph, DP.
+
+Full-batch shapes shard node/edge arrays over every mesh axis (GSPMD
+inserts the aggregation collectives — the baseline the perf pass improves
+with the Tascade dense tree). Sampled/molecule shapes are pure DP with a
+leading per-device dim, vmapped inside the step.
+
+DimeNet triplets are capped at 4x edges (power-law graphs explode in
+Sum deg^2; capping is standard practice) — see DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (
+    ArchBundle, Cell, all_axes, ns, pad_to, sds, tree_ns,
+)
+from repro.models.gnn import dimenet, egnn, graphcast, pna
+from repro.models.gnn.common import GraphBatch, mlp_apply
+from repro.optim.adamw import AdamW
+
+N_CLASSES = 47  # ogbn-products label count; reused for node classification
+
+
+def _shape_dims(shape: str, mesh):
+    nd = mesh.devices.size
+    if shape == "full_graph_sm":
+        return dict(n=pad_to(2708, nd), e=pad_to(10556, nd), d_feat=1433,
+                    batched=False, graph_level=False)
+    if shape == "minibatch_lg":
+        # union subgraph of fanout-15-10 blocks from 1024 seeds
+        n1 = 1024 + 1024 * 15              # 16384
+        n0 = n1 + n1 * 10                  # 180224
+        e = 1024 * 15 + n1 * 10            # 179200
+        return dict(n=n0, e=e, d_feat=602, seeds=1024, batched=True,
+                    graph_level=False)
+    if shape == "ogb_products":
+        return dict(n=pad_to(2449029, nd), e=pad_to(61859140, nd), d_feat=100,
+                    batched=False, graph_level=False)
+    if shape == "molecule":
+        return dict(n=128 * 30, e=128 * 64, d_feat=16, n_graphs=128,
+                    batched=True, graph_level=True)
+    raise ValueError(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNArch:
+    cfg: object
+    needs_coords: bool = False
+    needs_species: bool = False
+    needs_edge_feat: bool = False
+    needs_triplets: bool = False
+    init: Callable = None            # (key, d_in) -> params
+    loss: Callable = None            # (params, inputs, graph_level) -> scalar
+    flops: Callable = None           # (dims) -> float
+
+
+# ------------------------------------------------------------- arch adapters
+
+def _pna_arch() -> GNNArch:
+    cfg = pna.PNAConfig(d_out=N_CLASSES)
+
+    def init(key, d_in):
+        return pna.init_params(cfg, key, d_in)
+
+    def loss(params, x, graph_level):
+        g = GraphBatch(node_feat=x["node_feat"], edge_src=x["edge_src"],
+                       edge_dst=x["edge_dst"], edge_feat=None, coords=None,
+                       graph_id=x.get("graph_id"),
+                       num_graphs=x.get("num_graphs", 1))
+        if graph_level:
+            pred = pna.graph_readout(params, g, cfg)[:, :1]
+            return jnp.mean((pred - x["target"]) ** 2)
+        logits = pna.node_logits(params, g, cfg)
+        labels = x["labels"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    def flops(d):
+        dh = cfg.d_hidden
+        per_layer = 2 * (d["e"] * 2 * dh * dh + d["n"] * 14 * dh * dh)
+        return 3 * (cfg.n_layers * per_layer + 2 * d["n"] * d["d_feat"] * dh)
+
+    return GNNArch(cfg=cfg, init=init, loss=loss, flops=flops)
+
+
+def _graphcast_arch() -> GNNArch:
+    cfg = graphcast.GraphCastConfig()
+
+    def init(key, d_in):
+        return graphcast.init_params(cfg, key, d_in=d_in)
+
+    def loss(params, x, graph_level):
+        g = GraphBatch(node_feat=x["node_feat"], edge_src=x["edge_src"],
+                       edge_dst=x["edge_dst"], edge_feat=x["edge_feat"],
+                       coords=None, graph_id=None)
+        pred = graphcast.forward(params, g, cfg)
+        return jnp.mean((pred - x["target"]) ** 2)
+
+    def flops(d):
+        dh = cfg.d_hidden
+        per_layer = 2 * (d["e"] * (3 * dh * dh + dh * dh)
+                         + d["n"] * (2 * dh * dh + dh * dh))
+        enc = 2 * (d["n"] * d["d_feat"] * dh + d["e"] * 4 * dh
+                   + d["n"] * dh * cfg.n_vars)
+        return 3 * (cfg.n_layers * per_layer + enc)
+
+    return GNNArch(cfg=cfg, needs_edge_feat=True, init=init, loss=loss,
+                   flops=flops)
+
+
+def _egnn_arch() -> GNNArch:
+    cfg = egnn.EGNNConfig()
+
+    def init(key, d_in):
+        return egnn.init_params(cfg, key, d_in)
+
+    def loss(params, x, graph_level):
+        g = GraphBatch(node_feat=x["node_feat"], edge_src=x["edge_src"],
+                       edge_dst=x["edge_dst"], edge_feat=None,
+                       coords=x["coords"], graph_id=x.get("graph_id"),
+                       num_graphs=x.get("num_graphs", 1))
+        if graph_level:
+            pred = egnn.graph_energy(params, g, cfg)
+            return jnp.mean((pred - x["target"]) ** 2)
+        h, _ = egnn.forward(params, g, cfg)
+        pred = mlp_apply(params["readout"], h)
+        return jnp.mean((pred[:, 0] - x["target"][:, 0]) ** 2)
+
+    def flops(d):
+        dh = cfg.d_hidden
+        per_layer = 2 * (d["e"] * (2 * dh + 1) * dh + d["e"] * dh * dh
+                         + d["n"] * 2 * dh * dh)
+        return 3 * (cfg.n_layers * per_layer + 2 * d["n"] * d["d_feat"] * dh)
+
+    return GNNArch(cfg=cfg, needs_coords=True, init=init, loss=loss,
+                   flops=flops)
+
+
+def _dimenet_arch() -> GNNArch:
+    cfg = dimenet.DimeNetConfig()
+
+    def init(key, d_in):
+        del d_in
+        return dimenet.init_params(cfg, key)
+
+    def loss(params, x, graph_level):
+        num_graphs = x.get("num_graphs", 1)
+        gid = x.get("graph_id")
+        if gid is None:
+            gid = jnp.zeros(x["species"].shape, jnp.int32)
+        pred = dimenet.forward(
+            params, x["species"], x["coords"], x["edge_src"], x["edge_dst"],
+            x["tri_kj"], x["tri_ji"], gid, num_graphs, cfg)
+        tgt = x["target"]
+        return jnp.mean((pred - tgt.reshape(pred.shape)) ** 2)
+
+    def flops(d):
+        dh = cfg.d_hidden
+        t = 4 * d["e"]  # capped triplets
+        per_block = 2 * (d["e"] * 3 * dh * dh + t * cfg.n_bilinear * dh * dh)
+        return 3 * cfg.n_blocks * per_block
+
+    return GNNArch(cfg=cfg, needs_coords=True, needs_species=True,
+                   needs_triplets=True, init=init, loss=loss, flops=flops)
+
+
+ARCHS = {
+    "pna": _pna_arch,
+    "graphcast": _graphcast_arch,
+    "egnn": _egnn_arch,
+    "dimenet": _dimenet_arch,
+}
+
+
+# ----------------------------------------------------------------- inputs
+
+def _input_sds(arch: GNNArch, shape: str, mesh):
+    """Abstract inputs + shardings for one cell."""
+    d = _shape_dims(shape, mesh)
+    n, e = d["n"], d["e"]
+    a = all_axes(mesh)
+    nd = mesh.devices.size
+    batched = d["batched"]
+
+    def node(shp, dt):
+        if batched:
+            return sds((nd, *shp), dt), ns(mesh, P(a, *([None] * len(shp))))
+        return sds(shp, dt), ns(mesh, P(a, *([None] * (len(shp) - 1))))
+
+    xs, shards = {}, {}
+
+    def add(name, shp, dt):
+        xs[name], shards[name] = node(shp, dt)
+
+    if arch.needs_species:
+        add("species", (n,), jnp.int32)
+    else:
+        add("node_feat", (n, d["d_feat"]), jnp.float32)
+    add("edge_src", (e,), jnp.int32)
+    add("edge_dst", (e,), jnp.int32)
+    if arch.needs_edge_feat:
+        add("edge_feat", (e, 4), jnp.float32)
+    if arch.needs_coords:
+        add("coords", (n, 3), jnp.float32)
+    if arch.needs_triplets:
+        add("tri_kj", (4 * e,), jnp.int32)
+        add("tri_ji", (4 * e,), jnp.int32)
+
+    is_gc = isinstance(arch.cfg, graphcast.GraphCastConfig)
+    if is_gc:
+        # field model: per-node regression target for every shape
+        add("target", (n, arch.cfg.n_vars), jnp.float32)
+    elif d["graph_level"]:
+        ngr = d["n_graphs"]
+        add("graph_id", (n,), jnp.int32)
+        add("target", (ngr, 1), jnp.float32)
+        xs["num_graphs"] = ngr
+    elif arch.needs_triplets:
+        # whole-graph energy target
+        if batched:
+            add("target", (1, 1), jnp.float32)
+        else:
+            xs["target"] = sds((1, 1), jnp.float32)
+            shards["target"] = ns(mesh, P(None, None))
+    elif isinstance(arch.cfg, pna.PNAConfig):
+        add("labels", (n,), jnp.int32)
+    else:
+        add("target", (n, 1), jnp.float32)
+    return xs, shards, d
+
+
+def _make_step(arch: GNNArch, d, optimizer: AdamW, num_graphs: int = 1):
+    graph_level = d["graph_level"]
+    batched = d["batched"]
+
+    def single(params, x):
+        return arch.loss(params, dict(x, num_graphs=num_graphs), graph_level)
+
+    def loss_fn(params, xs):
+        if batched:
+            return jnp.mean(jax.vmap(lambda x: single(params, x))(xs))
+        return single(params, xs)
+
+    def train_step(params, opt_state, xs):
+        loss, grads = jax.value_and_grad(loss_fn)(params, xs)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def _cell(arch_name: str, shape: str, mesh) -> Cell:
+    return _cell_from_arch(ARCHS[arch_name](), arch_name, shape, mesh)
+
+
+def _smoke(arch_name: str):
+    # Smoke uses the published arch (hidden sizes are CPU-feasible) on a
+    # tiny random graph: one real optimizer step, finite-loss assert.
+    arch = ARCHS[arch_name]()
+    rng = np.random.default_rng(0)
+    n, e, d_feat = 24, 64, 8
+    xs = {
+        "edge_src": jnp.asarray(rng.integers(0, n, e).astype(np.int32)),
+        "edge_dst": jnp.asarray(rng.integers(0, n, e).astype(np.int32)),
+    }
+    if arch.needs_species:
+        xs["species"] = jnp.asarray(rng.integers(0, 5, n).astype(np.int32))
+    else:
+        xs["node_feat"] = jnp.asarray(
+            rng.standard_normal((n, d_feat)).astype(np.float32))
+    if arch.needs_edge_feat:
+        xs["edge_feat"] = jnp.asarray(
+            rng.standard_normal((e, 4)).astype(np.float32))
+    if arch.needs_coords:
+        xs["coords"] = jnp.asarray(
+            rng.standard_normal((n, 3)).astype(np.float32))
+    if arch.needs_triplets:
+        kj, ji = dimenet.build_triplets(np.asarray(xs["edge_src"]),
+                                        np.asarray(xs["edge_dst"]),
+                                        max_triplets=4 * e)
+        xs["tri_kj"], xs["tri_ji"] = jnp.asarray(kj), jnp.asarray(ji)
+        xs["target"] = jnp.zeros((1, 1), jnp.float32)
+    elif isinstance(arch.cfg, graphcast.GraphCastConfig):
+        xs["target"] = jnp.zeros((n, arch.cfg.n_vars), jnp.float32)
+    elif isinstance(arch.cfg, pna.PNAConfig):
+        xs["labels"] = jnp.asarray(rng.integers(0, N_CLASSES, n).astype(np.int32))
+    else:
+        xs["target"] = jnp.zeros((n, 1), jnp.float32)
+
+    optimizer = AdamW(lr=1e-3)
+    params = arch.init(jax.random.PRNGKey(0), d_feat)
+    opt_state = optimizer.init(params)
+    step = jax.jit(_make_step(arch, dict(graph_level=False, batched=False),
+                              optimizer))
+    params, opt_state, loss = step(params, opt_state, xs)
+    assert np.isfinite(float(loss)), f"{arch_name}: non-finite loss"
+
+
+def _calib_cell(arch_name: str, shape: str, mesh, n_layers: int) -> Cell:
+    """GraphCast scans its 16 processor layers; shallow variants unroll."""
+    arch = ARCHS[arch_name]()
+    assert isinstance(arch.cfg, graphcast.GraphCastConfig)
+    shallow = dataclasses.replace(arch.cfg, n_layers=n_layers)
+    patched = dataclasses.replace(_graphcast_arch(), cfg=shallow)
+
+    def init(key, d_in):
+        return graphcast.init_params(shallow, key, d_in=d_in)
+
+    def loss(params, x, graph_level):
+        g = GraphBatch(node_feat=x["node_feat"], edge_src=x["edge_src"],
+                       edge_dst=x["edge_dst"], edge_feat=x["edge_feat"],
+                       coords=None, graph_id=None)
+        pred = graphcast.forward(params, g, shallow)
+        return jnp.mean((pred - x["target"]) ** 2)
+
+    patched = dataclasses.replace(patched, init=init, loss=loss)
+    return _cell_from_arch(patched, f"{arch_name}[calib{n_layers}]", shape, mesh)
+
+
+def _cell_from_arch(arch: GNNArch, display: str, shape: str, mesh) -> Cell:
+    xs, shards, d = _input_sds(arch, shape, mesh)
+    num_graphs = xs.pop("num_graphs", 1)
+    optimizer = AdamW(lr=1e-3)
+    params_sds = jax.eval_shape(
+        lambda k: arch.init(k, d["d_feat"]), jax.random.PRNGKey(0))
+    opt_sds = jax.eval_shape(lambda: optimizer.init(params_sds))
+    rep = jax.tree.map(lambda _: ns(mesh, P()), params_sds)
+    rep_opt = jax.tree.map(lambda _: ns(mesh, P()), opt_sds)
+    step = _make_step(arch, d, optimizer, num_graphs)
+    return Cell(name=f"{display}/{shape}", fn=step,
+                args=(params_sds, opt_sds, xs),
+                in_shardings=(rep, rep_opt, shards), donate=(0, 1),
+                model_flops=arch.flops(d), kind="train")
+
+
+def make_bundle(arch_name: str) -> ArchBundle:
+    cfg = ARCHS[arch_name]().cfg
+    is_gc = isinstance(cfg, graphcast.GraphCastConfig)
+    return ArchBundle(
+        name=arch_name,
+        family="gnn",
+        config=cfg,
+        shapes=("full_graph_sm", "minibatch_lg", "ogb_products", "molecule"),
+        skipped={},
+        cell_fn=functools.partial(_cell, arch_name),
+        smoke_fn=functools.partial(_smoke, arch_name),
+        calib_fn=functools.partial(_calib_cell, arch_name) if is_gc else None,
+        n_loop_layers=cfg.n_layers if is_gc else 0,
+    )

@@ -1,0 +1,4 @@
+"""graphcast GNN architecture (assigned config; see repro.models.gnn.graphcast)."""
+from repro.configs.gnn_family import make_bundle
+
+bundle = lambda: make_bundle("graphcast")

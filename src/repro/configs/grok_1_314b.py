@@ -1,0 +1,18 @@
+"""grok-1 314B MoE [hf:xai-org/grok-1]: 64L d6144 48H(GQA kv=8) ff32768
+vocab 131072, 8 experts top-2."""
+from repro.configs.lm_family import make_bundle
+from repro.models.lm.config import LMConfig, MoEConfig
+
+CONFIG = LMConfig(
+    name="grok-1-314b",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32768,
+    vocab=131072,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32768),
+    dtype="bfloat16",
+)
+
+bundle = lambda: make_bundle(CONFIG)

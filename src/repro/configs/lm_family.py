@@ -1,0 +1,205 @@
+"""Bundle builder for the LM-family architectures.
+
+Shapes (assignment):
+  train_4k    seq 4096, global batch 256   -> train_step (loss+AdamW)
+  prefill_32k seq 32768, batch 32          -> prefill (logits + KV cache)
+  decode_32k  seq 32768 KV, batch 128      -> serve_step (1 new token)
+  long_500k   SKIPPED for all five archs: each is pure full (GQA) attention
+              per its published config; 524k dense attention is quadratic.
+              (Recorded in DESIGN.md and EXPERIMENTS.md.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (
+    ArchBundle, Cell, apply_fsdp, dp_axes, ns, pad_to, sds, tree_ns,
+)
+from repro.models.lm import model as M
+from repro.models.lm.config import LMConfig, MoEConfig
+from repro.optim.adamw import AdamW, AdamWState
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+}
+SKIPPED = {
+    "long_500k": "pure full-attention (GQA) arch; 524k dense attention is "
+                 "quadratic — skip sanctioned for full-attention archs",
+}
+
+
+def _pad_cfg_for_mesh(cfg: LMConfig, model_size: int) -> LMConfig:
+    """Pad vocab to the model-axis size so the head shards evenly."""
+    v = pad_to(cfg.vocab, model_size)
+    if v != cfg.vocab:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, vocab=v)
+    return cfg
+
+
+def _opt(cfg: LMConfig) -> AdamW:
+    return AdamW(lr=3e-4, weight_decay=0.1)
+
+
+def make_train_step(cfg: LMConfig, optimizer: AdamW, gspec=None):
+    def train_step(params, opt_state, tokens, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.lm_loss(p, tokens, labels, cfg, gspec))(params)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+    return train_step
+
+
+def _abstract_params(cfg: LMConfig):
+    return jax.eval_shape(lambda k: M.init_params(cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+def _abstract_opt(cfg: LMConfig, params_sds, optimizer: AdamW):
+    return jax.eval_shape(lambda: optimizer.init(params_sds))
+
+
+def _opt_specs(pspecs):
+    moment = jax.tree.map(lambda s: s, pspecs, is_leaf=lambda x: isinstance(x, P))
+    return AdamWState(step=P(), mu=moment, nu=jax.tree.map(
+        lambda s: s, pspecs, is_leaf=lambda x: isinstance(x, P)))
+
+
+def _cell(cfg_raw: LMConfig, shape: str, mesh) -> Cell:
+    model_size = mesh.devices.shape[list(mesh.axis_names).index("model")]
+    cfg = _pad_cfg_for_mesh(cfg_raw, model_size)
+    dp = dp_axes(mesh)
+    pspecs = M.resolve_param_specs(cfg, mesh)
+    params_sds = _abstract_params(cfg)
+    # FSDP/ZeRO-3: weights + optimizer moments additionally sharded over dp
+    pspecs = apply_fsdp(pspecs, params_sds, mesh)
+    optimizer = _opt(cfg)
+    sh = SHAPES[shape]
+    b, s = sh["batch"], sh["seq"]
+    tok_spec = P(dp, None)
+    # Explicit per-layer FSDP weight-gather (M.gather_specs) was measured
+    # WORSE than GSPMD-auto on this partitioner (see EXPERIMENTS.md SPerf
+    # iteration log): baseline keeps gspec=None; perf experiments flip it
+    # via REPRO_LM_GATHER=1.
+    import os as _os
+    gspec = M.gather_specs(cfg, mesh) if _os.environ.get("REPRO_LM_GATHER") \
+        else None
+
+    if shape == "train_4k":
+        opt_sds = _abstract_opt(cfg, params_sds, optimizer)
+        ospecs = _opt_specs(pspecs)
+        fn = make_train_step(cfg, optimizer, gspec)
+        args = (params_sds, opt_sds, sds((b, s), jnp.int32),
+                sds((b, s), jnp.int32))
+        inshard = (tree_ns(mesh, pspecs), tree_ns(mesh, ospecs),
+                   ns(mesh, tok_spec), ns(mesh, tok_spec))
+        flops = 6.0 * cfg.active_param_count * b * s
+        return Cell(name=f"{cfg.name}/{shape}", fn=fn, args=args,
+                    in_shardings=inshard, donate=(0, 1), model_flops=flops,
+                    kind="train")
+
+    if shape == "prefill_32k":
+        fn = functools.partial(M.prefill, cfg=cfg, gspec=gspec)
+        args = (params_sds, sds((b, s), jnp.int32))
+        inshard = (tree_ns(mesh, pspecs), ns(mesh, tok_spec))
+        flops = 2.0 * cfg.active_param_count * b * s
+        return Cell(name=f"{cfg.name}/{shape}", fn=fn, args=args,
+                    in_shardings=inshard, model_flops=flops, kind="prefill")
+
+    # decode_32k: one token against a seq-long KV cache.
+    # Cache sharded over batch (dp) AND head_dim (model) — kv-head counts
+    # (2..48) rarely divide the model axis, head_dim=64/128 always does.
+    if _os.environ.get("REPRO_DECODE_NO_FSDP"):
+        # perf experiment: serving keeps weights TP-only (no per-step FSDP
+        # gather); valid when bf16 params / TP fit HBM (no optimizer state)
+        pspecs = M.resolve_param_specs(cfg, mesh)
+    cache_sds = jax.eval_shape(
+        lambda: M.init_kv_cache(cfg, b, s))
+    if _os.environ.get("REPRO_DECODE_CACHE_SEQ"):
+        # perf experiment: sequence-sharded cache (split-K decode): the
+        # token write touches one seq shard; attention gathers only the
+        # tiny score/output partials instead of resharding the cache.
+        cache_spec = {
+            "k": P(None, dp, "model", None, None),
+            "v": P(None, dp, "model", None, None),
+            "len": P(dp),
+        }
+    else:
+        cache_spec = {
+            "k": P(None, dp, None, None, "model"),
+            "v": P(None, dp, None, None, "model"),
+            "len": P(dp),
+        }
+    fn = functools.partial(M.serve_step, cfg=cfg, gspec=gspec)
+    args = (params_sds, cache_sds, sds((b, 1), jnp.int32))
+    inshard = (tree_ns(mesh, pspecs), tree_ns(mesh, cache_spec),
+               ns(mesh, tok_spec))
+    flops = 2.0 * cfg.active_param_count * b
+    return Cell(name=f"{cfg.name}/{shape}", fn=fn, args=args,
+                in_shardings=inshard, donate=(1,), model_flops=flops,
+                kind="decode")
+
+
+def _smoke(cfg: LMConfig):
+    """Reduced-config one-train-step CPU smoke: same family, tiny dims."""
+    import dataclasses
+    import numpy as np
+
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(moe, num_experts=4, top_k=min(2, moe.top_k),
+                                  d_ff_expert=32)
+    tiny = dataclasses.replace(
+        cfg, n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=max(1, min(4, cfg.n_kv_heads)), head_dim=16,
+        d_ff=128, vocab=128, moe=moe, dtype="float32",
+        q_block=16, kv_block=16, loss_chunk=8)
+    params = M.init_params(tiny, jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3)
+    ostate = opt.init(params)
+    step = jax.jit(make_train_step(tiny, opt))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 128)
+    params, ostate, loss = step(params, ostate, toks, toks)
+    assert np.isfinite(float(loss)), f"{cfg.name}: non-finite loss"
+    # decode smoke
+    cache = M.init_kv_cache(tiny, 2, 8)
+    logits, cache = jax.jit(functools.partial(M.serve_step, cfg=tiny))(
+        params, cache, toks[:, :1])
+    assert np.isfinite(np.asarray(logits)).all()
+    assert logits.shape == (2, tiny.vocab)
+
+
+def _calib_cell(cfg: LMConfig, shape: str, mesh, n_layers: int) -> Cell:
+    """Unrolled shallow variant for scan-body cost calibration.
+
+    All inner scans are also removed (full-seq attention blocks, single-chunk
+    CE) so cost_analysis sees every FLOP exactly once. Memory analysis of
+    these variants is NOT meaningful (attention scores materialize); only
+    flops / bytes / collective terms are read from them.
+    """
+    import dataclasses
+    seq = SHAPES[shape]["seq"]
+    shallow = dataclasses.replace(
+        cfg, n_layers=n_layers, scan_layers=False,
+        q_block=seq, kv_block=seq, loss_chunk=seq)
+    return _cell(shallow, shape, mesh)
+
+
+def make_bundle(cfg: LMConfig) -> ArchBundle:
+    return ArchBundle(
+        name=cfg.name,
+        family="lm",
+        config=cfg,
+        shapes=tuple(SHAPES),
+        skipped=dict(SKIPPED),
+        cell_fn=functools.partial(_cell, cfg),
+        smoke_fn=functools.partial(_smoke, cfg),
+        calib_fn=functools.partial(_calib_cell, cfg),
+        n_loop_layers=cfg.n_layers,
+    )

@@ -1,0 +1,17 @@
+"""MiniCPM-2B [arXiv:2404.06395]: 40L d2304 36H(MHA) ff5760 vocab 122753,
+llama-like arch; WSD schedule lives in repro.optim.adamw.wsd_schedule."""
+from repro.configs.lm_family import make_bundle
+from repro.models.lm.config import LMConfig
+
+CONFIG = LMConfig(
+    name="minicpm-2b",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    d_ff=5760,
+    vocab=122753,  # padded to the model axis at mesh-bind time
+    dtype="bfloat16",
+)
+
+bundle = lambda: make_bundle(CONFIG)

@@ -1,0 +1,4 @@
+"""pna GNN architecture (assigned config; see repro.models.gnn.pna)."""
+from repro.configs.gnn_family import make_bundle
+
+bundle = lambda: make_bundle("pna")

@@ -1,0 +1,18 @@
+"""Qwen1.5-32B [hf:Qwen/Qwen1.5-32B]: 64L d5120 40H(MHA) ff27392
+vocab 152064, QKV bias."""
+from repro.configs.lm_family import make_bundle
+from repro.models.lm.config import LMConfig
+
+CONFIG = LMConfig(
+    name="qwen1.5-32b",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=27392,
+    vocab=152064,
+    qkv_bias=True,
+    dtype="bfloat16",
+)
+
+bundle = lambda: make_bundle(CONFIG)

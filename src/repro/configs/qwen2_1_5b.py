@@ -1,0 +1,19 @@
+"""Qwen2-1.5B [arXiv:2407.10671]: 28L d1536 12H(GQA kv=2) ff8960
+vocab 151936, QKV bias."""
+from repro.configs.lm_family import make_bundle
+from repro.models.lm.config import LMConfig
+
+CONFIG = LMConfig(
+    name="qwen2-1.5b",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab=151936,
+    qkv_bias=True,
+    dtype="bfloat16",
+)
+
+bundle = lambda: make_bundle(CONFIG)

@@ -1,0 +1,27 @@
+"""Architecture registry: --arch <id> resolution for launchers/benchmarks."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_MODULES = {
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "qwen1.5-32b": "repro.configs.qwen1_5_32b",
+    "pna": "repro.configs.pna",
+    "graphcast": "repro.configs.graphcast",
+    "egnn": "repro.configs.egnn",
+    "dimenet": "repro.configs.dimenet",
+    "two-tower-retrieval": "repro.configs.two_tower_retrieval",
+}
+
+
+def get_bundle(name: str):
+    if name not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCH_MODULES)}")
+    return importlib.import_module(ARCH_MODULES[name]).bundle()
+
+
+def all_arch_names():
+    return list(ARCH_MODULES)

@@ -1,0 +1,5 @@
+"""Two-tower retrieval [RecSys'19 YouTube]: embed 256, towers 1024-512-256,
+dot interaction, sampled softmax."""
+from repro.configs.recsys_family import make_bundle
+
+bundle = lambda: make_bundle()

@@ -1,0 +1,24 @@
+"""Tascade core: proxy regions, P-caches, and cascaded reduction trees."""
+from repro.core.api import (
+    CascadeMode,
+    MeshGeom,
+    ReduceOp,
+    TascadeConfig,
+    TascadeEngine,
+    WritePolicy,
+    tascade_scatter_reduce,
+)
+from repro.core.types import NO_IDX, PCacheState, UpdateStream
+
+__all__ = [
+    "CascadeMode",
+    "MeshGeom",
+    "NO_IDX",
+    "PCacheState",
+    "ReduceOp",
+    "TascadeConfig",
+    "TascadeEngine",
+    "UpdateStream",
+    "WritePolicy",
+    "tascade_scatter_reduce",
+]

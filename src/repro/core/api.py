@@ -1,0 +1,134 @@
+"""Public API of the Tascade engine.
+
+Two entry points:
+
+  * ``TascadeEngine`` (re-exported) — per-device building block used inside a
+    larger ``shard_map``-ed step (graph apps, GNN aggregation, embedding-grad
+    reduction all embed it in their own epoch loops).
+
+  * ``tascade_scatter_reduce`` — standalone convenience: takes global arrays,
+    shard_maps the whole drain loop, returns the reduced owner array. Used by
+    tests, benchmarks, and as the reference usage example.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.engine import EngineState, StepStats, TascadeEngine
+from repro.core.geom import MeshGeom
+from repro.core.types import (
+    NO_IDX,
+    CascadeMode,
+    ReduceOp,
+    TascadeConfig,
+    UpdateStream,
+    WritePolicy,
+)
+
+__all__ = [
+    "TascadeEngine",
+    "TascadeConfig",
+    "ReduceOp",
+    "WritePolicy",
+    "CascadeMode",
+    "MeshGeom",
+    "tascade_scatter_reduce",
+]
+
+
+def tascade_scatter_reduce(
+    dest: jnp.ndarray,
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    *,
+    op: ReduceOp | str,
+    cfg: TascadeConfig,
+    mesh,
+    max_sweeps: int = 64,
+    return_stats: bool = False,
+):
+    """Reduce sparse (idx, val) updates into ``dest`` through the Tascade tree.
+
+    dest : [Vpad] global reduction array, Vpad divisible by mesh size.
+    idx  : [D, U] global destination index per update (NO_IDX = padding),
+           row d = updates generated on device d (in mesh linear order).
+    val  : [D, U] update values.
+
+    Runs exchange sweeps (with final write-back flush) until no update is in
+    flight anywhere, then returns the reduced array (and summed stats).
+    """
+    op = ReduceOp(op)
+    ndev = mesh.devices.size
+    vpad = dest.shape[0]
+    d, u = idx.shape
+    assert d == ndev, f"updates rows {d} != mesh devices {ndev}"
+    assert vpad % ndev == 0, "dest must be padded to a multiple of mesh size"
+
+    geom = MeshGeom.from_mesh(mesh, vpad)
+    engine = TascadeEngine(cfg, geom, op, update_cap=u, dtype=dest.dtype)
+    axes = tuple(mesh.axis_names)
+
+    def shard_fn(dest_shard, idx_shard, val_shard):
+        dest_shard = dest_shard.reshape(-1)
+        new = UpdateStream(idx_shard.reshape(-1), val_shard.reshape(-1))
+        state = engine.init_state()
+
+        state, dest_shard, stats = engine.step(
+            state, dest_shard, new, drain=True, flush=True
+        )
+        g_inflight = jax.lax.psum(stats.inflight, axes)
+
+        def cond(carry):
+            _, _, g, sweep, _ = carry
+            return (g > 0) & (sweep < max_sweeps)
+
+        def body(carry):
+            state, dest_shard, _, sweep, acc = carry
+            state, dest_shard, s = engine.step(
+                state, dest_shard, None, drain=True, flush=True
+            )
+            g = jax.lax.psum(s.inflight, axes)
+            acc = jax.tree.map(lambda a, b: a + b, acc, _stats_vec(s))
+            return state, dest_shard, g, sweep + 1, acc
+
+        acc0 = _stats_vec(stats)
+        state, dest_shard, g_inflight, _, acc = jax.lax.while_loop(
+            cond, body, (state, dest_shard, g_inflight, jnp.int32(0), acc0)
+        )
+        # Surface correctness counters (psum -> identical on all devices).
+        overflow = jax.lax.psum(state.overflow, axes)
+        residual = g_inflight
+        gstats = jax.tree.map(lambda x: jax.lax.psum(x, axes), acc)
+        return dest_shard, overflow, residual, gstats
+
+    fn = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(P(axes), P(axes), P(axes)),
+        out_specs=(P(axes), P(), P(), _stats_vec_spec()),
+        check_vma=False,
+    )
+    dest_out, overflow, residual, gstats = jax.jit(fn)(dest, idx, val)
+    if return_stats:
+        return dest_out, {
+            "overflow": overflow,
+            "residual": residual,
+            "sent_total": gstats[0],
+            "hop_bytes": gstats[1],
+            "filtered": gstats[2],
+            "coalesced": gstats[3],
+        }
+    return dest_out
+
+
+def _stats_vec(s: StepStats):
+    return (jnp.sum(s.sent), s.hop_bytes, s.filtered, s.coalesced)
+
+
+def _stats_vec_spec():
+    return (P(), P(), P(), P())

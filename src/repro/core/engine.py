@@ -1,0 +1,322 @@
+"""The Tascade reduction-tree engine.
+
+Orchestrates the paper's cascaded, capacity-limited data-private reductions
+over a named TPU mesh. Each *level* of the tree is one mesh axis: pending
+updates are bucket-exchanged along the axis toward the owner's coordinate,
+then merged into that level's P-cache (region proxy, pod proxy, ...); the
+final exchange lands on the owner shard (the tree root).
+
+Modes (paper Fig. 4):
+  OWNER_DIRECT  -- Dalorex baseline: one joint exchange straight to the
+                   owner, no proxies, no coalescing.
+  PROXY_MERGE   -- merge at the region proxy, then straight to the owner.
+  FULL_CASCADE  -- merge at every level (always-cascade).
+  TASCADE       -- merge at every level with *selective* capture (a proxy
+                   claims a cache line only when it is free) — the paper's
+                   opportunistic capture, decided on line occupancy.
+
+Asynchrony (paper Fig. 7 / SV-D): ``step(..., drain=False)`` performs one
+exchange round per level and keeps residual updates pending in engine state,
+overlapping tree merging with subsequent compute epochs (continuous merge).
+``drain=True`` runs rounds until every level is empty — the synchronous
+barrier-merge ablation (and the way add-reductions deliver final sums).
+
+All functions here are *per-device* and must run inside ``shard_map``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exchange as ex
+from repro.core import pcache
+from repro.core.geom import MeshGeom
+from repro.core.types import (
+    NO_IDX,
+    CascadeMode,
+    PCacheState,
+    ReduceOp,
+    TascadeConfig,
+    UpdateStream,
+    WritePolicy,
+    make_pcache,
+    make_stream,
+)
+
+IDX_BYTES = 4
+VAL_BYTES = 4
+MSG_BYTES = IDX_BYTES + VAL_BYTES
+
+
+class LevelState(NamedTuple):
+    cache: PCacheState      # this level's proxy cache (empty for non-merging levels)
+    pending: UpdateStream   # updates awaiting exchange along this level's axis
+
+
+class EngineState(NamedTuple):
+    levels: tuple  # tuple[LevelState, ...]
+    overflow: jnp.ndarray  # dropped-update count; must remain 0 for correctness
+
+
+class StepStats(NamedTuple):
+    """Traffic accounting per engine step (drives paper Figs. 3-6)."""
+
+    sent: jnp.ndarray        # int32[L] messages exchanged per level
+    hop_bytes: jnp.ndarray   # f32 total bytes x mean torus hops (NoC traffic proxy)
+    inflight: jnp.ndarray    # int32 updates still pending across levels
+    filtered: jnp.ndarray    # int32 updates killed by P-cache filtering
+    coalesced: jnp.ndarray   # int32 updates removed by coalescing
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelSpec:
+    """Static per-level plan (resolved at trace time)."""
+
+    axes: tuple[str, ...]     # mesh axes exchanged jointly at this level
+    num_peers: int
+    bucket_cap: int
+    pending_cap: int
+    merge: bool               # P-cache merge after this level's exchange?
+    cache_lines: int
+    mean_hops: float          # torus traffic weight for this exchange
+
+
+class TascadeEngine:
+    """Static plan + functional state for one reduction array.
+
+    Construct once per (mesh geometry, reduction op, update capacity); the
+    returned object is trace-friendly (all decisions are python-static).
+    """
+
+    def __init__(
+        self,
+        cfg: TascadeConfig,
+        geom: MeshGeom,
+        op: ReduceOp,
+        update_cap: int,
+        dtype=jnp.float32,
+    ):
+        self.cfg = cfg
+        self.geom = geom
+        self.op = op
+        self.dtype = dtype
+        self.update_cap = update_cap
+
+        live_axes = [a for a in cfg.all_axes if geom.axis_size(a) > 1]
+        if not live_axes:
+            # single-device mesh: degenerate tree, root-apply only.
+            self.levels: tuple[LevelSpec, ...] = ()
+            return
+
+        mode = cfg.mode
+        if mode is CascadeMode.OWNER_DIRECT:
+            groups = [tuple(live_axes)]  # one joint hop to the owner
+            merge_flags = [False]
+        elif mode is CascadeMode.PROXY_MERGE:
+            region = [a for a in live_axes if a in cfg.region_axes] or live_axes[:1]
+            rest = [a for a in live_axes if a not in region]
+            groups = [tuple(region)] + ([tuple(rest)] if rest else [])
+            merge_flags = [True] + ([False] if rest else [])
+        else:  # FULL_CASCADE / TASCADE: one level per axis, merge at inner levels
+            groups = [(a,) for a in live_axes]
+            merge_flags = [True] * (len(groups) - 1) + [False]
+            if len(groups) == 1:
+                merge_flags = [False]
+
+        slack = cfg.exchange_slack
+        cap = max(int(update_cap * slack), 8)
+        specs = []
+        for gi, (axes, merge) in enumerate(zip(groups, merge_flags)):
+            peers = math.prod(geom.axis_size(a) for a in axes)
+            bucket = max(int(math.ceil(cap * slack / peers)), 1)
+            coverage = geom.padded_elements
+            for prior in groups[: gi + 1]:
+                for a in prior:
+                    coverage //= geom.axis_size(a)
+            lines = max(int(math.ceil(coverage / cfg.capacity_ratio)), 8) if merge else 0
+            hops = sum(geom.axis_size(a) / 4.0 for a in axes)
+            specs.append(
+                LevelSpec(
+                    axes=axes,
+                    num_peers=peers,
+                    bucket_cap=bucket,
+                    pending_cap=cap,
+                    merge=merge,
+                    cache_lines=lines,
+                    mean_hops=hops,
+                )
+            )
+            cap = max(int(peers * bucket), 8)  # next level's worst-case inflow
+        self.levels = tuple(specs)
+
+    # ------------------------------------------------------------------ state
+
+    def init_state(self) -> EngineState:
+        lvls = []
+        for spec in self.levels:
+            cache = (
+                make_pcache(spec.cache_lines, self.op, self.dtype)
+                if spec.merge
+                else make_pcache(1, self.op, self.dtype)
+            )
+            lvls.append(LevelState(cache=cache, pending=make_stream(spec.pending_cap, self.dtype)))
+        return EngineState(levels=tuple(lvls), overflow=jnp.int32(0))
+
+    # ------------------------------------------------------------- one round
+
+    def _peer_of(self, idx: jnp.ndarray, axes: Sequence[str]) -> jnp.ndarray:
+        """Joint peer index (row-major over ``axes``) of the owner of idx."""
+        peer = jnp.zeros_like(idx)
+        for a in axes:
+            peer = peer * self.geom.axis_size(a) + self.geom.owner_coord(idx, a)
+        return peer
+
+    def _level_round(self, spec: LevelSpec, lvl: LevelState):
+        """One exchange+merge round at a level. Returns (new level state,
+        emissions stream for the next level, sent count, stats)."""
+        peer = self._peer_of(lvl.pending.idx, spec.axes)
+        pk = ex.bucket_pack(lvl.pending, peer, spec.num_peers, spec.bucket_cap)
+        axis_name = spec.axes if len(spec.axes) > 1 else spec.axes[0]
+        recv = ex.all_to_all_stream(pk.packed, axis_name, spec.num_peers, spec.bucket_cap)
+        if spec.merge:
+            if self.cfg.use_pallas:
+                # Route the cache pass through the Pallas TPU kernel
+                # (paper-faithful sequential per-message semantics).
+                from repro.kernels.pcache.ops import pcache_merge as _pk
+
+                tags, vals, eidx, eval_ = _pk(
+                    recv.idx, recv.val, lvl.cache.tags, lvl.cache.vals,
+                    op=self.op.value, policy=self.cfg.policy.value,
+                    impl="pallas",
+                )
+                cache = PCacheState(tags, vals)
+                out = UpdateStream(eidx, eval_)
+                n_in = jnp.sum((recv.idx != NO_IDX).astype(jnp.int32))
+                n_out = jnp.sum((eidx != NO_IDX).astype(jnp.int32))
+                filtered = jnp.maximum(n_in - n_out, 0)
+                coalesced = jnp.int32(0)
+            else:
+                cache, out, mstats = pcache.merge(
+                    lvl.cache,
+                    recv,
+                    op=self.op,
+                    policy=self.cfg.policy,
+                    selective=self.cfg.mode is CascadeMode.TASCADE,
+                )
+                filtered, coalesced = mstats.n_filtered, mstats.n_coalesced
+        else:
+            cache, out = lvl.cache, recv
+            filtered = coalesced = jnp.int32(0)
+        new_lvl = LevelState(cache=cache, pending=pk.leftover)
+        return new_lvl, out, pk.n_sent, filtered, coalesced
+
+    # ------------------------------------------------------------------ step
+
+    def step(
+        self,
+        state: EngineState,
+        dest_shard: jnp.ndarray,
+        new: UpdateStream | None,
+        *,
+        drain: bool = False,
+        flush: bool = False,
+    ) -> tuple[EngineState, jnp.ndarray, StepStats]:
+        """Push ``new`` updates into the tree and advance it.
+
+        drain=False: one round per level (asynchronous/opportunistic mode).
+        drain=True : rounds until all pendings empty (synchronous merge).
+        flush=True : write-back caches are fully flushed forward (delivers
+                     coalesced sums to the root; used at barriers / stream end).
+        """
+        if not self.levels:
+            # degenerate single-device tree
+            if new is not None:
+                dest_shard = pcache.apply_to_owner(
+                    dest_shard, new, op=self.op, base=self.geom.my_base()
+                )
+            zero = jnp.int32(0)
+            return state, dest_shard, StepStats(
+                sent=jnp.zeros((1,), jnp.int32), hop_bytes=jnp.float32(0),
+                inflight=zero, filtered=zero, coalesced=zero)
+
+        levels = list(state.levels)
+        overflow = state.overflow
+        nlev = len(self.levels)
+        sent = [jnp.int32(0) for _ in range(nlev)]
+        filtered = jnp.int32(0)
+        coalesced = jnp.int32(0)
+
+        def _enqueue_at(li: int, stream: UpdateStream):
+            nonlocal overflow
+            lvl = levels[li]
+            pend, dropped = ex.enqueue(lvl.pending, stream)
+            levels[li] = LevelState(cache=lvl.cache, pending=pend)
+            overflow = overflow + dropped
+
+        if new is not None:
+            _enqueue_at(0, new)
+
+        rounds = self.cfg.max_exchange_rounds if drain else 1
+        for li, spec in enumerate(self.levels):
+            for _ in range(rounds):
+                lvl, out, n_sent, f, c = self._level_round(spec, levels[li])
+                levels[li] = lvl
+                sent[li] = sent[li] + n_sent
+                filtered = filtered + f
+                coalesced = coalesced + c
+                if li + 1 < nlev:
+                    _enqueue_at(li + 1, out)
+                else:
+                    # Root: entries leaving the last level are owner-local.
+                    dest_shard = pcache.apply_to_owner(
+                        dest_shard, out, op=self.op, base=self.geom.my_base()
+                    )
+            if flush and spec.merge and self.cfg.policy is WritePolicy.WRITE_BACK:
+                cache, flushed = pcache.flush(levels[li].cache, self.op)
+                levels[li] = LevelState(cache=cache, pending=levels[li].pending)
+                if li + 1 < nlev:
+                    _enqueue_at(li + 1, flushed)
+                else:
+                    dest_shard = pcache.apply_to_owner(
+                        dest_shard, flushed, op=self.op, base=self.geom.my_base()
+                    )
+
+        inflight = jnp.int32(0)
+        for lvl in levels:
+            inflight = inflight + jnp.sum((lvl.pending.idx != NO_IDX).astype(jnp.int32))
+
+        hop_bytes = jnp.float32(0)
+        for li, spec in enumerate(self.levels):
+            hop_bytes = hop_bytes + sent[li].astype(jnp.float32) * MSG_BYTES * spec.mean_hops
+
+        new_state = EngineState(levels=tuple(levels), overflow=overflow)
+        stats = StepStats(
+            sent=jnp.stack(sent),
+            hop_bytes=hop_bytes,
+            inflight=inflight,
+            filtered=filtered,
+            coalesced=coalesced,
+        )
+        return new_state, dest_shard, stats
+
+    # ------------------------------------------------------------ dense path
+
+    def dense_reduce(self, partial: jnp.ndarray) -> jnp.ndarray:
+        """Density-adaptive dense tree: hierarchical ``psum_scatter`` of a
+        per-device dense partial array down to owner shards.
+
+        This is the write-back proxy with capacity_ratio C=1 (a fully
+        materialized proxy array): each axis stage is one tree level. Used
+        when update density makes the sparse path wasteful (the congestion
+        side of selective cascading).
+        """
+        x = partial
+        # Scatter root->leaf in mesh layout order so blocks land on owners.
+        for a in self.geom.axis_names:
+            if self.geom.axis_size(a) > 1:
+                x = jax.lax.psum_scatter(x, a, scatter_dimension=0, tiled=True)
+        return x

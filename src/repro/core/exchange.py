@@ -1,0 +1,105 @@
+"""Bucketed sparse exchange: the SPMD stand-in for task-invocation routing.
+
+The paper routes each (index, value) update message through the NoC toward
+the owner tile, dimension by dimension. An SPMD program cannot route per
+message, so each tree level moves updates with a *bucketed all_to_all* along
+one mesh axis: every device packs its pending updates into fixed-size
+per-peer buckets keyed by the owner's coordinate on that axis, exchanges,
+and merges what it receives. Entries that do not fit a bucket stay pending
+(backpressure — the analogue of the paper's finite router/IQ queues).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import NO_IDX, UpdateStream
+
+
+class PackResult(NamedTuple):
+    packed: UpdateStream          # [P * K] bucketed: bucket j = slots [j*K, (j+1)*K)
+    leftover: UpdateStream        # same capacity as input, entries that overflowed
+    n_sent: jnp.ndarray           # int32 count packed
+    n_leftover: jnp.ndarray       # int32 count left pending
+
+
+def bucket_pack(stream: UpdateStream, peer: jnp.ndarray, num_peers: int,
+                bucket_cap: int) -> PackResult:
+    """Pack a sentinel-padded stream into ``num_peers`` buckets of
+    ``bucket_cap`` entries each; stable within a bucket.
+
+    ``peer`` gives the destination bucket per entry (ignored for padding).
+    """
+    u = stream.capacity
+    valid = stream.idx != NO_IDX
+    key = jnp.where(valid, peer, num_peers)  # invalids park in bin P
+    order = jnp.argsort(key)  # stable
+    key_s = key[order]
+    idx_s = stream.idx[order]
+    val_s = stream.val[order]
+    # rank within each bucket run
+    pos = jnp.arange(u, dtype=jnp.int32)
+    run_start = jnp.where(
+        key_s != jnp.concatenate([jnp.full((1,), -1, key_s.dtype), key_s[:-1]]),
+        pos, jnp.int32(-1))
+    run_start = jax.lax.associative_scan(jnp.maximum, run_start)
+    rank = pos - run_start
+    fits = (key_s < num_peers) & (rank < bucket_cap)
+    dest = jnp.where(fits, key_s * bucket_cap + rank, num_peers * bucket_cap)
+    packed_idx = jnp.full((num_peers * bucket_cap + 1,), NO_IDX, jnp.int32)
+    packed_val = jnp.zeros((num_peers * bucket_cap + 1,), stream.val.dtype)
+    packed_idx = packed_idx.at[dest].set(jnp.where(fits, idx_s, NO_IDX))
+    packed_val = packed_val.at[dest].set(jnp.where(fits, val_s, 0))
+    left_mask = (key_s < num_peers) & ~fits
+    leftover = UpdateStream(
+        jnp.where(left_mask, idx_s, NO_IDX),
+        jnp.where(left_mask, val_s, 0),
+    )
+    return PackResult(
+        packed=UpdateStream(packed_idx[:-1], packed_val[:-1]),
+        leftover=leftover,
+        n_sent=jnp.sum(fits.astype(jnp.int32)),
+        n_leftover=jnp.sum(left_mask.astype(jnp.int32)),
+    )
+
+
+def all_to_all_stream(packed: UpdateStream, axis_name: str, num_peers: int,
+                      bucket_cap: int) -> UpdateStream:
+    """Exchange packed buckets along one mesh axis. Returns the [P*K]
+    entries received (bucket j = what peer j sent me)."""
+    idx = packed.idx.reshape(num_peers, bucket_cap)
+    val = packed.val.reshape(num_peers, bucket_cap)
+    ridx = jax.lax.all_to_all(idx, axis_name, split_axis=0, concat_axis=0)
+    rval = jax.lax.all_to_all(val, axis_name, split_axis=0, concat_axis=0)
+    return UpdateStream(ridx.reshape(-1), rval.reshape(-1))
+
+
+def enqueue(pending: UpdateStream, new: UpdateStream) -> tuple[UpdateStream, jnp.ndarray]:
+    """Append ``new``'s valid entries into free slots of ``pending``.
+
+    Compacts both streams; returns the merged stream (capacity of
+    ``pending``) and the count of dropped entries (overflow — must be zero
+    for correctness; surfaced so callers/tests can assert or resize).
+    """
+    cap = pending.capacity
+    idx = jnp.concatenate([pending.idx, new.idx])
+    val = jnp.concatenate([pending.val, new.val])
+    valid = idx != NO_IDX
+    order = jnp.argsort(~valid)  # valid entries first, stable
+    idx_c = idx[order]
+    val_c = val[order]
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    dropped = jnp.maximum(n_valid - cap, 0)
+    return UpdateStream(idx_c[:cap], val_c[:cap]), dropped
+
+
+def compact(stream: UpdateStream, cap: int | None = None) -> UpdateStream:
+    """Move valid entries to the front (optionally shrinking capacity)."""
+    order = jnp.argsort(stream.idx == NO_IDX)
+    idx = stream.idx[order]
+    val = stream.val[order]
+    if cap is not None:
+        idx, val = idx[:cap], val[:cap]
+    return UpdateStream(idx, val)

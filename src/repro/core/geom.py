@@ -1,0 +1,86 @@
+"""Owner / proxy geometry over a named device mesh.
+
+The paper statically maps each element of the reduction array to an *owner
+tile*; proxies live at the same within-region coordinates. Here the mesh is a
+named N-D grid of TPU devices and elements are block-sharded in linear device
+order, so the owner of element ``v`` and its coordinate along every mesh axis
+are pure integer arithmetic — exactly like the paper's bit-mask proxy logic
+(Listing 1), which this module replaces.
+
+All methods are usable inside ``shard_map`` (they only touch static python
+ints and traced index arrays + ``lax.axis_index``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshGeom:
+    """Static geometry: mesh axes (row-major layout order) + element count."""
+
+    axis_names: tuple[str, ...]
+    axis_sizes: tuple[int, ...]
+    num_elements: int  # global size of the owner-sharded reduction array
+
+    @classmethod
+    def from_mesh(cls, mesh, num_elements: int) -> "MeshGeom":
+        return cls(
+            axis_names=tuple(mesh.axis_names),
+            axis_sizes=tuple(mesh.devices.shape),
+            num_elements=num_elements,
+        )
+
+    @property
+    def num_devices(self) -> int:
+        return math.prod(self.axis_sizes)
+
+    @property
+    def shard_size(self) -> int:
+        """Elements per device (block sharding, last shard may be padded)."""
+        return -(-self.num_elements // self.num_devices)
+
+    @property
+    def padded_elements(self) -> int:
+        return self.shard_size * self.num_devices
+
+    def axis_size(self, axis: str) -> int:
+        return self.axis_sizes[self.axis_names.index(axis)]
+
+    def axis_stride(self, axis: str) -> int:
+        """Stride of ``axis`` in the row-major linear device id."""
+        i = self.axis_names.index(axis)
+        return math.prod(self.axis_sizes[i + 1:])
+
+    # ---- traced helpers (shard_map only) ----
+
+    def owner_linear(self, idx: jnp.ndarray) -> jnp.ndarray:
+        """Linear device id owning global element index ``idx``."""
+        return idx // self.shard_size
+
+    def owner_coord(self, idx: jnp.ndarray, axis: str) -> jnp.ndarray:
+        """Owner's mesh coordinate along ``axis`` (paper: dest_x / dest_y)."""
+        lin = self.owner_linear(idx)
+        return (lin // self.axis_stride(axis)) % self.axis_size(axis)
+
+    def my_coord(self, axis: str) -> jnp.ndarray:
+        return jax.lax.axis_index(axis)
+
+    def my_linear(self) -> jnp.ndarray:
+        lin = jnp.int32(0)
+        for a in self.axis_names:
+            lin = lin + jax.lax.axis_index(a) * self.axis_stride(a)
+        return lin
+
+    def my_base(self) -> jnp.ndarray:
+        """Global index of the first element of my owner shard."""
+        return self.my_linear() * self.shard_size
+
+    def torus_hops(self, axis: str) -> float:
+        """Mean hop distance along a torus axis (for the traffic model)."""
+        p = self.axis_size(axis)
+        return p / 4.0 if p > 1 else 0.0

@@ -1,0 +1,284 @@
+"""Functional proxy-cache (P-cache) — the paper's SIII-B in JAX.
+
+The P-cache is a direct-mapped, capacity-limited accumulator standing in for a
+region's share of a data-private copy of the reduction array:
+
+  * a *miss* returns the reduction identity (paper: preconfigured default),
+  * WRITE_THROUGH propagates every improving write toward the owner and
+    filters the rest (min/max reductions),
+  * WRITE_BACK accumulates and propagates only on conflict eviction or an
+    explicit flush (add reductions: coalescing).
+
+Two implementations with identical *root semantics* (the multiset of
+{cache content + emitted updates} reduces to the same owner values):
+
+  ``merge_seq``  -- per-entry sequential loop, exactly the paper's
+                    one-message-per-cycle tile semantics. Used as the oracle
+                    and for paper-faithful filter-rate measurements.
+  ``merge``      -- TPU-native vectorized form: sort + segment-combine
+                    (within-batch coalescing), then a gather/compare/scatter
+                    cache pass. This is the hardware adaptation: the VPU wants
+                    vector ops, not a message loop. Eviction *order* differs
+                    from ``merge_seq``; reduction results do not.
+
+The vectorized cache pass is also available as a Pallas TPU kernel
+(``repro.kernels.pcache``); ``merge`` is its reference implementation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import (
+    NO_IDX,
+    PCacheState,
+    ReduceOp,
+    UpdateStream,
+    WritePolicy,
+)
+
+
+class MergeStats(NamedTuple):
+    """Traffic accounting for one merge (drives the paper's Figs. 3-6)."""
+
+    n_in: jnp.ndarray        # valid updates entering this tree level
+    n_out: jnp.ndarray       # updates emitted toward the next level
+    n_coalesced: jnp.ndarray  # removed by within-batch segment-combining
+    n_filtered: jnp.ndarray   # removed by the cache (non-improving writes)
+
+
+def _segment_coalesce(stream: UpdateStream, op: ReduceOp) -> tuple[UpdateStream, jnp.ndarray]:
+    """Sort by index and combine duplicates (within-batch coalescing).
+
+    Returns a stream of the same capacity with one entry per unique index
+    (sentinel-padded) and the count of unique valid entries.
+    """
+    u = stream.capacity
+    # Sort pairs by index; sentinel NO_IDX = -1 sorts first, so remap invalid
+    # entries to a large key to push them to the tail.
+    big = jnp.int32(2**30)
+    key = jnp.where(stream.idx == NO_IDX, big, stream.idx)
+    key_sorted, val_sorted = jax.lax.sort((key, stream.val), num_keys=1)
+    valid = key_sorted < big
+    # Segment boundaries: first occurrence of each index.
+    prev = jnp.concatenate([jnp.full((1,), -2, key_sorted.dtype), key_sorted[:-1]])
+    head = (key_sorted != prev) & valid
+    seg_id = jnp.cumsum(head.astype(jnp.int32)) - 1  # [-1 for leading invalids]
+    seg_id = jnp.where(valid, seg_id, u)  # park invalids in an overflow bin
+    if op is ReduceOp.ADD:
+        combined = jax.ops.segment_sum(val_sorted, seg_id, num_segments=u + 1)
+    elif op is ReduceOp.MIN:
+        combined = jax.ops.segment_min(val_sorted, seg_id, num_segments=u + 1)
+    else:
+        combined = jax.ops.segment_max(val_sorted, seg_id, num_segments=u + 1)
+    n_unique = jnp.sum(head.astype(jnp.int32))
+    # Scatter unique entries densely to the front of a fresh stream.
+    slots = jnp.where(head, seg_id, u)
+    out_idx = jnp.full((u + 1,), NO_IDX, dtype=jnp.int32).at[slots].set(
+        jnp.where(head, key_sorted, NO_IDX).astype(jnp.int32))[:u]
+    out_val = combined[:u].astype(stream.val.dtype)
+    out_val = jnp.where(out_idx == NO_IDX, jnp.zeros_like(out_val), out_val)
+    return UpdateStream(out_idx, out_val), n_unique
+
+
+def merge(
+    state: PCacheState,
+    stream: UpdateStream,
+    *,
+    op: ReduceOp,
+    policy: WritePolicy,
+    coalesce: bool = True,
+    selective: bool = False,
+) -> tuple[PCacheState, UpdateStream, MergeStats]:
+    """Vectorized P-cache merge. Emission stream capacity is 2*U (write-back
+    can emit both pass-through losers and evicted occupants).
+
+    ``selective`` is the SPMD analogue of the paper's selective cascading:
+    an update is *captured* by this proxy only when capture is free (its line
+    hits or is empty); updates whose line is occupied by another element pass
+    through toward the owner unmodified instead of churning evictions —
+    opportunistic capture based on local occupancy, decided per element
+    rather than per message.
+    """
+    n_raw = jnp.sum((stream.idx != NO_IDX).astype(jnp.int32))
+    if coalesce:
+        stream, n_unique = _segment_coalesce(stream, op)
+    else:
+        n_unique = n_raw
+    u, s = stream.capacity, state.size
+    idx, val = stream.idx, stream.val
+    valid = idx != NO_IDX
+    slot = jnp.where(valid, idx % s, 0)
+    cur_tag = state.tags[slot]
+    cur_val = state.vals[slot]
+    hit = valid & (cur_tag == idx)
+
+    # --- winner election among non-hit candidates contending for a slot ---
+    contend = valid & ~hit
+    if selective:
+        # opportunistic capture: only lines that are free may be claimed;
+        # occupied lines let the update pass through (no eviction churn).
+        contend = contend & (cur_tag == NO_IDX)
+    race_key = jnp.where(contend, slot, s)  # s = out-of-race bin
+    order = jnp.argsort(race_key, stable=True)
+    key_sorted = race_key[order]
+    prev = jnp.concatenate([jnp.full((1,), -1, key_sorted.dtype), key_sorted[:-1]])
+    first = (key_sorted != prev) & (key_sorted < s)
+    winner = jnp.zeros((u,), dtype=bool).at[order].set(first)
+    loser = valid & ~hit & ~winner
+
+    identity = jnp.asarray(op.identity, state.vals.dtype)
+
+    if policy is WritePolicy.WRITE_THROUGH:
+        # Hits: write+emit only improvements; the cache filters the rest.
+        improved = hit & op.improves(val, cur_val)
+        vals1 = _masked_set(state.vals, slot, op.combine(val, cur_val), improved)
+        tags1 = state.tags
+        # Winners: occupy the line (previous occupant's writes were already
+        # propagated when made, so it is dropped silently) and emit.
+        tags2 = _masked_set(tags1, slot, idx, winner)
+        vals2 = _masked_set(vals1, slot, val, winner)
+        emit_mask = improved | winner | loser
+        e_idx = jnp.where(emit_mask, idx, NO_IDX)
+        e_val = jnp.where(emit_mask, jnp.where(improved, op.combine(val, cur_val), val),
+                          jnp.zeros_like(val))
+        evict_idx = jnp.full((u,), NO_IDX, dtype=jnp.int32)
+        evict_val = jnp.zeros((u,), dtype=val.dtype)
+        new_state = PCacheState(tags2, vals2)
+        n_filtered = jnp.sum((hit & ~improved).astype(jnp.int32))
+    else:  # WRITE_BACK
+        # Hits coalesce into the line (no emission).
+        vals1 = _masked_set(state.vals, slot, op.combine(val, cur_val), hit)
+        # Winners evict the (possibly just-coalesced) occupant and take the line.
+        occ_tag = state.tags[slot]
+        occ_val = vals1[slot]
+        evict = winner & (occ_tag != NO_IDX)
+        evict_idx = jnp.where(evict, occ_tag, NO_IDX)
+        evict_val = jnp.where(evict, occ_val, jnp.zeros_like(occ_val))
+        tags2 = _masked_set(state.tags, slot, idx, winner)
+        vals2 = _masked_set(vals1, slot, val, winner)
+        # Losers pass through toward the next level unmodified.
+        e_idx = jnp.where(loser, idx, NO_IDX)
+        e_val = jnp.where(loser, val, jnp.zeros_like(val))
+        new_state = PCacheState(tags2, vals2)
+        n_filtered = jnp.zeros((), jnp.int32)
+
+    out = UpdateStream(
+        jnp.concatenate([e_idx, evict_idx]), jnp.concatenate([e_val, evict_val])
+    )
+    n_out = jnp.sum((out.idx != NO_IDX).astype(jnp.int32))
+    stats = MergeStats(
+        n_in=n_raw,
+        n_out=n_out,
+        n_coalesced=n_raw - n_unique,
+        n_filtered=n_filtered,
+    )
+    return new_state, out, stats
+
+
+def _masked_set(arr: jnp.ndarray, pos: jnp.ndarray, new: jnp.ndarray, mask: jnp.ndarray):
+    """``arr[pos] = new where mask`` with unique ``pos`` among masked entries.
+
+    Unmasked entries are routed to a discard slot: writing back the old value
+    in place would race (undefined scatter order) against a masked write to
+    the same position.
+    """
+    n = arr.shape[0]
+    p = jnp.where(mask, pos, n)
+    padded = jnp.concatenate([arr, arr[:1]])
+    padded = padded.at[p].set(jnp.where(mask, new, padded[n]))
+    return padded[:n]
+
+
+def flush(state: PCacheState, op: ReduceOp) -> tuple[PCacheState, UpdateStream]:
+    """Emit every valid line and reset the cache (paper: self-invalidation /
+    end-of-phase drain for write-back reductions)."""
+    out = UpdateStream(state.tags, jnp.where(state.tags != NO_IDX, state.vals, 0))
+    empty = PCacheState(
+        tags=jnp.full_like(state.tags, NO_IDX),
+        vals=jnp.full_like(state.vals, jnp.asarray(op.identity, state.vals.dtype)),
+    )
+    return empty, out
+
+
+def merge_seq(
+    state: PCacheState,
+    stream: UpdateStream,
+    *,
+    op: ReduceOp,
+    policy: WritePolicy,
+) -> tuple[PCacheState, UpdateStream, MergeStats]:
+    """Sequential per-message oracle: exactly the paper's tile semantics.
+
+    One update at a time against the evolving cache; used by unit tests for
+    root-equivalence and for paper-faithful filter rates.
+    """
+    u, s = stream.capacity, state.size
+    identity = jnp.asarray(op.identity, state.vals.dtype)
+
+    def body(i, carry):
+        tags, vals, e_idx, e_val, n_e, n_filt = carry
+        iid = stream.idx[i]
+        v = stream.val[i]
+        active = iid != NO_IDX
+        sl = jnp.where(active, iid % s, 0)
+        tag = tags[sl]
+        hit = active & (tag == iid)
+        empty = active & (tag == NO_IDX)
+        conflict = active & ~hit & ~empty
+
+        if policy is WritePolicy.WRITE_THROUGH:
+            cur = jnp.where(hit, vals[sl], identity)
+            imp = active & op.improves(v, cur)
+            newv = op.combine(v, cur)
+            tags = tags.at[sl].set(jnp.where(imp, iid, tag))
+            vals = vals.at[sl].set(jnp.where(imp, newv, vals[sl]))
+            e_idx = e_idx.at[n_e].set(jnp.where(imp, iid, e_idx[n_e]))
+            e_val = e_val.at[n_e].set(jnp.where(imp, newv, e_val[n_e]))
+            n_e = n_e + imp.astype(jnp.int32)
+            n_filt = n_filt + (active & ~imp).astype(jnp.int32)
+        else:  # WRITE_BACK
+            # hit: coalesce; empty: insert; conflict: evict occupant, insert.
+            newv = jnp.where(hit, op.combine(v, vals[sl]), v)
+            e_idx = e_idx.at[n_e].set(jnp.where(conflict, tag, e_idx[n_e]))
+            e_val = e_val.at[n_e].set(jnp.where(conflict, vals[sl], e_val[n_e]))
+            n_e = n_e + conflict.astype(jnp.int32)
+            tags = tags.at[sl].set(jnp.where(active, iid, tag))
+            vals = vals.at[sl].set(jnp.where(active, newv, vals[sl]))
+        return tags, vals, e_idx, e_val, n_e, n_filt
+
+    e_idx0 = jnp.full((u,), NO_IDX, dtype=jnp.int32)
+    e_val0 = jnp.zeros((u,), dtype=stream.val.dtype)
+    tags, vals, e_idx, e_val, n_e, n_filt = jax.lax.fori_loop(
+        0, u, body, (state.tags, state.vals, e_idx0, e_val0, jnp.int32(0), jnp.int32(0))
+    )
+    n_raw = jnp.sum((stream.idx != NO_IDX).astype(jnp.int32))
+    stats = MergeStats(n_in=n_raw, n_out=n_e, n_coalesced=jnp.int32(0), n_filtered=n_filt)
+    return PCacheState(tags, vals), UpdateStream(e_idx, e_val), stats
+
+
+def apply_to_owner(
+    dest: jnp.ndarray, stream: UpdateStream, *, op: ReduceOp, base: int
+) -> jnp.ndarray:
+    """Root of the reduction tree: fold a stream into the owner shard.
+
+    ``base`` is the global index of dest[0]; out-of-range entries are dropped
+    (they belong to other shards and must have been routed away already).
+    """
+    n = dest.shape[0]
+    local = stream.idx - base
+    ok = (stream.idx != NO_IDX) & (local >= 0) & (local < n)
+    pos = jnp.where(ok, local, n)  # overflow bin
+    padded = jnp.concatenate([dest, jnp.full((1,), op.identity, dest.dtype)])
+    if op is ReduceOp.ADD:
+        v = jnp.where(ok, stream.val, 0).astype(dest.dtype)
+        padded = padded.at[pos].add(v)
+    elif op is ReduceOp.MIN:
+        v = jnp.where(ok, stream.val, jnp.inf).astype(dest.dtype)
+        padded = padded.at[pos].min(v)
+    else:
+        v = jnp.where(ok, stream.val, -jnp.inf).astype(dest.dtype)
+        padded = padded.at[pos].max(v)
+    return padded[:n]

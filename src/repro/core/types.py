@@ -1,0 +1,164 @@
+"""Core datatypes for the Tascade engine.
+
+The engine implements the paper's three innovations on a TPU mesh:
+
+  * proxy regions  -> sub-meshes along configurable axis names,
+  * proxy caches   -> direct-mapped, capacity-limited accumulators (PCacheState),
+  * cascading      -> hierarchical per-axis sparse exchanges, merging through a
+                      P-cache at every tree level (the owner shard is the root).
+
+Everything is a pytree of fixed-shape arrays so the whole epoch jits/scans.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+
+# Sentinel index marking an inactive update slot / empty cache line.
+NO_IDX = jnp.int32(-1)
+
+
+class ReduceOp(str, enum.Enum):
+    """Associative + commutative reduction operators supported by the engine."""
+
+    MIN = "min"
+    MAX = "max"
+    ADD = "add"
+
+    @property
+    def identity(self) -> float:
+        if self is ReduceOp.MIN:
+            return float(jnp.inf)
+        if self is ReduceOp.MAX:
+            return float(-jnp.inf)
+        return 0.0
+
+    def combine(self, a, b):
+        if self is ReduceOp.MIN:
+            return jnp.minimum(a, b)
+        if self is ReduceOp.MAX:
+            return jnp.maximum(a, b)
+        return a + b
+
+    def improves(self, new, cur):
+        """Whether ``new`` changes the reduction result at a min/max cell.
+
+        Only meaningful for MIN/MAX (write-through filtering); ADD always
+        "improves" (every contribution matters).
+        """
+        if self is ReduceOp.MIN:
+            return new < cur
+        if self is ReduceOp.MAX:
+            return new > cur
+        return jnp.ones_like(new, dtype=bool)
+
+
+class WritePolicy(str, enum.Enum):
+    """P-cache write-propagation policy (paper SIII-B)."""
+
+    # Every improving write is immediately propagated toward the owner; the
+    # cache acts as a *filter* for non-improving updates (min/max reductions).
+    WRITE_THROUGH = "write_through"
+    # Writes accumulate in the cache; data moves toward the owner only on
+    # conflict eviction or an explicit flush (add reductions: *coalescing*).
+    WRITE_BACK = "write_back"
+
+
+class CascadeMode(str, enum.Enum):
+    """Which levels of the reduction tree are materialized (paper Fig. 4)."""
+
+    OWNER_DIRECT = "owner_direct"  # Dalorex baseline: all updates direct to owner.
+    PROXY_MERGE = "proxy_merge"    # region-level proxy, then direct to owner.
+    FULL_CASCADE = "full_cascade"  # merge at every level en route (always cascade).
+    TASCADE = "tascade"            # selective: cost model picks the levels.
+
+
+class PCacheState(NamedTuple):
+    """Direct-mapped proxy cache: ``slots`` lines of (tag, value).
+
+    tags: int32[S]  -- global element index held by the line, NO_IDX if empty.
+    vals: f32[S]    -- the partially-reduced value for that element.
+    """
+
+    tags: jnp.ndarray
+    vals: jnp.ndarray
+
+    @property
+    def size(self) -> int:
+        return self.tags.shape[0]
+
+
+class UpdateStream(NamedTuple):
+    """Fixed-capacity stream of sparse (index, value) reduction updates.
+
+    idx: int32[U] -- global destination indices, NO_IDX marks padding.
+    val: f32[U]   -- update values (reduction operands).
+    """
+
+    idx: jnp.ndarray
+    val: jnp.ndarray
+
+    @property
+    def capacity(self) -> int:
+        return self.idx.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class TascadeConfig:
+    """Software-visible configuration of the engine (paper SIII-C).
+
+    Mirrors the paper's five memory-mapped P-cache registers plus the region
+    geometry, adapted to named mesh axes:
+
+      region_axes    -- mesh axes forming a proxy region (paper: W x W subgrid).
+      cascade_axes   -- remaining axes, ordered leaf->root; one cascade tree
+                        level per axis (paper: proxies en route to the owner).
+      capacity_ratio -- C: |covered elements| / |P-cache lines| (paper Eq. 2).
+      policy         -- write-through (filter) or write-back (coalesce).
+      mode           -- which tree levels materialize (Fig. 4 ablation axis).
+      sync_merge     -- reproduce the Fig. 7 barrier-before-merge ablation.
+      exchange_slack -- per-peer bucket slack factor for the sparse exchange.
+      dense_threshold-- update density above which a level switches to the
+                        dense psum_scatter path (density-adaptive dispatch;
+                        the SPMD analogue of congestion-aware capture).
+    """
+
+    region_axes: Sequence[str] = ("model",)
+    cascade_axes: Sequence[str] = ("data",)
+    capacity_ratio: int = 16
+    policy: WritePolicy = WritePolicy.WRITE_THROUGH
+    mode: CascadeMode = CascadeMode.TASCADE
+    sync_merge: bool = False
+    exchange_slack: float = 2.0
+    dense_threshold: float = 0.25
+    max_exchange_rounds: int = 8
+    use_pallas: bool = False  # route P-cache merges through the Pallas kernel
+
+    def __post_init__(self):
+        object.__setattr__(self, "region_axes", tuple(self.region_axes))
+        object.__setattr__(self, "cascade_axes", tuple(self.cascade_axes))
+        object.__setattr__(self, "policy", WritePolicy(self.policy))
+        object.__setattr__(self, "mode", CascadeMode(self.mode))
+
+    @property
+    def all_axes(self) -> tuple[str, ...]:
+        """Leaf-to-root order of exchange axes."""
+        return tuple(self.region_axes) + tuple(self.cascade_axes)
+
+
+def make_pcache(num_lines: int, op: ReduceOp, dtype=jnp.float32) -> PCacheState:
+    """An empty P-cache: all lines invalid, values at the reduction identity."""
+    return PCacheState(
+        tags=jnp.full((num_lines,), NO_IDX, dtype=jnp.int32),
+        vals=jnp.full((num_lines,), op.identity, dtype=dtype),
+    )
+
+
+def make_stream(capacity: int, dtype=jnp.float32) -> UpdateStream:
+    return UpdateStream(
+        idx=jnp.full((capacity,), NO_IDX, dtype=jnp.int32),
+        val=jnp.zeros((capacity,), dtype=dtype),
+    )

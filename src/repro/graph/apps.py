@@ -1,0 +1,345 @@
+"""The paper's six applications on the Tascade engine (SIV Applications).
+
+BFS / SSSP / WCC  -- write-through min reductions, barrierless
+                     label-correcting epochs (async propagation).
+PageRank / SPMV   -- write-back add reductions, delivered per epoch
+                     (PageRank) or once (SPMV); optional dense tree path.
+Histogram         -- write-back add over power-law keys, single phase.
+
+Each distributed run returns (result, RunMetrics) and is validated against
+the numpy oracles in ``csr.py``. Everything executes inside one
+``shard_map``-ed jit per run; epochs are ``lax.while_loop`` iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (
+    CascadeMode,
+    MeshGeom,
+    ReduceOp,
+    TascadeConfig,
+    TascadeEngine,
+    WritePolicy,
+)
+from repro.core.types import NO_IDX, UpdateStream
+from repro.graph.partition import ShardedGraph
+
+
+class RunMetrics(NamedTuple):
+    epochs: jnp.ndarray       # int32
+    sent_total: jnp.ndarray   # int32 messages exchanged (all levels)
+    hop_bytes: jnp.ndarray    # f32 traffic proxy (bytes x torus hops)
+    filtered: jnp.ndarray     # int32 P-cache-filtered updates
+    coalesced: jnp.ndarray    # int32 coalesced updates
+    overflow: jnp.ndarray     # int32 MUST be 0
+    edges_relaxed: jnp.ndarray  # int64-ish f32 count of generated updates
+
+
+def _axes(mesh):
+    return tuple(mesh.axis_names)
+
+
+def _graph_specs(mesh):
+    a = _axes(mesh)
+    return (P(a, None), P(a, None), P(a, None))  # src_local, dst, weight
+
+
+def _wt_cfg(cfg: TascadeConfig) -> TascadeConfig:
+    return dataclasses.replace(cfg, policy=WritePolicy.WRITE_THROUGH)
+
+
+def _wb_cfg(cfg: TascadeConfig) -> TascadeConfig:
+    return dataclasses.replace(cfg, policy=WritePolicy.WRITE_BACK)
+
+
+# ----------------------------------------------------- label-correcting apps
+
+def _label_correcting(mesh, sg: ShardedGraph, cfg: TascadeConfig, *,
+                      init_fn, cand_fn, max_epochs: int):
+    """Shared driver for BFS / SSSP / WCC (write-through min)."""
+    cfg = _wt_cfg(cfg)
+    geom = MeshGeom.from_mesh(mesh, sg.vpad)
+    engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=sg.emax)
+    axes = _axes(mesh)
+    sync = cfg.sync_merge
+
+    def shard_fn(src_local, dst, weight):
+        src_local = src_local.reshape(-1)
+        dst = dst.reshape(-1)
+        weight = weight.reshape(-1)
+        base = geom.my_base()
+        dist0, frontier0 = init_fn(base, sg.shard)
+        state0 = engine.init_state()
+
+        def cond(c):
+            _, _, _, active, epoch, _ = c
+            return (active > 0) & (epoch < max_epochs)
+
+        def body(c):
+            state, dist, frontier, _, epoch, acc = c
+            in_f = frontier[jnp.clip(src_local, 0, sg.shard - 1)]
+            ok = (src_local >= 0) & in_f
+            cand = cand_fn(dist, src_local, weight)
+            new = UpdateStream(
+                jnp.where(ok, dst, NO_IDX),
+                jnp.where(ok, cand, 0.0),
+            )
+            old = dist
+            state, dist, stats = engine.step(
+                state, dist, new, drain=sync, flush=False
+            )
+            frontier = dist < old
+            n_relaxed = jnp.sum(ok.astype(jnp.int32))
+            active = jax.lax.psum(
+                jnp.sum(frontier.astype(jnp.int32)) + stats.inflight, axes
+            )
+            acc = (
+                acc[0] + jnp.sum(stats.sent),
+                acc[1] + stats.hop_bytes,
+                acc[2] + stats.filtered,
+                acc[3] + stats.coalesced,
+                acc[4] + n_relaxed.astype(jnp.float32),
+            )
+            return state, dist, frontier, active, epoch + 1, acc
+
+        acc0 = (jnp.int32(0), jnp.float32(0), jnp.int32(0), jnp.int32(0),
+                jnp.float32(0))
+        state, dist, _, active, epoch, acc = jax.lax.while_loop(
+            cond, body, (state0, dist0, frontier0, jnp.int32(1), jnp.int32(0), acc0)
+        )
+        m = RunMetrics(
+            epochs=epoch,
+            sent_total=jax.lax.psum(acc[0], axes),
+            hop_bytes=jax.lax.psum(acc[1], axes),
+            filtered=jax.lax.psum(acc[2], axes),
+            coalesced=jax.lax.psum(acc[3], axes),
+            overflow=jax.lax.psum(state.overflow, axes),
+            edges_relaxed=jax.lax.psum(acc[4], axes),
+        )
+        return dist, m
+
+    a = _axes(mesh)
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=_graph_specs(mesh),
+        out_specs=(P(a), RunMetrics(*([P()] * 7))),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def run_sssp(mesh, sg: ShardedGraph, root: int, cfg: TascadeConfig,
+             max_epochs: int = 256):
+    def init(base, shard):
+        local = jnp.arange(shard) + base
+        dist = jnp.where(local == root, 0.0, jnp.inf).astype(jnp.float32)
+        frontier = local == root
+        return dist, frontier
+
+    def cand(dist, src_local, w):
+        return dist[jnp.clip(src_local, 0, dist.shape[0] - 1)] + w
+
+    fn = _label_correcting(mesh, sg, cfg, init_fn=init, cand_fn=cand,
+                           max_epochs=max_epochs)
+    return fn(jnp.asarray(sg.src_local), jnp.asarray(sg.dst),
+              jnp.asarray(sg.weight))
+
+
+def run_bfs(mesh, sg: ShardedGraph, root: int, cfg: TascadeConfig,
+            max_epochs: int = 256):
+    sg_unit = dataclasses.replace(sg, weight=np.ones_like(sg.weight))
+    return run_sssp(mesh, sg_unit, root, cfg, max_epochs)
+
+
+def run_wcc(mesh, sg: ShardedGraph, cfg: TascadeConfig, max_epochs: int = 256):
+    """Graph must be symmetrized (edges both ways)."""
+    def init(base, shard):
+        local = (jnp.arange(shard) + base).astype(jnp.float32)
+        # padding vertices (>= true V) keep their own id and never propagate
+        return local, jnp.ones((shard,), bool)
+
+    def cand(dist, src_local, w):
+        del w
+        return dist[jnp.clip(src_local, 0, dist.shape[0] - 1)]
+
+    fn = _label_correcting(mesh, sg, cfg, init_fn=init, cand_fn=cand,
+                           max_epochs=max_epochs)
+    return fn(jnp.asarray(sg.src_local), jnp.asarray(sg.dst),
+              jnp.asarray(sg.weight))
+
+
+# --------------------------------------------------------------- add apps
+
+def run_pagerank(mesh, sg: ShardedGraph, cfg: TascadeConfig, iters: int = 20,
+                 d: float = 0.85, dense: bool = False):
+    """Power iteration; per-iteration sums delivered via the write-back tree
+    (sparse path) or the dense psum_scatter tree (density-adaptive path)."""
+    cfg = _wb_cfg(cfg)
+    geom = MeshGeom.from_mesh(mesh, sg.vpad)
+    engine = TascadeEngine(cfg, geom, ReduceOp.ADD, update_cap=sg.emax)
+    axes = _axes(mesh)
+    n = sg.num_vertices
+
+    def shard_fn(src_local, dst, weight, deg):
+        src_local = src_local.reshape(-1)
+        dst = dst.reshape(-1)
+        deg = deg.reshape(-1)
+        ok = src_local >= 0
+        srcc = jnp.clip(src_local, 0, sg.shard - 1)
+
+        def body(carry, _):
+            rank, acc = carry
+            contrib = rank[srcc] / jnp.maximum(deg[srcc], 1.0)
+            if dense:
+                part = jax.ops.segment_sum(
+                    jnp.where(ok, contrib, 0.0),
+                    jnp.where(ok, dst, sg.vpad),
+                    num_segments=sg.vpad + 1,
+                )[:-1]
+                sums = engine.dense_reduce(part)
+                stats_sent = jnp.int32(0)
+                # dense-tree traffic: per axis stage, each device moves
+                # (P-1)/P of its current block over ~P/4 mean torus hops.
+                size = float(sg.vpad)
+                hb = 0.0
+                for ax in geom.axis_names:
+                    pa = geom.axis_size(ax)
+                    if pa > 1:
+                        hb += size * 4.0 * (pa - 1) / pa * (pa / 4.0)
+                        size /= pa
+                hopb = jnp.float32(hb)
+                filtered = coalesced = jnp.int32(0)
+                overflow = jnp.int32(0)
+            else:
+                new = UpdateStream(jnp.where(ok, dst, NO_IDX),
+                                  jnp.where(ok, contrib, 0.0))
+                state = engine.init_state()
+                sums = jnp.zeros((sg.shard,), jnp.float32)
+                state, sums, stats = engine.step(state, sums, new,
+                                                 drain=True, flush=True)
+                g0 = jax.lax.psum(stats.inflight, axes)
+
+                def cond2(c):
+                    return c[3] > 0
+
+                def body2(c):
+                    st, sm, _, _ = c
+                    st, sm, s2 = engine.step(st, sm, None, drain=True, flush=True)
+                    return st, sm, s2, jax.lax.psum(s2.inflight, axes)
+
+                state, sums, stats, _ = jax.lax.while_loop(
+                    cond2, body2, (state, sums, stats, g0))
+                stats_sent = jnp.sum(stats.sent)
+                hopb = stats.hop_bytes
+                filtered, coalesced = stats.filtered, stats.coalesced
+                overflow = state.overflow
+            rank = (1.0 - d) / n + d * sums
+            acc = (acc[0] + stats_sent, acc[1] + hopb, acc[2] + filtered,
+                   acc[3] + coalesced, acc[4] + overflow)
+            return (rank, acc), None
+
+        rank0 = jnp.full((sg.shard,), 1.0 / n, jnp.float32)
+        acc0 = (jnp.int32(0), jnp.float32(0), jnp.int32(0), jnp.int32(0),
+                jnp.int32(0))
+        (rank, acc), _ = jax.lax.scan(body, (rank0, acc0), None, length=iters)
+        m = RunMetrics(
+            epochs=jnp.int32(iters),
+            sent_total=jax.lax.psum(acc[0], axes),
+            hop_bytes=jax.lax.psum(acc[1], axes),
+            filtered=jax.lax.psum(acc[2], axes),
+            coalesced=jax.lax.psum(acc[3], axes),
+            overflow=jax.lax.psum(acc[4], axes),
+            edges_relaxed=jnp.float32(0),
+        )
+        return rank, m
+
+    a = _axes(mesh)
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=_graph_specs(mesh) + (P(a, None),),
+        out_specs=(P(a), RunMetrics(*([P()] * 7))),
+        check_vma=False,
+    )
+    return jax.jit(fn)(jnp.asarray(sg.src_local), jnp.asarray(sg.dst),
+                       jnp.asarray(sg.weight), jnp.asarray(sg.deg))
+
+
+def run_spmv(mesh, sg: ShardedGraph, x: np.ndarray, cfg: TascadeConfig):
+    """y[dst] += w * x[src]; x owner-sharded, one write-back delivery."""
+    cfg = _wb_cfg(cfg)
+    geom = MeshGeom.from_mesh(mesh, sg.vpad)
+    engine = TascadeEngine(cfg, geom, ReduceOp.ADD, update_cap=sg.emax)
+    axes = _axes(mesh)
+    xpad = np.zeros((sg.vpad,), np.float32)
+    xpad[: x.shape[0]] = x
+
+    def shard_fn(src_local, dst, weight, x_shard):
+        src_local = src_local.reshape(-1)
+        dst = dst.reshape(-1)
+        weight = weight.reshape(-1)
+        x_shard = x_shard.reshape(-1)
+        ok = src_local >= 0
+        contrib = weight * x_shard[jnp.clip(src_local, 0, sg.shard - 1)]
+        new = UpdateStream(jnp.where(ok, dst, NO_IDX),
+                           jnp.where(ok, contrib, 0.0))
+        y = jnp.zeros((sg.shard,), jnp.float32)
+        state = engine.init_state()
+        state, y, stats = engine.step(state, y, new, drain=True, flush=True)
+        g0 = jax.lax.psum(stats.inflight, axes)
+
+        def cond(c):
+            return c[3] > 0
+
+        def body(c):
+            st, yy, _, _ = c
+            st, yy, s2 = engine.step(st, yy, None, drain=True, flush=True)
+            return st, yy, s2, jax.lax.psum(s2.inflight, axes)
+
+        state, y, stats, _ = jax.lax.while_loop(cond, body, (state, y, stats, g0))
+        m = RunMetrics(
+            epochs=jnp.int32(1),
+            sent_total=jax.lax.psum(jnp.sum(stats.sent), axes),
+            hop_bytes=jax.lax.psum(stats.hop_bytes, axes),
+            filtered=jax.lax.psum(stats.filtered, axes),
+            coalesced=jax.lax.psum(stats.coalesced, axes),
+            overflow=jax.lax.psum(state.overflow, axes),
+            edges_relaxed=jax.lax.psum(jnp.sum(ok.astype(jnp.float32)), axes),
+        )
+        return y, m
+
+    a = _axes(mesh)
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=_graph_specs(mesh) + (P(a),),
+        out_specs=(P(a), RunMetrics(*([P()] * 7))),
+        check_vma=False,
+    )
+    return jax.jit(fn)(jnp.asarray(sg.src_local), jnp.asarray(sg.dst),
+                       jnp.asarray(sg.weight), jnp.asarray(xpad))
+
+
+def run_histogram(mesh, keys: np.ndarray, num_bins: int, cfg: TascadeConfig):
+    """keys: [D, chunk] per-device key stream; counts reduced via the
+    coalescing write-back tree (the paper's Histogram)."""
+    cfg = _wb_cfg(cfg)
+    ndev, chunk = keys.shape
+    bpad = -(-num_bins // ndev) * ndev
+
+    # Reuse the engine through the standalone API (one delivery).
+    from repro.core import tascade_scatter_reduce
+
+    dest = jnp.zeros((bpad,), jnp.float32)
+    out, stats = tascade_scatter_reduce(
+        dest, jnp.asarray(keys, jnp.int32),
+        jnp.ones_like(jnp.asarray(keys), jnp.float32),
+        op=ReduceOp.ADD, cfg=cfg, mesh=mesh, return_stats=True,
+    )
+    return out[:num_bins], stats

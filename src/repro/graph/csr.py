@@ -1,0 +1,141 @@
+"""CSR graph container + numpy reference algorithms (the app oracles).
+
+The paper stores graphs in CSR with no partitioning or preprocessing
+(SIV Datasets); we do the same. Vertices are block-sharded across devices in
+index order; each device holds the out-edges of its vertex shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    """indptr: [V+1], indices: [E] (dst per edge), weights: [E] (optional)."""
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    weights: np.ndarray | None = None
+
+    @property
+    def num_vertices(self) -> int:
+        return self.indptr.shape[0] - 1
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def src_per_edge(self) -> np.ndarray:
+        """Source vertex of each edge (CSR row expansion)."""
+        return np.repeat(np.arange(self.num_vertices), np.diff(self.indptr))
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    @classmethod
+    def from_edges(cls, src, dst, num_vertices: int, weights=None,
+                   dedup: bool = True, symmetrize: bool = False) -> "CSRGraph":
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        if weights is None:
+            w = None
+        else:
+            w = np.asarray(weights, np.float32)
+        if symmetrize:
+            src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+            if w is not None:
+                w = np.concatenate([w, w])
+        if dedup:
+            key = src * num_vertices + dst
+            _, first = np.unique(key, return_index=True)
+            src, dst = src[first], dst[first]
+            if w is not None:
+                w = w[first]
+        order = np.lexsort((dst, src))
+        src, dst = src[order], dst[order]
+        if w is not None:
+            w = w[order]
+        indptr = np.zeros(num_vertices + 1, np.int64)
+        np.add.at(indptr, src + 1, 1)
+        indptr = np.cumsum(indptr)
+        return cls(indptr=indptr, indices=dst.astype(np.int64), weights=w)
+
+
+# ------------------------------------------------------------------ oracles
+
+def bfs_reference(g: CSRGraph, root: int) -> np.ndarray:
+    """BFS levels; unreachable = +inf."""
+    dist = np.full(g.num_vertices, np.inf)
+    dist[root] = 0
+    frontier = [root]
+    level = 0
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for e in range(g.indptr[u], g.indptr[u + 1]):
+                v = g.indices[e]
+                if dist[v] == np.inf:
+                    dist[v] = level + 1
+                    nxt.append(v)
+        frontier = nxt
+        level += 1
+    return dist
+
+
+def sssp_reference(g: CSRGraph, root: int) -> np.ndarray:
+    """Bellman-Ford (weights must be non-negative for app parity)."""
+    w = g.weights if g.weights is not None else np.ones(g.num_edges, np.float32)
+    src = g.src_per_edge
+    dist = np.full(g.num_vertices, np.inf)
+    dist[root] = 0
+    for _ in range(g.num_vertices):
+        cand = dist[src] + w
+        new = dist.copy()
+        np.minimum.at(new, g.indices, cand)
+        if np.allclose(new, dist, equal_nan=True):
+            break
+        dist = new
+    return dist
+
+
+def wcc_reference(g: CSRGraph) -> np.ndarray:
+    """Weakly-connected components by min-label propagation."""
+    label = np.arange(g.num_vertices, dtype=np.float64)
+    src = g.src_per_edge
+    dst = g.indices
+    while True:
+        new = label.copy()
+        np.minimum.at(new, dst, label[src])
+        np.minimum.at(new, src, label[dst])
+        if (new == label).all():
+            return label
+        label = new
+
+
+def pagerank_reference(g: CSRGraph, iters: int = 20, d: float = 0.85) -> np.ndarray:
+    n = g.num_vertices
+    deg = np.maximum(g.degrees, 1)
+    src = g.src_per_edge
+    rank = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        contrib = rank[src] / deg[src]
+        acc = np.zeros(n)
+        np.add.at(acc, g.indices, contrib)
+        rank = (1 - d) / n + d * acc
+    return rank
+
+
+def spmv_reference(g: CSRGraph, x: np.ndarray) -> np.ndarray:
+    """y[dst] += w * x[src] — the graph as a sparse matrix A[dst, src]."""
+    w = g.weights if g.weights is not None else np.ones(g.num_edges, np.float32)
+    y = np.zeros(g.num_vertices)
+    np.add.at(y, g.indices, w * x[g.src_per_edge])
+    return y
+
+
+def histogram_reference(keys: np.ndarray, num_bins: int) -> np.ndarray:
+    return np.bincount(keys, minlength=num_bins).astype(np.float64)

@@ -1,0 +1,48 @@
+"""Graph500 Kronecker (R-MAT) generator [Leskovec et al., JMLR'10].
+
+Same family as the paper's RMAT-22/25/26 datasets (scale = log2 #vertices,
+edge factor 16, a/b/c/d = 0.57/0.19/0.19/0.05). Pure numpy, deterministic,
+vectorized bit-recursive sampling; optional permutation to kill locality as
+Graph500 requires.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+A, B, C = 0.57, 0.19, 0.19  # D = 1 - A - B - C
+
+
+def rmat_edges(scale: int, edge_factor: int = 16, seed: int = 1,
+               permute: bool = True) -> tuple[np.ndarray, np.ndarray]:
+    n = 1 << scale
+    m = n * edge_factor
+    rng = np.random.default_rng(seed)
+    src = np.zeros(m, np.int64)
+    dst = np.zeros(m, np.int64)
+    ab, abc = A + B, A + B + C
+    for bit in range(scale):
+        r = rng.random(m)
+        go_right = (r >= A) & (r < ab)          # column bit set
+        go_down = (r >= ab) & (r < abc)         # row bit set
+        go_diag = r >= abc                      # both
+        src |= ((go_down | go_diag).astype(np.int64)) << bit
+        dst |= ((go_right | go_diag).astype(np.int64)) << bit
+    if permute:
+        perm = rng.permutation(n)
+        src, dst = perm[src], perm[dst]
+    return src, dst
+
+
+def rmat_graph(scale: int, edge_factor: int = 16, seed: int = 1,
+               weighted: bool = False, symmetrize: bool = False,
+               dedup: bool = True) -> CSRGraph:
+    src, dst = rmat_edges(scale, edge_factor, seed)
+    n = 1 << scale
+    w = None
+    if weighted:
+        rng = np.random.default_rng(seed + 1)
+        w = rng.uniform(1.0, 8.0, size=src.shape[0]).astype(np.float32)
+    return CSRGraph.from_edges(src, dst, n, weights=w, dedup=dedup,
+                               symmetrize=symmetrize)

@@ -1,0 +1,56 @@
+"""Fanout neighbor sampler (GraphSAGE-style) for `minibatch_lg` GNN shapes.
+
+Produces fixed-shape (padded) message-flow blocks suitable for jit:
+layer l block = (src_ids[B_l * f_l], dst_pos[B_l * f_l]) with -1 padding,
+where dst_pos indexes the *next* layer's node list. Sampling is plain
+numpy on the host (the data-pipeline side of the system).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass
+class SampledBlock:
+    """One message-passing layer over sampled edges (fixed shapes)."""
+
+    nodes_in: np.ndarray   # int64 [N_in]  global ids feeding this layer (-1 pad)
+    nodes_out: np.ndarray  # int64 [N_out] global ids produced by this layer
+    src_pos: np.ndarray    # int32 [E] position into nodes_in (-1 pad)
+    dst_pos: np.ndarray    # int32 [E] position into nodes_out (-1 pad)
+
+
+def sample_blocks(g: CSRGraph, seeds: np.ndarray, fanouts: list[int],
+                  rng: np.random.Generator) -> list[SampledBlock]:
+    """Sample k-hop blocks, innermost (seeds) last — apply in list order."""
+    blocks: list[SampledBlock] = []
+    frontier = np.asarray(seeds, np.int64)
+    for f in fanouts:
+        n_out = frontier.shape[0]
+        e_cap = n_out * f
+        src = np.full(e_cap, -1, np.int64)
+        dst_pos = np.full(e_cap, -1, np.int32)
+        for i, u in enumerate(frontier):
+            if u < 0:
+                continue
+            lo, hi = g.indptr[u], g.indptr[u + 1]
+            deg = hi - lo
+            if deg == 0:
+                continue
+            take = min(f, deg)
+            choice = rng.choice(deg, size=take, replace=False) + lo
+            src[i * f: i * f + take] = g.indices[choice]
+            dst_pos[i * f: i * f + take] = i
+        uniq = np.unique(src[src >= 0])
+        nodes_in = np.concatenate([frontier, uniq[~np.isin(uniq, frontier)]])
+        remap = {int(v): k for k, v in enumerate(nodes_in)}
+        src_pos = np.array([remap[int(s)] if s >= 0 else -1 for s in src],
+                           np.int32)
+        blocks.append(SampledBlock(nodes_in=nodes_in, nodes_out=frontier,
+                                   src_pos=src_pos, dst_pos=dst_pos))
+        frontier = nodes_in
+    return blocks[::-1]

@@ -1,0 +1,19 @@
+"""Jitted dispatcher for embedding-bag."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def embedding_bag(table, idx, *, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        interp = jax.default_backend() != "tpu"
+        return embedding_bag_pallas(table, idx, interpret=interp)
+    return embedding_bag_ref(table, idx)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for embedding-bag: gather + masked in-bag sum."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PAD_IDX = -1
+
+
+def embedding_bag_ref(table, idx):
+    v, d = table.shape
+    mask = (idx != PAD_IDX)[..., None]
+    rows = jnp.take(table, jnp.where(idx == PAD_IDX, 0, idx), axis=0)
+    return jnp.sum(jnp.where(mask, rows, 0), axis=1)

@@ -1,0 +1,25 @@
+"""Jitted dispatcher for the P-cache merge.
+
+On TPU the Pallas kernel runs compiled; elsewhere it runs in interpret mode
+(tests) or falls back to the jnp oracle (fast CPU path for the engine).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.pcache.pcache import pcache_merge_pallas
+from repro.kernels.pcache.ref import pcache_merge_ref
+
+
+@functools.partial(jax.jit, static_argnames=("op", "policy", "impl", "block"))
+def pcache_merge(idx, val, tags, vals, *, op: str, policy: str,
+                 impl: str = "auto", block: int = 1024):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        interp = jax.default_backend() != "tpu"
+        return pcache_merge_pallas(idx, val, tags, vals, op=op, policy=policy,
+                                   block=block, interpret=interp)
+    return pcache_merge_ref(idx, val, tags, vals, op=op, policy=policy)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel for the P-cache merge (paper SIII-B, Listing-1 path).
+
+The cache (tags+vals) is pinned in VMEM for the whole call — this is the
+hardware adaptation of the paper's SRAM-resident direct-mapped cache. The
+update stream is tiled through VMEM in blocks; within a block entries are
+processed in order, exactly the paper's one-message-per-cycle tile semantics
+(hit-combine / miss-insert / conflict-evict, write-through or write-back).
+
+Emissions are *positional*: entry j's emission (its own improving write for
+write-through; the evicted occupant for write-back) lands in output slot j,
+NO_IDX if none. This keeps the kernel deterministic and trivially
+parallel-checkable against the pure-jnp oracle in ``ref.py``.
+
+VMEM budget: cache of S lines = S*(4+4) bytes + one stream block; with the
+default S<=64K lines and block 1024 this is well under 1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+NO_IDX = -1
+
+
+def _kernel(idx_ref, val_ref, tags_in_ref, vals_in_ref,
+            tags_ref, vals_ref, eidx_ref, eval_ref,
+            *, op: str, policy: str, identity: float):
+    del tags_in_ref, vals_in_ref  # aliased into tags_ref / vals_ref
+    bu = idx_ref.shape[0]
+    s = tags_ref.shape[0]
+
+    def body(j, _):
+        iid = idx_ref[j]
+        v = val_ref[j]
+        active = iid != NO_IDX
+        sl = jax.lax.rem(jnp.where(active, iid, 0), s)
+        tag = tags_ref[sl]
+        cur = vals_ref[sl]
+        hit = active & (tag == iid)
+
+        if policy == "write_through":
+            eff = jnp.where(hit, cur, jnp.asarray(identity, cur.dtype))
+            if op == "min":
+                imp = active & (v < eff)
+                newv = jnp.minimum(v, eff)
+            else:  # max
+                imp = active & (v > eff)
+                newv = jnp.maximum(v, eff)
+            tags_ref[sl] = jnp.where(imp, iid, tag)
+            vals_ref[sl] = jnp.where(imp, newv, cur)
+            eidx_ref[j] = jnp.where(imp, iid, NO_IDX)
+            eval_ref[j] = jnp.where(imp, newv, jnp.zeros_like(v))
+        else:  # write_back (add)
+            empty = tag == NO_IDX
+            conflict = active & ~hit & ~empty
+            newv = jnp.where(hit, cur + v, v)
+            eidx_ref[j] = jnp.where(conflict, tag, NO_IDX)
+            eval_ref[j] = jnp.where(conflict, cur, jnp.zeros_like(cur))
+            tags_ref[sl] = jnp.where(active, iid, tag)
+            vals_ref[sl] = jnp.where(active, newv, cur)
+        return 0
+
+    jax.lax.fori_loop(0, bu, body, 0)
+
+
+def pcache_merge_pallas(
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    tags: jnp.ndarray,
+    vals: jnp.ndarray,
+    *,
+    op: str,
+    policy: str,
+    block: int = 1024,
+    interpret: bool = True,
+):
+    """Merge a sentinel-padded update stream into a direct-mapped cache.
+
+    Returns (tags, vals, emit_idx, emit_val); emissions positional per entry.
+    """
+    assert op in ("min", "max", "add") and policy in ("write_through", "write_back")
+    u = idx.shape[0]
+    s = tags.shape[0]
+    if u % block:
+        pad = block - u % block
+        idx = jnp.concatenate([idx, jnp.full((pad,), NO_IDX, idx.dtype)])
+        val = jnp.concatenate([val, jnp.zeros((pad,), val.dtype)])
+    up = idx.shape[0]
+    identity = {"min": jnp.inf, "max": -jnp.inf, "add": 0.0}[op]
+
+    kern = functools.partial(_kernel, op=op, policy=policy, identity=identity)
+    out_shapes = (
+        jax.ShapeDtypeStruct((s,), tags.dtype),
+        jax.ShapeDtypeStruct((s,), vals.dtype),
+        jax.ShapeDtypeStruct((up,), idx.dtype),
+        jax.ShapeDtypeStruct((up,), val.dtype),
+    )
+    new_tags, new_vals, eidx, eval_ = pl.pallas_call(
+        kern,
+        out_shape=out_shapes,
+        grid=(up // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),   # stream idx tile
+            pl.BlockSpec((block,), lambda i: (i,)),   # stream val tile
+            pl.BlockSpec((s,), lambda i: (0,)),       # cache tags (VMEM-resident)
+            pl.BlockSpec((s,), lambda i: (0,)),       # cache vals (VMEM-resident)
+        ],
+        out_specs=(
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(idx, val, tags, vals)
+    return new_tags, new_vals, eidx[:u], eval_[:u]

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the P-cache Pallas kernel: identical per-entry
+sequential semantics and positional emissions, via ``lax.scan``."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NO_IDX = -1
+
+
+def pcache_merge_ref(idx, val, tags, vals, *, op: str, policy: str):
+    identity = {"min": jnp.inf, "max": -jnp.inf, "add": 0.0}[op]
+    s = tags.shape[0]
+
+    def step(carry, xs):
+        tags, vals = carry
+        iid, v = xs
+        active = iid != NO_IDX
+        sl = jnp.where(active, iid, 0) % s
+        tag = tags[sl]
+        cur = vals[sl]
+        hit = active & (tag == iid)
+        if policy == "write_through":
+            eff = jnp.where(hit, cur, jnp.asarray(identity, cur.dtype))
+            if op == "min":
+                imp = active & (v < eff)
+                newv = jnp.minimum(v, eff)
+            else:
+                imp = active & (v > eff)
+                newv = jnp.maximum(v, eff)
+            tags = tags.at[sl].set(jnp.where(imp, iid, tag))
+            vals = vals.at[sl].set(jnp.where(imp, newv, cur))
+            e = (jnp.where(imp, iid, NO_IDX), jnp.where(imp, newv, jnp.zeros_like(v)))
+        else:
+            empty = tag == NO_IDX
+            conflict = active & ~hit & ~empty
+            newv = jnp.where(hit, cur + v, v)
+            e = (jnp.where(conflict, tag, NO_IDX),
+                 jnp.where(conflict, cur, jnp.zeros_like(cur)))
+            tags = tags.at[sl].set(jnp.where(active, iid, tag))
+            vals = vals.at[sl].set(jnp.where(active, newv, cur))
+        return (tags, vals), e
+
+    (tags, vals), (eidx, eval_) = jax.lax.scan(step, (tags, vals), (idx, val))
+    return tags, vals, eidx, eval_

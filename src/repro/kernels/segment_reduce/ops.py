@@ -1,0 +1,21 @@
+"""Jitted dispatcher for segment reduction."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.segment_reduce.ref import segment_reduce_ref
+from repro.kernels.segment_reduce.segment_reduce import segment_reduce_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "op", "impl", "block"))
+def segment_reduce(data, seg, num_segments: int, *, op: str = "add",
+                   impl: str = "auto", block: int = 512):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        interp = jax.default_backend() != "tpu"
+        return segment_reduce_pallas(data, seg, num_segments, op=op,
+                                     block=block, interpret=interp)
+    return segment_reduce_ref(data, seg, num_segments, op=op)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for segment reduction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_reduce_ref(data, seg, num_segments: int, *, op: str = "add"):
+    seg = jnp.minimum(seg, num_segments)
+    if op == "add":
+        out = jax.ops.segment_sum(data, seg, num_segments=num_segments + 1)
+    elif op == "min":
+        out = jax.ops.segment_min(data, seg, num_segments=num_segments + 1)
+    else:
+        out = jax.ops.segment_max(data, seg, num_segments=num_segments + 1)
+    out = out[:num_segments]
+    if op == "min":
+        out = jnp.where(jnp.isposinf(out), jnp.inf, out)
+    elif op == "max":
+        out = jnp.where(jnp.isneginf(out), -jnp.inf, out)
+    return out

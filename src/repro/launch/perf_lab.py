@@ -1,0 +1,101 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Hypothesis -> change -> re-lower -> re-analyse loop for the three
+# hillclimb cells (SPerf). Each variant toggles one structural change via
+# env flag, recompiles the cell, and records the three roofline terms.
+#
+#   python -m repro.launch.perf_lab --cell grok --out experiments/perf_grok.json
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+
+CELLS = {
+    "grok": ("grok-1-314b", "train_4k", True, [
+        ("baseline", {}),
+        ("explicit-fsdp-gather", {"REPRO_LM_GATHER": "1"}),
+        ("moe-activation-pinning", {"REPRO_MOE_CONSTRAIN": "1",
+                                    "REPRO_DP_AXES": "pod,data"}),
+        ("fsdp-on-layer-dim", {"REPRO_FSDP_DIM": "leading"}),
+        ("pin+layer-fsdp", {"REPRO_MOE_CONSTRAIN": "1",
+                            "REPRO_DP_AXES": "pod,data",
+                            "REPRO_FSDP_DIM": "leading"}),
+    ]),
+    "qwen32-decode": ("qwen1.5-32b", "decode_32k", False, [
+        ("baseline", {}),
+        ("tp-only-weights", {"REPRO_DECODE_NO_FSDP": "1"}),
+        ("seq-sharded-cache", {"REPRO_DECODE_CACHE_SEQ": "1"}),
+        ("seq-cache+tp-only", {"REPRO_DECODE_CACHE_SEQ": "1",
+                               "REPRO_DECODE_NO_FSDP": "1"}),
+    ]),
+    "graphcast-ogb": ("graphcast", "ogb_products", False, [
+        ("baseline", {}),
+        ("owner-pinned-aggregate", {"REPRO_GNN_CONSTRAIN": "1",
+                                    "REPRO_GNN_AXES": "data,model"}),
+        ("bf16-gathers", {"REPRO_GNN_BF16": "1"}),
+        ("bf16-processor", {"REPRO_GNN_BF16": "full"}),
+        ("pin+bf16-processor", {"REPRO_GNN_CONSTRAIN": "1",
+                                "REPRO_GNN_AXES": "data,model",
+                                "REPRO_GNN_BF16": "full"}),
+    ]),
+}
+
+
+def run_variant(arch, shape, multi_pod, name, env):
+    # env toggles are read at trace time -> set before building the cell
+    for k in ("REPRO_LM_GATHER", "REPRO_MOE_CONSTRAIN", "REPRO_DP_AXES",
+              "REPRO_FSDP_DIM", "REPRO_DECODE_NO_FSDP",
+              "REPRO_DECODE_CACHE_SEQ",
+              "REPRO_GNN_CONSTRAIN", "REPRO_GNN_AXES", "REPRO_GNN_BF16"):
+        os.environ.pop(k, None)
+    os.environ.update(env)
+
+    from repro.configs.registry import get_bundle
+    from repro.launch import dryrun as DR
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    bundle = get_bundle(arch)
+    t0 = time.time()
+    rec = DR.run_cell(bundle, shape, mesh,
+                      "multi_pod" if multi_pod else "single_pod",
+                      verbose=False)
+    rec["variant"] = name
+    rec["env"] = env
+    rec["wall_s"] = round(time.time() - t0, 1)
+    print(f"{name:28s} compute={rec['compute_s']*1e3:9.1f}ms "
+          f"memory={rec['memory_s']*1e3:9.1f}ms "
+          f"collective={rec['collective_s']*1e3:9.1f}ms "
+          f"dom={rec['dominant']:10s} frac={rec['roofline_frac']:.4f}",
+          flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    arch, shape, multi_pod, variants = CELLS[args.cell]
+    print(f"== perf lab: {arch}/{shape} "
+          f"[{'multi_pod' if multi_pod else 'single_pod'}]")
+    records = []
+    for name, env in variants:
+        try:
+            records.append(run_variant(arch, shape, multi_pod, name, env))
+        except Exception as e:  # noqa: BLE001
+            print(f"{name:28s} FAILED: {e!r}"[:200], flush=True)
+            records.append({"variant": name, "env": env, "error": repr(e)})
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

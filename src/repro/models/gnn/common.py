@@ -1,0 +1,91 @@
+"""Shared GNN machinery: batched edge-list graphs, MLPs, segment aggregation.
+
+JAX has no sparse message passing; the primitive here is scatter/segment
+reduction over an edge index (kernel_taxonomy SGNN), backed by
+``repro.kernels.segment_reduce``. Edge lists are sentinel-padded (-1) so all
+shapes are static. Batched small graphs (molecule shape) are merged into one
+big graph with a ``graph_id`` readout vector.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GraphBatch(NamedTuple):
+    """Static-shape graph batch. Optional fields may be None."""
+
+    node_feat: jnp.ndarray          # [N, F]
+    edge_src: jnp.ndarray           # [E] int32, -1 pad
+    edge_dst: jnp.ndarray           # [E] int32, -1 pad
+    edge_feat: jnp.ndarray | None   # [E, Fe]
+    coords: jnp.ndarray | None      # [N, 3] (geometric models)
+    graph_id: jnp.ndarray | None    # [N] int32 graph membership (readout)
+    num_graphs: int = 1
+
+
+def mlp_init(key, sizes, dtype=jnp.float32):
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [
+        {
+            "w": (jax.random.normal(k, (a, b), jnp.float32) * a ** -0.5).astype(dtype),
+            "b": jnp.zeros((b,), dtype),
+        }
+        for k, a, b in zip(ks, sizes[:-1], sizes[1:])
+    ]
+
+
+def mlp_apply(params, x, act=jax.nn.silu, final_act=False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def layer_norm(x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def scatter_sum(values, index, num_segments: int):
+    """Segment-sum with -1 padding discarded. values: [E, D], index: [E]."""
+    import os
+
+    idx = jnp.where(index < 0, num_segments, index)
+    if os.environ.get("REPRO_GNN_BF16") and values.dtype == jnp.float32:
+        # perf experiment: half-width cross-shard aggregation messages
+        values = values.astype(jnp.bfloat16)
+    out = jax.ops.segment_sum(values, idx, num_segments=num_segments + 1)[:-1]
+    if os.environ.get("REPRO_GNN_CONSTRAIN") and out.ndim == 2:
+        # perf experiment: pin the aggregate to owner sharding so the
+        # cross-shard reduction lowers to reduce-scatter, not all-reduce
+        from jax.sharding import PartitionSpec as P
+        axes = tuple(os.environ.get("REPRO_GNN_AXES", "data,model").split(","))
+        out = jax.lax.with_sharding_constraint(out, P(axes, None))
+    return out.astype(jnp.float32) if out.dtype == jnp.bfloat16 else out
+
+
+def scatter_mean(values, index, num_segments: int):
+    s = scatter_sum(values, index, num_segments)
+    ones = jnp.where(index < 0, 0.0, 1.0)[:, None]
+    cnt = scatter_sum(ones, index, num_segments)
+    return s / jnp.maximum(cnt, 1.0)
+
+
+def scatter_minmax(values, index, num_segments: int, *, op: str):
+    big = jnp.asarray(jnp.inf if op == "min" else -jnp.inf, values.dtype)
+    idx = jnp.where(index < 0, num_segments, index)
+    if op == "min":
+        out = jax.ops.segment_min(values, idx, num_segments=num_segments + 1)[:-1]
+    else:
+        out = jax.ops.segment_max(values, idx, num_segments=num_segments + 1)[:-1]
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def degrees(edge_dst, num_nodes: int):
+    ones = jnp.where(edge_dst < 0, 0.0, 1.0)[:, None]
+    return scatter_sum(ones, edge_dst, num_nodes)[:, 0]

@@ -1,0 +1,157 @@
+"""DimeNet: directional message passing [arXiv:2003.03123].
+
+n_blocks=6, d_hidden=128, n_bilinear=8, n_spherical=7, n_radial=6.
+
+Messages live on *directed edges* m_ji; interaction blocks mix messages over
+*triplets* (k->j->i) using a radial Bessel basis of the distance and an
+angular basis of the angle at j. The triplet index lists (edge_kj, edge_ji)
+are built host-side by the data pipeline (``build_triplets``).
+
+Basis note (documented deviation): the radial basis uses the sin(n pi d/c)/d
+Bessel form of the paper; the angular part uses Legendre polynomials
+P_l(cos theta) (the m=0 spherical-harmonic direction) with the same radial
+envelope, omitting the spherical-Bessel zero tables — structurally identical
+compute (n_spherical x n_radial channels, bilinear contraction).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import mlp_apply, mlp_init, scatter_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    n_species: int = 16
+    d_out: int = 1
+
+
+def radial_bessel(d, n_radial: int, cutoff: float):
+    """[E] -> [E, n_radial]: sqrt(2/c) sin(n pi d / c) / d."""
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    dd = jnp.maximum(d[:, None], 1e-6)
+    return jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * dd / cutoff) / dd
+
+
+def legendre(cos_t, n_spherical: int):
+    """[T] -> [T, n_spherical]: P_0..P_{L-1}(cos theta) via recursion."""
+    p0 = jnp.ones_like(cos_t)
+    p1 = cos_t
+    out = [p0, p1]
+    for l in range(1, n_spherical - 1):
+        out.append(((2 * l + 1) * cos_t * out[-1] - l * out[-2]) / (l + 1))
+    return jnp.stack(out[:n_spherical], axis=-1)
+
+
+def init_params(cfg: DimeNetConfig, key):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_blocks + 4)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k = jax.random.split(ks[i], 6)
+        blocks.append({
+            "w_msg": mlp_init(k[0], [d, d]),
+            "w_rbf": mlp_init(k[1], [cfg.n_radial, d]),
+            "w_sbf": mlp_init(k[2], [cfg.n_spherical * cfg.n_radial,
+                                     cfg.n_bilinear]),
+            "bilinear": (jax.random.normal(
+                k[3], (cfg.n_bilinear, d, d), jnp.float32) / d ** 0.5),
+            "upd": mlp_init(k[4], [d, d, d]),
+            "out_edge": mlp_init(k[5], [d, d]),
+        })
+    return {
+        "species_embed": jax.random.normal(ks[-3], (cfg.n_species, d)) * 0.1,
+        "edge_embed": mlp_init(ks[-2], [2 * d + cfg.n_radial, d]),
+        "blocks": blocks,
+        "out": mlp_init(ks[-1], [d, d, cfg.d_out]),
+    }
+
+
+def forward(params, species, coords, edge_src, edge_dst, tri_kj, tri_ji,
+            graph_id, num_graphs: int, cfg: DimeNetConfig):
+    """species: [N] int32; coords: [N, 3]; edges k->j directed; triplets
+    reference edge ids: tri_kj[t] feeds tri_ji[t]. -1 pads everywhere."""
+    n = species.shape[0]
+    e = edge_src.shape[0]
+    pad_e = (edge_src < 0)[:, None]
+    src = jnp.where(edge_src < 0, 0, edge_src)
+    dst = jnp.where(edge_dst < 0, 0, edge_dst)
+
+    vec = coords[dst] - coords[src]
+    dist = jnp.sqrt(jnp.sum(vec * vec, axis=-1) + 1e-12)
+    rbf = radial_bessel(dist, cfg.n_radial, cfg.cutoff)
+
+    h = params["species_embed"][jnp.clip(species, 0, cfg.n_species - 1)]
+    m = mlp_apply(params["edge_embed"],
+                  jnp.concatenate([h[src], h[dst], rbf], axis=-1),
+                  final_act=True)
+    m = jnp.where(pad_e, 0.0, m)
+
+    # triplet geometry: angle at j between edges (k->j) and (j->i)
+    tkj = jnp.where(tri_kj < 0, 0, tri_kj)
+    tji = jnp.where(tri_ji < 0, 0, tri_ji)
+    pad_t = (tri_kj < 0)[:, None]
+    v1 = -vec[tkj]  # j -> k
+    v2 = vec[tji]   # j -> i
+    cos_t = jnp.sum(v1 * v2, axis=-1) / (
+        jnp.linalg.norm(v1, axis=-1) * jnp.linalg.norm(v2, axis=-1) + 1e-9)
+    sbf = (legendre(jnp.clip(cos_t, -1, 1), cfg.n_spherical)[:, :, None]
+           * radial_bessel(dist[tkj], cfg.n_radial, cfg.cutoff)[:, None, :])
+    sbf = sbf.reshape(-1, cfg.n_spherical * cfg.n_radial)
+
+    out_acc = jnp.zeros((n, cfg.d_hidden))
+    for blk in params["blocks"]:
+        m_lin = mlp_apply(blk["w_msg"], m)
+        sb = mlp_apply(blk["w_sbf"], sbf)                       # [T, n_bilinear]
+        mk = m_lin[tkj]                                         # [T, d]
+        inter = jnp.einsum("tb,bij,ti->tj", sb, blk["bilinear"], mk)
+        inter = jnp.where(pad_t, 0.0, inter)
+        agg = scatter_sum(inter, tri_ji, e)                     # [E, d]
+        m = m + mlp_apply(blk["upd"],
+                          mlp_apply(blk["w_rbf"], rbf) * (m_lin + agg),
+                          final_act=True)
+        m = jnp.where(pad_e, 0.0, m)
+        out_acc = out_acc + scatter_sum(mlp_apply(blk["out_edge"], m),
+                                        edge_dst, n)
+
+    pooled = scatter_sum(out_acc, graph_id, num_graphs)
+    return mlp_apply(params["out"], pooled)
+
+
+def build_triplets(edge_src, edge_dst, max_triplets: int | None = None):
+    """Host-side (numpy) triplet builder: pairs (k->j, j->i), k != i."""
+    import numpy as np
+
+    edge_src = np.asarray(edge_src)
+    edge_dst = np.asarray(edge_dst)
+    by_src: dict[int, list[int]] = {}
+    for eid, s in enumerate(edge_src):
+        if s >= 0:
+            by_src.setdefault(int(s), []).append(eid)
+    kj, ji = [], []
+    for eid, (s, d) in enumerate(zip(edge_src, edge_dst)):
+        if s < 0:
+            continue
+        for e2 in by_src.get(int(d), []):
+            if edge_dst[e2] != s:  # exclude backtracking k == i
+                kj.append(eid)
+                ji.append(e2)
+    kj = np.asarray(kj, np.int32)
+    ji = np.asarray(ji, np.int32)
+    if max_triplets is not None:
+        kj, ji = kj[:max_triplets], ji[:max_triplets]
+        pad = max_triplets - kj.shape[0]
+        if pad > 0:
+            kj = np.concatenate([kj, np.full(pad, -1, np.int32)])
+            ji = np.concatenate([ji, np.full(pad, -1, np.int32)])
+    return kj, ji

@@ -1,0 +1,74 @@
+"""E(n)-Equivariant GNN [arXiv:2102.09844]. n_layers=4, d_hidden=64.
+
+m_ij  = phi_e(h_i, h_j, ||x_i - x_j||^2)
+x_i' = x_i + C * sum_j (x_i - x_j) phi_x(m_ij)
+h_i' = phi_h(h_i, sum_j m_ij)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import (
+    GraphBatch,
+    mlp_apply,
+    mlp_init,
+    scatter_mean,
+    scatter_sum,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str = "egnn"
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_out: int = 1
+
+
+def init_params(cfg: EGNNConfig, key, d_in: int):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2, k3 = jax.random.split(ks[i], 3)
+        layers.append({
+            "phi_e": mlp_init(k1, [2 * d + 1, d, d]),
+            "phi_x": mlp_init(k2, [d, d, 1]),
+            "phi_h": mlp_init(k3, [2 * d, d, d]),
+        })
+    return {
+        "embed": mlp_init(ks[-2], [d_in, d]),
+        "layers": layers,
+        "readout": mlp_init(ks[-1], [d, d, cfg.d_out]),
+    }
+
+
+def forward(params, g: GraphBatch, cfg: EGNNConfig):
+    n = g.node_feat.shape[0]
+    pad = (g.edge_src < 0)[:, None]
+    src = jnp.where(g.edge_src < 0, 0, g.edge_src)
+    dst = jnp.where(g.edge_dst < 0, 0, g.edge_dst)
+
+    h = mlp_apply(params["embed"], g.node_feat)
+    x = g.coords
+    for lyr in params["layers"]:
+        diff = x[dst] - x[src]                       # [E, 3]
+        dist2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+        m = mlp_apply(lyr["phi_e"],
+                      jnp.concatenate([h[dst], h[src], dist2], axis=-1),
+                      final_act=True)
+        m = jnp.where(pad, 0.0, m)
+        w = mlp_apply(lyr["phi_x"], m)               # [E, 1]
+        x = x + scatter_mean(diff * jnp.where(pad, 0.0, w), g.edge_dst, n)
+        agg = scatter_sum(m, g.edge_dst, n)
+        h = h + mlp_apply(lyr["phi_h"], jnp.concatenate([h, agg], axis=-1))
+    return h, x
+
+
+def graph_energy(params, g: GraphBatch, cfg: EGNNConfig):
+    h, _ = forward(params, g, cfg)
+    pooled = scatter_sum(h, g.graph_id, g.num_graphs)
+    return mlp_apply(params["readout"], pooled)

@@ -1,0 +1,93 @@
+"""GraphCast-style encoder-processor-decoder mesh GNN [arXiv:2212.12794].
+
+Backbone only, per the assignment: the icosahedral multi-mesh topology
+(mesh_refinement=6) is supplied as an edge list input; variables enter as
+precomputed per-node channels (n_vars=227). Processor = 16 interaction-
+network layers (edge MLP + sum aggregation + node MLP, residual), d=512.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import (
+    GraphBatch,
+    layer_norm,
+    mlp_apply,
+    mlp_init,
+    scatter_sum,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCastConfig:
+    name: str = "graphcast"
+    n_layers: int = 16
+    d_hidden: int = 512
+    n_vars: int = 227
+    mesh_refinement: int = 6  # informational: defines the mesh-node count
+
+
+def init_params(cfg: GraphCastConfig, key, d_in: int | None = None,
+                d_edge_in: int = 4):
+    d = cfg.d_hidden
+    d_in = cfg.n_vars if d_in is None else d_in
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(ks[i])
+        layers.append({
+            "edge": mlp_init(k1, [3 * d, d, d]),
+            "node": mlp_init(k2, [2 * d, d, d]),
+        })
+    return {
+        "enc_node": mlp_init(ks[-3], [d_in, d, d]),
+        "enc_edge": mlp_init(ks[-2], [d_edge_in, d, d]),
+        "layers": layers,
+        "dec": mlp_init(ks[-1], [d, d, cfg.n_vars]),
+    }
+
+
+def forward(params, g: GraphBatch, cfg: GraphCastConfig):
+    import os
+
+    n = g.node_feat.shape[0]
+    pad = (g.edge_src < 0)[:, None]
+    src = jnp.where(g.edge_src < 0, 0, g.edge_src)
+    dst = jnp.where(g.edge_dst < 0, 0, g.edge_dst)
+    # perf experiment: REPRO_GNN_BF16=1 -> bf16 gathers only;
+    # REPRO_GNN_BF16=full -> whole processor in bf16 (fwd AND bwd halve
+    # the cross-shard gather/scatter collectives; norms stay f32)
+    bf16_mode = os.environ.get("REPRO_GNN_BF16", "")
+    full_bf16 = bf16_mode == "full"
+    ct = jnp.bfloat16 if full_bf16 else jnp.float32
+
+    h = mlp_apply(params["enc_node"], g.node_feat, final_act=False)
+    e = mlp_apply(params["enc_edge"], g.edge_feat, final_act=False)
+    h, e = h.astype(ct), e.astype(ct)
+
+    def layer(carry, lyr):
+        h, e = carry
+        lp = jax.tree.map(lambda w: w.astype(ct), lyr) if full_bf16 else lyr
+        hg = h.astype(jnp.bfloat16) if bf16_mode else h
+        e_in = jnp.concatenate(
+            [e.astype(hg.dtype), hg[src], hg[dst]], axis=-1).astype(ct)
+        e = e + jnp.where(pad, 0.0, mlp_apply(lp["edge"], e_in)).astype(ct)
+        e = layer_norm(e).astype(ct)
+        agg = scatter_sum(jnp.where(pad, 0.0, e), g.edge_dst, n).astype(ct)
+        h = h + mlp_apply(lp["node"],
+                          jnp.concatenate([h, agg], axis=-1)).astype(ct)
+        h = layer_norm(h).astype(ct)
+        return (h, e), None
+
+    if cfg.n_layers > 2:
+        # identical-shape layers: stack + scan (compile-time friendly)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params["layers"])
+        (h, e), _ = jax.lax.scan(layer, (h, e), stacked)
+    else:
+        # shallow variants stay unrolled (scan-body cost calibration)
+        for lyr in params["layers"]:
+            (h, e), _ = layer((h, e), lyr)
+    return mlp_apply(params["dec"], h, final_act=False)

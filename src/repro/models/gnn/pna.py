@@ -1,0 +1,83 @@
+"""Principal Neighbourhood Aggregation [arXiv:2004.05718].
+
+4 aggregators (mean, max, min, std) x 3 degree scalers (identity,
+amplification, attenuation) -> 12-way concat -> linear tower, residual.
+Config: n_layers=4, d_hidden=75.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import (
+    GraphBatch,
+    degrees,
+    layer_norm,
+    mlp_apply,
+    mlp_init,
+    scatter_mean,
+    scatter_minmax,
+    scatter_sum,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_out: int = 1
+    delta: float = 2.5  # mean log-degree of the training set (paper eq. 5)
+
+
+def init_params(cfg: PNAConfig, key, d_in: int):
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(ks[i])
+        layers.append({
+            "msg": mlp_init(k1, [2 * cfg.d_hidden, cfg.d_hidden]),
+            "upd": mlp_init(k2, [13 * cfg.d_hidden, cfg.d_hidden, cfg.d_hidden]),
+        })
+    return {
+        "embed": mlp_init(ks[-2], [d_in, cfg.d_hidden]),
+        "layers": layers,
+        "readout": mlp_init(ks[-1], [cfg.d_hidden, cfg.d_hidden, cfg.d_out]),
+    }
+
+
+def forward(params, g: GraphBatch, cfg: PNAConfig):
+    n = g.node_feat.shape[0]
+    h = mlp_apply(params["embed"], g.node_feat)
+    deg = degrees(g.edge_dst, n)
+    log_deg = jnp.log1p(deg)[:, None]
+    amp = log_deg / cfg.delta
+    att = cfg.delta / jnp.maximum(log_deg, 1e-6)
+
+    src = jnp.where(g.edge_src < 0, 0, g.edge_src)
+    for lyr in params["layers"]:
+        m = mlp_apply(lyr["msg"], jnp.concatenate(
+            [h[src], h[jnp.where(g.edge_dst < 0, 0, g.edge_dst)]], axis=-1))
+        m = jnp.where((g.edge_src < 0)[:, None], 0.0, m)
+        agg_mean = scatter_mean(m, g.edge_dst, n)
+        agg_max = scatter_minmax(m, g.edge_dst, n, op="max")
+        agg_min = scatter_minmax(m, g.edge_dst, n, op="min")
+        sq_mean = scatter_mean(m * m, g.edge_dst, n)
+        agg_std = jnp.sqrt(jnp.maximum(sq_mean - agg_mean ** 2, 0.0) + 1e-8)
+        aggs = jnp.concatenate([agg_mean, agg_max, agg_min, agg_std], axis=-1)
+        scaled = jnp.concatenate([aggs, aggs * amp, aggs * att], axis=-1)
+        h = h + mlp_apply(lyr["upd"], jnp.concatenate([h, scaled], axis=-1))
+        h = layer_norm(h)
+    return h
+
+
+def node_logits(params, g: GraphBatch, cfg: PNAConfig):
+    return mlp_apply(params["readout"], forward(params, g, cfg))
+
+
+def graph_readout(params, g: GraphBatch, cfg: PNAConfig):
+    h = forward(params, g, cfg)
+    pooled = scatter_mean(h, g.graph_id, g.num_graphs)
+    return mlp_apply(params["readout"], pooled)

@@ -1,0 +1,78 @@
+"""LM architecture configuration (pure-data; one instance per assigned arch)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0          # shared (always-on) experts, DeepSeekMoE-style
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    moe: MoEConfig | None = None
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # execution knobs
+    q_block: int = 1024          # blockwise-attention tile sizes
+    kv_block: int = 1024
+    loss_chunk: int = 512        # CE computed over seq chunks (vocab memory)
+    remat: bool = True           # rematerialize each layer in the backward
+    scan_layers: bool = True     # lax.scan over layers (False: unrolled —
+                                 # exact cost_analysis FLOPs, slower compile)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def param_count(self) -> int:
+        """Total parameters (for MODEL_FLOPS = 6*N*D accounting)."""
+        d, hd = self.d_model, self.hd
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+            + (self.n_heads * hd) * d
+        if self.qkv_bias:
+            attn += (self.n_heads + 2 * self.n_kv_heads) * hd
+        if self.moe is None:
+            mlp = 3 * d * self.d_ff
+        else:
+            m = self.moe
+            mlp = (m.num_experts + m.num_shared) * 3 * d * m.d_ff_expert \
+                + d * m.num_experts  # router
+        block = attn + mlp + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * block + emb + d
+
+    @property
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only routed-to experts count)."""
+        if self.moe is None:
+            return self.param_count
+        d = self.d_model
+        m = self.moe
+        full_moe = self.n_layers * (m.num_experts + m.num_shared) * 3 * d * m.d_ff_expert
+        active_moe = self.n_layers * (m.top_k + m.num_shared) * 3 * d * m.d_ff_expert
+        return self.param_count - full_moe + active_moe

@@ -1,0 +1,132 @@
+"""Transformer building blocks: RMSNorm, RoPE, blockwise GQA attention.
+
+Attention is computed blockwise (lax.scan over query and key/value tiles
+with online softmax) so 32k-token prefill never materializes an [S, S]
+score matrix — the pure-JAX analogue of a flash kernel, sized by
+``q_block`` x ``kv_block``. Decode (q_len=1 against a KV cache) uses the
+direct form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import LMConfig
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, scale, eps: float):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: [...]; returns (cos, sin) of shape [..., head_dim//2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., T, H, hd]; cos/sin: [..., T, hd//2] broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def _repeat_kv(k, n_rep: int):
+    """[B, T, Hkv, hd] -> [B, T, Hkv * n_rep, hd] (GQA head expansion)."""
+    if n_rep == 1:
+        return k
+    b, t, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, h, n_rep, d)).reshape(
+        b, t, h * n_rep, d)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, q_block: int, kv_block: int,
+                        q_offset=0):
+    """Online-softmax attention.
+
+    q: [B, Tq, H, hd]; k, v: [B, Tk, Hkv, hd] with H % Hkv == 0.
+    q_offset: absolute position of q[0] (decode/chunked prefill).
+    Tiles are zero-padded; padding keys are masked via an explicit validity
+    mask so Tq/Tk need not divide the block sizes.
+    """
+    b, tq, h, hd = q.shape
+    tk = k.shape[1]
+    n_rep = h // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = hd ** -0.5
+
+    qb = min(q_block, tq)
+    kb = min(kv_block, tk)
+    nq = -(-tq // qb)
+    nk = -(-tk // kb)
+    pq = nq * qb - tq
+    pk = nk * kb - tk
+
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    # [nq, B, H, qb, hd] / [nk, B, H, kb, hd]
+    qt = qp.reshape(b, nq, qb, h, hd).transpose(1, 0, 3, 2, 4)
+    kt = kp.reshape(b, nk, kb, h, hd).transpose(1, 0, 3, 2, 4)
+    vt = vp.reshape(b, nk, kb, h, hd).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_and_tile):
+        qi, qtile = qi_and_tile
+        q_pos = q_offset + qi * qb + jnp.arange(qb)
+
+        def kv_step(carry, ki_and_tiles):
+            m, l, acc = carry
+            ki, ktile, vtile = ki_and_tiles
+            k_pos = ki * kb + jnp.arange(kb)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qtile, ktile,
+                           preferred_element_type=jnp.float32) * scale
+            mask = (k_pos[None, :] < tk)
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vtile.dtype), vtile,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, qb), jnp.float32)
+        a0 = jnp.zeros((b, h, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kt, vt))
+        out = acc / jnp.maximum(l[..., None], 1e-20)
+        return None, out.astype(q.dtype)
+
+    _, ot = jax.lax.scan(q_step, None, (jnp.arange(nq), qt))
+    # [nq, B, H, qb, hd] -> [B, T, H, hd]
+    out = ot.transpose(1, 0, 3, 2, 4).reshape(b, nq * qb, h, hd)[:, :tq]
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token decode: q [B, 1, H, hd] vs cache [B, S, Hkv, hd].
+
+    ``cache_len`` masks unwritten cache positions.
+    """
+    b, _, h, hd = q.shape
+    s = k_cache.shape[1]
+    n_rep = h // k_cache.shape[2]
+    k = _repeat_kv(k_cache, n_rep)
+    v = _repeat_kv(v_cache, n_rep)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    mask = jnp.arange(s)[None, None, None, :] < cache_len[:, None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out.astype(q.dtype)

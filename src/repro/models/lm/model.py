@@ -1,0 +1,396 @@
+"""Decoder-only LM supporting dense / GQA / MoE blocks, scan-over-layers,
+remat, blockwise attention, chunked cross-entropy, and KV-cache decode.
+
+Parameters are plain pytrees (dicts of arrays) with a parallel pytree of
+PartitionSpecs (``param_specs``) covering the Megatron-style TP layout:
+Q-heads / FFN columns / vocab over "model", batch over ("pod", "data"),
+experts over "model" when E divides the axis (EP), else intra-expert TP.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.layers import (
+    apply_rope,
+    blockwise_attention,
+    decode_attention,
+    rms_norm,
+    rope_angles,
+)
+from repro.models.lm.moe import moe_ffn
+
+
+# ----------------------------------------------------------------- params
+
+def init_params(cfg: LMConfig, key) -> dict:
+    dt = cfg.jdtype
+    d, hd = cfg.d_model, cfg.hd
+    keys = jax.random.split(key, 8)
+
+    def norm_init(k, *shape):
+        return jnp.ones(shape, dt)
+
+    def w_init(k, fan_in, *shape):
+        return (jax.random.normal(k, shape, jnp.float32) * fan_in ** -0.5).astype(dt)
+
+    def layer_params(k):
+        ks = jax.random.split(k, 12)
+        p = {
+            "ln1": jnp.ones((d,), dt),
+            "ln2": jnp.ones((d,), dt),
+            "wq": w_init(ks[0], d, d, cfg.n_heads * hd),
+            "wk": w_init(ks[1], d, d, cfg.n_kv_heads * hd),
+            "wv": w_init(ks[2], d, d, cfg.n_kv_heads * hd),
+            "wo": w_init(ks[3], cfg.n_heads * hd, cfg.n_heads * hd, d),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((cfg.n_heads * hd,), dt)
+            p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+            p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        if cfg.moe is None:
+            p["mlp"] = {
+                "w_in": w_init(ks[4], d, d, cfg.d_ff),
+                "w_gate": w_init(ks[5], d, d, cfg.d_ff),
+                "w_out": w_init(ks[6], cfg.d_ff, cfg.d_ff, d),
+            }
+        else:
+            m = cfg.moe
+            p["moe"] = {
+                "router": w_init(ks[4], d, d, m.num_experts),
+                "w_in": w_init(ks[5], d, m.num_experts, d, m.d_ff_expert),
+                "w_gate": w_init(ks[6], d, m.num_experts, d, m.d_ff_expert),
+                "w_out": w_init(ks[7], m.d_ff_expert, m.num_experts,
+                                m.d_ff_expert, d),
+            }
+            if m.num_shared > 0:
+                p["moe"]["shared_w_in"] = w_init(ks[8], d, m.num_shared, d,
+                                                 m.d_ff_expert)
+                p["moe"]["shared_w_gate"] = w_init(ks[9], d, m.num_shared, d,
+                                                   m.d_ff_expert)
+                p["moe"]["shared_w_out"] = w_init(ks[10], m.d_ff_expert,
+                                                  m.num_shared, m.d_ff_expert, d)
+        return p
+
+    layer_keys = jax.random.split(keys[0], cfg.n_layers)
+    layers = jax.vmap(layer_params)(layer_keys)
+
+    params = {
+        "embed": w_init(keys[1], d, cfg.vocab, d),
+        "final_norm": jnp.ones((d,), dt),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = w_init(keys[2], d, d, cfg.vocab)
+    return params
+
+
+def param_specs(cfg: LMConfig, model_axis: str = "model") -> dict:
+    m = model_axis
+    ep = cfg.moe is not None
+    layer = {
+        "ln1": P(None), "ln2": P(None),
+        "wq": P(None, m), "wk": P(None, None), "wv": P(None, None),
+        "wo": P(m, None),
+    }
+    if cfg.qkv_bias:
+        layer.update({"bq": P(m), "bk": P(None), "bv": P(None)})
+    if cfg.moe is None:
+        layer["mlp"] = {
+            "w_in": P(None, m), "w_gate": P(None, m), "w_out": P(m, None),
+        }
+    else:
+        # EP when E divides the model axis; otherwise TP within experts.
+        layer["moe"] = {
+            "router": P(None, None),
+            "w_in": P("__EP__", None, None),
+            "w_gate": P("__EP__", None, None),
+            "w_out": P("__EP__", None, None),
+        }
+        if cfg.moe.num_shared > 0:
+            layer["moe"]["shared_w_in"] = P(None, None, m)
+            layer["moe"]["shared_w_gate"] = P(None, None, m)
+            layer["moe"]["shared_w_out"] = P(None, m, None)
+    # stacked over layers: prepend None for the L dim
+    layer = jax.tree.map(lambda s: P(None, *s), layer,
+                         is_leaf=lambda x: isinstance(x, P))
+    specs = {
+        "embed": P(m, None),
+        "final_norm": P(None),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, m)
+    return specs
+
+
+def resolve_param_specs(cfg: LMConfig, mesh, model_axis: str = "model") -> dict:
+    """Replace the __EP__ placeholder based on mesh divisibility: experts
+    shard over the model axis when E divides it (expert parallelism), else
+    the expert's ff dim is sharded (intra-expert tensor parallelism)."""
+    msize = mesh.devices.shape[list(mesh.axis_names).index(model_axis)]
+    specs = param_specs(cfg, model_axis)
+
+    def fix(s):
+        if not isinstance(s, P) or "__EP__" not in s:
+            return s
+        if cfg.moe.num_experts % msize == 0:
+            return P(*[model_axis if x == "__EP__" else x for x in s])
+        rest = [None if x == "__EP__" else x for x in s]
+        rest[-1] = model_axis  # [L, E, a, b] -> shard trailing dim (TP)
+        return P(*rest)
+
+    return jax.tree.map(fix, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def gather_specs(cfg: LMConfig, mesh, model_axis: str = "model") -> dict:
+    """NamedShardings used to *gather* FSDP-sharded weights at point of use
+    (per layer, inside the scan body): the TP-only layout, i.e. the resolved
+    specs before FSDP augmentation, with the layer-stack dim dropped.
+
+    Without this, GSPMD may keep contraction dims sharded and all-reduce
+    activation-sized partials instead of gathering weight shards.
+    """
+    from jax.sharding import NamedSharding
+
+    specs = resolve_param_specs(cfg, mesh, model_axis)
+
+    def drop_l(s):
+        return P(*tuple(s)[1:])
+
+    layer = jax.tree.map(drop_l, specs["layers"],
+                         is_leaf=lambda x: isinstance(x, P))
+    out = {"embed": specs["embed"], "final_norm": specs["final_norm"],
+           "layer": layer}
+    if "lm_head" in specs:
+        out["lm_head"] = specs["lm_head"]
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), out,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _gather(p, gspec):
+    if gspec is None:
+        return p
+    return jax.tree.map(jax.lax.with_sharding_constraint, p, gspec)
+
+
+# ---------------------------------------------------------------- forward
+
+def _attn(x, p, cfg: LMConfig, cos, sin):
+    b, t, d = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("btd,dh->bth", x, p["wq"])
+    k = jnp.einsum("btd,dh->bth", x, p["wk"])
+    v = jnp.einsum("btd,dh->bth", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, t, cfg.n_heads, hd)
+    k = k.reshape(b, t, cfg.n_kv_heads, hd)
+    v = v.reshape(b, t, cfg.n_kv_heads, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    o = blockwise_attention(q, k, v, causal=True, q_block=cfg.q_block,
+                            kv_block=cfg.kv_block)
+    o = o.reshape(b, t, cfg.n_heads * hd)
+    return jnp.einsum("bth,hd->btd", o, p["wo"])
+
+
+def _mlp(x, p):
+    h = jax.nn.silu(jnp.einsum("btd,df->btf", x, p["w_gate"])) \
+        * jnp.einsum("btd,df->btf", x, p["w_in"])
+    return jnp.einsum("btf,fd->btd", h, p["w_out"])
+
+
+def _block(x, p, cfg: LMConfig, cos, sin, gspec=None):
+    p = _gather(p, gspec)
+    h = _attn(rms_norm(x, p["ln1"], cfg.norm_eps), p, cfg, cos, sin)
+    x = x + h
+    y = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is None:
+        ff = _mlp(y, p["mlp"])
+        aux = jnp.float32(0)
+    else:
+        ff, aux = moe_ffn(y, p["moe"], cfg.moe)
+    return x + ff, aux
+
+
+def forward(params, tokens, cfg: LMConfig, gspec=None):
+    """tokens: [B, T] -> final hidden states [B, T, d] (+ moe aux loss).
+    ``gspec`` (from ``gather_specs``) gathers FSDP weight shards per layer."""
+    b, t = tokens.shape
+    x = params["embed"][tokens]
+    pos = jnp.arange(t)
+    cos, sin = rope_angles(pos, cfg.hd, cfg.rope_theta)
+    cos = jnp.broadcast_to(cos, (b, t, cfg.hd // 2))
+    sin = jnp.broadcast_to(sin, (b, t, cfg.hd // 2))
+
+    lspec = None if gspec is None else gspec["layer"]
+
+    def body(carry, layer_p):
+        x, aux = carry
+        x, a = _block(x, layer_p, cfg, cos, sin, lspec)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)),
+                                   params["layers"])
+    else:
+        carry = (x, jnp.float32(0))
+        for i in range(cfg.n_layers):
+            layer_p = jax.tree.map(lambda a: a[i], params["layers"])
+            carry, _ = body_fn(carry, layer_p)
+        x, aux = carry
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def lm_loss(params, tokens, labels, cfg: LMConfig, gspec=None):
+    """Chunked cross-entropy over the sequence (vocab-sized logits never
+    materialize for the full sequence)."""
+    x, aux = forward(params, tokens, cfg, gspec)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if gspec is not None and not cfg.tie_embeddings:
+        head = jax.lax.with_sharding_constraint(head, gspec["lm_head"])
+    b, t, d = x.shape
+    c = min(cfg.loss_chunk, t)
+    nc = t // c
+    xc = x[:, : nc * c].reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    yc = labels[:, : nc * c].reshape(b, nc, c).transpose(1, 0, 2)
+
+    def chunk_loss(carry, xy):
+        xs, ys = xy
+        logits = jnp.einsum("bcd,dv->bcv", xs, head,
+                            preferred_element_type=jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ys[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.float32(0), (xc, yc))
+    return total / (b * nc * c) + aux / cfg.n_layers
+
+
+# ----------------------------------------------------------------- decode
+
+def prefill(params, tokens, cfg: LMConfig, gspec=None):
+    """Serving prefill: run the full prompt, return (last-position logits,
+    KV cache stacked over layers). tokens: [B, T]."""
+    b, t = tokens.shape
+    hd = cfg.hd
+    x = params["embed"][tokens]
+    pos = jnp.arange(t)
+    cos, sin = rope_angles(pos, hd, cfg.rope_theta)
+    cos = jnp.broadcast_to(cos, (b, t, hd // 2))
+    sin = jnp.broadcast_to(sin, (b, t, hd // 2))
+
+    lspec = None if gspec is None else gspec["layer"]
+
+    def body(x, p):
+        p = _gather(p, lspec)
+        y = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q = jnp.einsum("btd,dh->bth", y, p["wq"])
+        k = jnp.einsum("btd,dh->bth", y, p["wk"])
+        v = jnp.einsum("btd,dh->bth", y, p["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = apply_rope(q.reshape(b, t, cfg.n_heads, hd), cos, sin)
+        k = apply_rope(k.reshape(b, t, cfg.n_kv_heads, hd), cos, sin)
+        v = v.reshape(b, t, cfg.n_kv_heads, hd)
+        o = blockwise_attention(q, k, v, causal=True, q_block=cfg.q_block,
+                                kv_block=cfg.kv_block)
+        o = o.reshape(b, t, cfg.n_heads * hd)
+        x = x + jnp.einsum("bth,hd->btd", o, p["wo"])
+        y2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is None:
+            ff = _mlp(y2, p["mlp"])
+        else:
+            ff, _ = moe_ffn(y2, p["moe"], cfg.moe)
+        return x + ff, (k, v)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(body_fn, x, params["layers"])
+    else:
+        kvs = []
+        for i in range(cfg.n_layers):
+            layer_p = jax.tree.map(lambda a: a[i], params["layers"])
+            x, kv = body_fn(x, layer_p)
+            kvs.append(kv)
+        ks = jnp.stack([kv[0] for kv in kvs])
+        vs = jnp.stack([kv[1] for kv in kvs])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head,
+                        preferred_element_type=jnp.float32)
+    cache = {"k": ks, "v": vs,
+             "len": jnp.full((b,), t, jnp.int32)}
+    return logits, cache
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    dt = dtype or cfg.jdtype
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def serve_step(params, cache, tokens, cfg: LMConfig, gspec=None):
+    """One decode step: tokens [B, 1] -> (logits [B, vocab], cache)."""
+    b = tokens.shape[0]
+    hd = cfg.hd
+    x = params["embed"][tokens]          # [B, 1, d]
+    pos = cache["len"]                    # [B]
+    cos, sin = rope_angles(pos[:, None], hd, cfg.rope_theta)  # [B, 1, hd/2]
+
+    lspec = None if gspec is None else gspec["layer"]
+
+    def body(carry, xs):
+        x, = carry
+        p, kc, vc = xs
+        p = _gather(p, lspec)
+        y = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q = jnp.einsum("btd,dh->bth", y, p["wq"])
+        k = jnp.einsum("btd,dh->bth", y, p["wk"])
+        v = jnp.einsum("btd,dh->bth", y, p["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = apply_rope(q.reshape(b, 1, cfg.n_heads, hd), cos, sin)
+        k = apply_rope(k.reshape(b, 1, cfg.n_kv_heads, hd), cos, sin)
+        v = v.reshape(b, 1, cfg.n_kv_heads, hd)
+        # uniform batched decode: all sequences share the write position
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos[0], 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos[0], 0, 0))
+        o = decode_attention(q, kc, vc, pos + 1)
+        o = o.reshape(b, 1, cfg.n_heads * hd)
+        x = x + jnp.einsum("bth,hd->btd", o, p["wo"])
+        y = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is None:
+            ff = _mlp(y, p["mlp"])
+        else:
+            ff, _ = moe_ffn(y, p["moe"], cfg.moe)
+        return (x + ff,), (kc, vc)
+
+    if cfg.scan_layers:
+        (x,), (kcs, vcs) = jax.lax.scan(
+            body, (x,), (params["layers"], cache["k"], cache["v"]))
+    else:
+        outs = []
+        for i in range(cfg.n_layers):
+            xs_i = (jax.tree.map(lambda a: a[i], params["layers"]),
+                    cache["k"][i], cache["v"][i])
+            (x,), kv = body((x,), xs_i)
+            outs.append(kv)
+        kcs = jnp.stack([o[0] for o in outs])
+        vcs = jnp.stack([o[1] for o in outs])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", x, head,
+                        preferred_element_type=jnp.float32)[:, 0]
+    return logits, {"k": kcs, "v": vcs, "len": cache["len"] + 1}

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bucketed dispatch,
+optional shared experts (DeepSeekMoE), SwiGLU experts.
+
+Dispatch is GShard-style *grouped*: tokens are dispatched within their own
+group (= sequence), so with the batch dim sharded over data-parallel axes
+the sort/rank/bucket machinery stays device-local and SPMD never gathers
+the global token stream — the all-to-all (if experts are sharded) happens
+only on the compact [G, E, C, d] bucket tensor. Per-group capacity
+C = ceil(T_g * k / E * capacity_factor); overflow falls through with zero
+expert output (standard capacity semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import MoEConfig
+
+
+def _dispatch_one_group(x, router, mcfg: MoEConfig, cap: int):
+    """x: [T, d] one group. Returns (buckets [E, C, d], combine info)."""
+    t, d = x.shape
+    e, k = mcfg.num_experts, mcfg.top_k
+
+    logits = jnp.einsum("td,de->te", x, router,
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # [T, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(expert_ids, e, dtype=jnp.float32),
+                          axis=1), axis=0)
+    aux = e * jnp.sum(me * ce) * mcfg.router_aux_weight
+
+    flat_e = expert_ids.reshape(-1)                          # [T*k]
+    flat_g = gate_vals.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e)                              # stable
+    se = flat_e[order]
+    pos = jnp.arange(t * k)
+    run_start = jnp.where(
+        se != jnp.concatenate([jnp.full((1,), -1, se.dtype), se[:-1]]),
+        pos, -1)
+    run_start = jax.lax.associative_scan(jnp.maximum, run_start)
+    rank_sorted = pos - run_start
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+
+    fits = rank < cap
+    slot = jnp.where(fits, flat_e * cap + rank, e * cap)     # overflow bin
+    buckets = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(x[flat_t])
+    return buckets[:-1].reshape(e, cap, d), (flat_t, flat_g, slot, fits), aux
+
+
+def _combine_one_group(ye, info, t: int, cap: int, e: int):
+    flat_t, flat_g, slot, fits = info
+    d = ye.shape[-1]
+    ye_flat = jnp.concatenate([ye.reshape(e * cap, d),
+                               jnp.zeros((1, d), ye.dtype)])
+    per_pair = ye_flat[jnp.where(fits, slot, e * cap)]       # [T*k, d]
+    return jax.ops.segment_sum(
+        per_pair * flat_g[:, None].astype(per_pair.dtype), flat_t,
+        num_segments=t)
+
+
+def moe_ffn(x, params, mcfg: MoEConfig):
+    """x: [G, T, d] grouped tokens (G = batch rows, sharded over dp).
+    Returns ([G, T, d], aux_loss)."""
+    import os
+
+    g, t, d = x.shape
+    e, k = mcfg.num_experts, mcfg.top_k
+    cap = max(int(t * k / e * mcfg.capacity_factor), 1)
+
+    buckets, infos, aux = jax.vmap(
+        lambda xg: _dispatch_one_group(xg, params["router"], mcfg, cap))(x)
+    # buckets: [G, E, C, d] — the only tensor that crosses devices when
+    # experts are sharded (EP): one compact all-to-all, not a token gather.
+    if os.environ.get("REPRO_MOE_CONSTRAIN"):
+        # perf experiment: pin expert activations group-local so partial-sum
+        # all-reduces (FSDP contraction dim) act on [G/dp, ...] not [G, ...]
+        from jax.sharding import PartitionSpec as P
+        dp = tuple(os.environ.get("REPRO_DP_AXES", "pod,data").split(","))
+        gs = P(dp, None, None, None)
+        buckets = jax.lax.with_sharding_constraint(buckets, gs)
+    h_in = jnp.einsum("gecd,edf->gecf", buckets, params["w_in"])
+    h_gate = jnp.einsum("gecd,edf->gecf", buckets, params["w_gate"])
+    h = jax.nn.silu(h_gate) * h_in
+    if os.environ.get("REPRO_MOE_CONSTRAIN"):
+        from jax.sharding import PartitionSpec as P
+        dp = tuple(os.environ.get("REPRO_DP_AXES", "pod,data").split(","))
+        h = jax.lax.with_sharding_constraint(h, P(dp, None, None, "model"))
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_out"])
+    if os.environ.get("REPRO_MOE_CONSTRAIN"):
+        from jax.sharding import PartitionSpec as P
+        dp = tuple(os.environ.get("REPRO_DP_AXES", "pod,data").split(","))
+        ye = jax.lax.with_sharding_constraint(ye, P(dp, None, None, None))
+
+    out = jax.vmap(
+        lambda yeg, ig: _combine_one_group(yeg, ig, t, cap, e))(ye, infos)
+
+    if mcfg.num_shared > 0:
+        hs_in = jnp.einsum("gtd,sdf->gstf", x, params["shared_w_in"])
+        hs_gate = jnp.einsum("gtd,sdf->gstf", x, params["shared_w_gate"])
+        hs = jax.nn.silu(hs_gate) * hs_in
+        out = out + jnp.einsum("gstf,sfd->gtd", hs, params["shared_w_out"])
+
+    return out.astype(x.dtype), jnp.mean(aux)

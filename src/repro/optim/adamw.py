@@ -1,0 +1,90 @@
+"""AdamW with fp32 moments (params may be bf16) + LR schedules, optax-free.
+
+Schedules include WSD (warmup-stable-decay) used by MiniCPM [arXiv:2404.06395].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        if self.grad_clip > 0:
+            gsq = jax.tree.reduce(
+                lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))),
+                grads, jnp.float32(0))
+            gnorm = jnp.sqrt(gsq)
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+        else:
+            scale = jnp.float32(1.0)
+
+        def upd(p, g, m, n):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            n = self.b2 * n + (1 - self.b2) * g * g
+            mhat = m / (1 - self.b1 ** step.astype(jnp.float32))
+            nhat = n / (1 - self.b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(nhat) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, n
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_n = tdef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, n) for p, g, m, n in
+               zip(flat_p, flat_g, flat_m, flat_n)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_n = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_n)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1) -> Callable:
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup, warm, cos)
+    return f
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int,
+                 floor_frac: float = 0.01) -> Callable:
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, flat plateau,
+    exponential-ish final decay."""
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        in_decay = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = floor_frac ** in_decay  # 1 -> floor_frac
+        return peak_lr * jnp.where(s < warmup, warm, dec)
+    return f

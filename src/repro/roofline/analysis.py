@@ -1,0 +1,133 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs_per_dev / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_dev / HBM_bw
+  collective term = wire_bytes_per_dev / ICI_link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the partitioned
+per-device module). Collective bytes are parsed from the optimized HLO
+text: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute result shape, converted to ring-algorithm wire bytes
+using its replica-group size.
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import math
+import re
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<shape>\([^)]*\)|[\w\[\],{}\s]*?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>\w+?)\[(?P<dims>[\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return total_devices
+
+
+def collective_bytes(hlo_text: str, total_devices: int) -> dict:
+    """Per-device wire bytes by collective type (ring-algorithm model)."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        op = m.group("op")
+        s = _shape_bytes(m.group("shape"))
+        g = _group_size(line, total_devices)
+        if g <= 1 or s == 0:
+            continue
+        if op == "all-reduce":
+            wire = 2.0 * (g - 1) / g * s
+        elif op == "all-gather":
+            wire = (g - 1) / g * s          # result is the gathered (big) buf
+        elif op == "reduce-scatter":
+            wire = (g - 1.0) * s            # result is the scattered (small) buf
+        elif op == "all-to-all":
+            wire = (g - 1) / g * s
+        else:  # collective-permute
+            wire = float(s)
+        out[op] += wire
+        out["count"] += 1
+    return out
+
+
+def analyze_compiled(compiled, mesh, *, model_flops: float = 0.0,
+                     kind: str = "train") -> dict:
+    cost = compiled.cost_analysis()
+    ndev = mesh.devices.size
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    coll = collective_bytes(txt, ndev)
+    wire = sum(v for k, v in coll.items() if k != "count")
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = wire / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful = model_flops / (flops * ndev) if flops > 0 else 0.0
+    # roofline fraction: useful work rate vs what the dominant term allows
+    frac = (model_flops / ndev / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "roofline_frac": frac,
+        "useful_flop_ratio": useful,
+        "wire_bytes_per_dev": wire,
+        "coll_breakdown": {k: v for k, v in coll.items() if k != "count"},
+        "coll_count": coll["count"],
+    }
+
+
+def hbw_summary(rec: dict) -> str:
+    return (f"compute={rec['compute_s']*1e3:.2f}ms "
+            f"memory={rec['memory_s']*1e3:.2f}ms "
+            f"collective={rec['collective_s']*1e3:.2f}ms "
+            f"dominant={rec['dominant']} "
+            f"roofline_frac={rec['roofline_frac']:.3f} "
+            f"useful_ratio={rec['useful_flop_ratio']:.3f}")

@@ -1,0 +1,35 @@
+"""Subprocess helper for fault-tolerance tests.
+
+Modes:
+  full <dir>     : run 30 steps straight, print loss trace
+  part <dir>     : run 30 steps but exit(17) via SIGTERM at ~step 12
+                   (self-delivered), leaving a checkpoint
+  resume <dir>   : resume from the checkpoint and finish to step 30
+"""
+import os
+import signal
+import sys
+
+from repro.models.lm.config import LMConfig
+from repro.train.loop import TrainJob, run
+
+TINY = LMConfig(name="tiny", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                head_dim=8, d_ff=64, vocab=64, dtype="float32",
+                q_block=16, kv_block=16, loss_chunk=16)
+
+
+def main():
+    mode, d = sys.argv[1], sys.argv[2]
+    job = TrainJob(cfg=TINY, steps=30, ckpt_dir=d, ckpt_every=5, log_every=1)
+    if mode == "part":
+        # fault injection: SIGTERM delivered to self at step 12; the loop's
+        # handler must flush a checkpoint and exit(17).
+        job = TrainJob(cfg=TINY, steps=30, ckpt_dir=d, ckpt_every=5,
+                       log_every=1, preempt_at_step=12)
+        run(job)  # exits 17 on preemption
+        return
+    run(job)
+
+
+if __name__ == "__main__":
+    main()

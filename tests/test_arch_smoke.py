@@ -1,0 +1,48 @@
+"""Per-architecture smoke tests: reduced/tiny configs of the same family run
+one real forward/train step on CPU with shape + finiteness asserts."""
+import numpy as np
+import pytest
+
+from repro.configs.registry import all_arch_names, get_bundle
+
+ARCHS = all_arch_names()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke(arch):
+    bundle = get_bundle(arch)
+    assert bundle.name == arch
+    assert bundle.family in ("lm", "gnn", "recsys")
+    assert len(bundle.shapes) >= 3
+    bundle.smoke_fn()
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+    assert set(ARCHS) == {
+        "grok-1-314b", "deepseek-moe-16b", "qwen2-1.5b", "minicpm-2b",
+        "qwen1.5-32b", "pna", "graphcast", "egnn", "dimenet",
+        "two-tower-retrieval",
+    }
+
+
+def test_lm_shapes_and_skips():
+    b = get_bundle("grok-1-314b")
+    assert set(b.shapes) == {"train_4k", "prefill_32k", "decode_32k"}
+    assert "long_500k" in b.skipped  # full-attention arch: sanctioned skip
+
+
+def test_param_counts_sane():
+    b = get_bundle("grok-1-314b")
+    n = b.config.param_count
+    assert 2.5e11 < n < 4.0e11, f"grok param count {n:.3g} not ~314B"
+    na = b.config.active_param_count
+    assert 6e10 < na < 1.2e11, f"grok active params {na:.3g} not ~80B"
+    q = get_bundle("qwen2-1.5b").config.param_count
+    assert 1.0e9 < q < 2.2e9, f"qwen2 param count {q:.3g} not ~1.5B"
+    m = get_bundle("minicpm-2b").config.param_count
+    assert 2.0e9 < m < 3.5e9, f"minicpm count {m:.3g} not ~2.4B(+emb)"
+    w = get_bundle("qwen1.5-32b").config.param_count
+    assert 2.6e10 < w < 4.0e10, f"qwen32 param count {w:.3g}"
+    d = get_bundle("deepseek-moe-16b").config.param_count
+    assert 1.2e10 < d < 2.2e10, f"deepseek count {d:.3g} not ~16B"

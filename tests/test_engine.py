@@ -1,0 +1,55 @@
+"""Engine tests: degenerate single-device path inline; the real multi-device
+reduction-tree checks run in a subprocess with 8 fake host devices (XLA locks
+the device count at first init, so the main test process keeps 1 device)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import AxisType
+
+from repro.core import (
+    CascadeMode,
+    ReduceOp,
+    TascadeConfig,
+    WritePolicy,
+    tascade_scatter_reduce,
+)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_single_device_degenerate():
+    """Mesh of one device: the tree collapses to a root apply."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    vpad = 32
+    idx = jnp.array([[3, 3, 5, -1, 31, 0, 3, -1]], jnp.int32)
+    val = jnp.array([[1.0, 2.0, 7.0, 0.0, 4.0, 9.0, 0.5, 0.0]], jnp.float32)
+    dest = jnp.full((vpad,), jnp.inf, jnp.float32)
+    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                        policy=WritePolicy.WRITE_THROUGH, mode=CascadeMode.TASCADE)
+    out = tascade_scatter_reduce(dest, idx, val, op="min", cfg=cfg, mesh=mesh)
+    out = np.asarray(out)
+    assert out[3] == 0.5 and out[5] == 7.0 and out[31] == 4.0 and out[0] == 9.0
+    assert np.isinf(out[1])
+
+
+@pytest.mark.parametrize("devices,script", [
+    (8, "engine_check.py"),
+])
+def test_distributed_engine(devices, script):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "helpers" / script)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL_OK" in proc.stdout

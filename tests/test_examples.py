@@ -1,0 +1,31 @@
+"""Every example must run end-to-end (subprocess; CPU)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run(script, *args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, str(REPO / "examples" / script), *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.parametrize("script,args,marker", [
+    ("quickstart.py", (), "QUICKSTART_OK"),
+    ("graph_analytics.py", ("9",), "GRAPH_ANALYTICS_OK"),
+    ("train_lm.py", ("40", "{tmp}/ckpt"), "TRAIN_LM_OK"),
+    ("serve_lm.py", ("4", "8"), "SERVE_LM_OK"),
+])
+def test_example(script, args, marker, tmp_path):
+    args = tuple(a.format(tmp=tmp_path) for a in args)
+    proc = _run(script, *args)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout[-3000:]}\nstderr:\n{proc.stderr[-3000:]}"
+    assert marker in proc.stdout

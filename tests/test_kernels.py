@@ -1,0 +1,135 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes, dtypes, ops, and policies."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pcache.ops import pcache_merge
+from repro.kernels.pcache.ref import pcache_merge_ref
+from repro.kernels.segment_reduce.ops import segment_reduce
+from repro.kernels.segment_reduce.ref import segment_reduce_ref
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+
+# ----------------------------------------------------------------- pcache
+
+PC_CASES = [("min", "write_through"), ("max", "write_through"), ("add", "write_back")]
+
+
+@pytest.mark.parametrize("op,policy", PC_CASES)
+@pytest.mark.parametrize("u,s,block", [(64, 16, 32), (300, 64, 128), (1024, 256, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pcache_kernel_matches_ref(op, policy, u, s, block, dtype):
+    rng = np.random.default_rng(u + s)
+    idx = rng.integers(0, 4 * s, size=u).astype(np.int32)
+    idx = np.where(rng.random(u) < 0.85, idx, -1)
+    val = (rng.standard_normal(u) * 4).astype(np.float32)
+    idx_j = jnp.asarray(idx)
+    val_j = jnp.asarray(val, dtype)
+    tags0 = jnp.full((s,), -1, jnp.int32)
+    ident = {"min": np.inf, "max": -np.inf, "add": 0.0}[op]
+    vals0 = jnp.full((s,), ident, dtype)
+
+    got = pcache_merge(idx_j, val_j, tags0, vals0, op=op, policy=policy,
+                       impl="pallas", block=block)
+    want = pcache_merge_ref(idx_j, val_j, tags0, vals0, op=op, policy=policy)
+    for g, w, name in zip(got, want, ("tags", "vals", "eidx", "eval")):
+        g, w = np.asarray(g, np.float64), np.asarray(w, np.float64)
+        mask = np.isfinite(w)
+        np.testing.assert_array_equal(np.isfinite(g), mask, err_msg=name)
+        np.testing.assert_allclose(g[mask], w[mask], rtol=1e-2, atol=1e-2,
+                                   err_msg=name)
+
+
+def test_pcache_kernel_chained_blocks():
+    """Block boundary must not change semantics (cache carried across tiles)."""
+    rng = np.random.default_rng(3)
+    u, s = 256, 32
+    idx = jnp.asarray(rng.integers(0, 128, size=u).astype(np.int32))
+    val = jnp.asarray(rng.standard_normal(u).astype(np.float32))
+    tags0 = jnp.full((s,), -1, jnp.int32)
+    vals0 = jnp.full((s,), np.inf, jnp.float32)
+    a = pcache_merge(idx, val, tags0, vals0, op="min", policy="write_through",
+                     impl="pallas", block=32)
+    b = pcache_merge(idx, val, tags0, vals0, op="min", policy="write_through",
+                     impl="pallas", block=256)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------- segment_reduce
+
+@pytest.mark.parametrize("op", ["add", "min", "max"])
+@pytest.mark.parametrize("e,n,d,block", [(128, 16, 8, 64), (1000, 77, 4, 256),
+                                         (512, 512, 16, 512)])
+def test_segment_reduce_matches_ref(op, e, n, d, block):
+    rng = np.random.default_rng(e + n)
+    seg = np.sort(rng.integers(0, n, size=e)).astype(np.int32)
+    data = rng.standard_normal((e, d)).astype(np.float32)
+    got = segment_reduce(jnp.asarray(data), jnp.asarray(seg), n, op=op,
+                         impl="pallas", block=block)
+    want = segment_reduce_ref(jnp.asarray(data), jnp.asarray(seg), n, op=op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_segment_reduce_discard_padding():
+    data = jnp.ones((8, 4), jnp.float32)
+    seg = jnp.array([0, 0, 1, 1, 99, 99, 99, 99], jnp.int32)  # 99 >= n discards
+    got = segment_reduce(data, seg, 2, op="add", impl="pallas", block=8)
+    np.testing.assert_allclose(np.asarray(got), np.full((2, 4), 2.0))
+
+
+# ----------------------------------------------------------- embedding_bag
+
+@pytest.mark.parametrize("v,d,b,l", [(64, 8, 4, 3), (1000, 16, 32, 8), (16, 128, 2, 1)])
+def test_embedding_bag_matches_ref(v, d, b, l):
+    rng = np.random.default_rng(v + b)
+    table = rng.standard_normal((v, d)).astype(np.float32)
+    idx = rng.integers(0, v, size=(b, l)).astype(np.int32)
+    idx = np.where(rng.random((b, l)) < 0.8, idx, -1)
+    got = embedding_bag(jnp.asarray(table), jnp.asarray(idx), impl="pallas")
+    want = embedding_bag_ref(jnp.asarray(table), jnp.asarray(idx))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_embedding_bag_all_padding_bag():
+    table = jnp.ones((8, 4), jnp.float32)
+    idx = jnp.full((2, 3), -1, jnp.int32)
+    got = embedding_bag(table, idx, impl="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.zeros((2, 4)))
+
+
+if HAVE_HYP:
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 300), st.integers(2, 64),
+           st.sampled_from(PC_CASES))
+    def test_pcache_property(seed, u, s, case):
+        op, policy = case
+        rng = np.random.default_rng(seed)
+        idx = rng.integers(0, 3 * s, size=u).astype(np.int32)
+        idx = np.where(rng.random(u) < 0.8, idx, -1)
+        val = rng.standard_normal(u).astype(np.float32)
+        ident = {"min": np.inf, "max": -np.inf, "add": 0.0}[op]
+        tags0 = jnp.full((s,), -1, jnp.int32)
+        vals0 = jnp.full((s,), ident, jnp.float32)
+        got = pcache_merge(jnp.asarray(idx), jnp.asarray(val), tags0, vals0,
+                           op=op, policy=policy, impl="pallas", block=64)
+        want = pcache_merge_ref(jnp.asarray(idx), jnp.asarray(val), tags0,
+                                vals0, op=op, policy=policy)
+        for g, w in zip(got, want):
+            g, w = np.asarray(g, np.float64), np.asarray(w, np.float64)
+            m = np.isfinite(w)
+            np.testing.assert_array_equal(np.isfinite(g), m)
+            np.testing.assert_allclose(g[m], w[m], rtol=1e-5, atol=1e-5)

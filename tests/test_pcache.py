@@ -1,0 +1,205 @@
+"""Unit + property tests for the P-cache (paper SIII-B).
+
+Root-equivalence invariant: for any update stream, {cache content} U
+{emitted updates} must reduce at the owner to exactly the same values as
+applying the raw stream directly. This holds for both the sequential oracle
+(paper semantics) and the vectorized TPU form, for both write policies.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pcache
+from repro.core.types import (
+    NO_IDX,
+    PCacheState,
+    ReduceOp,
+    UpdateStream,
+    WritePolicy,
+    make_pcache,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _direct_reduce(n, idx, val, op: ReduceOp):
+    out = np.full((n,), op.identity, np.float64)
+    for i, v in zip(idx, val):
+        if i == -1:
+            continue
+        if op is ReduceOp.ADD:
+            out[i] += v
+        elif op is ReduceOp.MIN:
+            out[i] = min(out[i], v)
+        else:
+            out[i] = max(out[i], v)
+    return out
+
+
+def _root_values(n, state: PCacheState, emitted: UpdateStream, op: ReduceOp):
+    """Reduce cache content + emissions at a hypothetical owner."""
+    tags = np.asarray(state.tags)
+    vals = np.asarray(state.vals)
+    eidx = np.asarray(emitted.idx)
+    eval_ = np.asarray(emitted.val)
+    all_idx = np.concatenate([tags[tags != -1], eidx[eidx != -1]])
+    all_val = np.concatenate([vals[tags != -1], eval_[eidx != -1]])
+    return _direct_reduce(n, all_idx, all_val, op)
+
+
+def _rand_stream(rng, n, u, dtype=np.float32, frac_valid=0.8):
+    idx = rng.integers(0, n, size=u).astype(np.int32)
+    mask = rng.random(u) < frac_valid
+    idx = np.where(mask, idx, -1)
+    val = rng.standard_normal(u).astype(dtype) * 10
+    val = np.where(idx == -1, 0, val)
+    return UpdateStream(jnp.asarray(idx), jnp.asarray(val))
+
+
+CASES = [
+    (ReduceOp.MIN, WritePolicy.WRITE_THROUGH),
+    (ReduceOp.MAX, WritePolicy.WRITE_THROUGH),
+    (ReduceOp.ADD, WritePolicy.WRITE_BACK),
+]
+
+
+@pytest.mark.parametrize("op,policy", CASES)
+@pytest.mark.parametrize("impl", ["vec", "seq", "vec_selective"])
+@pytest.mark.parametrize("lines,u,n", [(8, 32, 64), (16, 64, 64), (4, 128, 1000)])
+def test_root_equivalence(op, policy, impl, lines, u, n):
+    rng = np.random.default_rng(42 + lines + u)
+    stream = _rand_stream(rng, n, u)
+    state = make_pcache(lines, op)
+    if impl == "seq":
+        new_state, emitted, stats = pcache.merge_seq(state, stream, op=op, policy=policy)
+    else:
+        new_state, emitted, stats = pcache.merge(
+            state, stream, op=op, policy=policy, selective=(impl == "vec_selective")
+        )
+    got = _root_values(n, new_state, emitted, op)
+    want = _direct_reduce(n, np.asarray(stream.idx), np.asarray(stream.val), op)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("op,policy", CASES)
+def test_root_equivalence_chained(op, policy):
+    """Multiple merges into the same cache + final flush still reduce right."""
+    rng = np.random.default_rng(7)
+    n, u, lines = 128, 48, 16
+    state = make_pcache(lines, op)
+    emitted_all = []
+    raw_idx, raw_val = [], []
+    for _ in range(5):
+        stream = _rand_stream(rng, n, u)
+        raw_idx.append(np.asarray(stream.idx))
+        raw_val.append(np.asarray(stream.val))
+        state, emitted, _ = pcache.merge(state, stream, op=op, policy=policy)
+        emitted_all.append((np.asarray(emitted.idx), np.asarray(emitted.val)))
+    state, flushed = pcache.flush(state, op)
+    emitted_all.append((np.asarray(flushed.idx), np.asarray(flushed.val)))
+    got = _direct_reduce(
+        n,
+        np.concatenate([e[0] for e in emitted_all]),
+        np.concatenate([e[1] for e in emitted_all]),
+        op,
+    )
+    want = _direct_reduce(n, np.concatenate(raw_idx), np.concatenate(raw_val), op)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_write_through_filters():
+    """Non-improving updates must be filtered (the paper's SSSP red arrow)."""
+    op, policy = ReduceOp.MIN, WritePolicy.WRITE_THROUGH
+    state = make_pcache(8, op)
+    s1 = UpdateStream(jnp.array([3, 3, 3], jnp.int32), jnp.array([5.0, 7.0, 9.0]))
+    state, emitted, stats = pcache.merge(state, s1, op=op, policy=policy)
+    # coalesced to one entry (min=5), emitted once
+    assert int(stats.n_out) == 1
+    assert int(stats.n_coalesced) == 2
+    # a worse update later is filtered entirely
+    s2 = UpdateStream(jnp.array([3], jnp.int32), jnp.array([6.0]))
+    state, emitted, stats = pcache.merge(state, s2, op=op, policy=policy)
+    assert int(stats.n_out) == 0
+    assert int(stats.n_filtered) == 1
+    # a better one goes through
+    s3 = UpdateStream(jnp.array([3], jnp.int32), jnp.array([1.0]))
+    state, emitted, stats = pcache.merge(state, s3, op=op, policy=policy)
+    assert int(stats.n_out) == 1
+
+
+def test_write_back_coalesces():
+    """Repeated adds to one element emit nothing until flush (Histogram)."""
+    op, policy = ReduceOp.ADD, WritePolicy.WRITE_BACK
+    state = make_pcache(8, op)
+    for _ in range(4):
+        s = UpdateStream(jnp.array([5, 5], jnp.int32), jnp.array([1.0, 1.0]))
+        state, emitted, stats = pcache.merge(state, s, op=op, policy=policy)
+        assert int(stats.n_out) == 0
+    state, flushed = pcache.flush(state, op)
+    vals = np.asarray(flushed.val)[np.asarray(flushed.idx) == 5]
+    assert vals.sum() == 8.0
+
+
+def test_conflict_eviction_write_back():
+    """Distinct indices mapping to one line evict the occupant (paper SIII-B)."""
+    op, policy = ReduceOp.ADD, WritePolicy.WRITE_BACK
+    state = make_pcache(4, op)  # indices 1 and 5 collide (slot = idx % 4)
+    s1 = UpdateStream(jnp.array([1], jnp.int32), jnp.array([2.0]))
+    state, _, _ = pcache.merge(state, s1, op=op, policy=policy)
+    s2 = UpdateStream(jnp.array([5], jnp.int32), jnp.array([3.0]))
+    state, emitted, stats = pcache.merge(state, s2, op=op, policy=policy)
+    eidx = np.asarray(emitted.idx)
+    assert (eidx == 1).sum() == 1  # occupant evicted toward the owner
+    assert int(np.asarray(state.tags)[1]) == 5  # newcomer holds the line
+
+
+def test_selective_passes_through_on_occupied():
+    """Selective capture: occupied line => pass through, no eviction."""
+    op, policy = ReduceOp.ADD, WritePolicy.WRITE_BACK
+    state = make_pcache(4, op)
+    s1 = UpdateStream(jnp.array([1], jnp.int32), jnp.array([2.0]))
+    state, _, _ = pcache.merge(state, s1, op=op, policy=policy, selective=True)
+    s2 = UpdateStream(jnp.array([5], jnp.int32), jnp.array([3.0]))
+    state, emitted, _ = pcache.merge(state, s2, op=op, policy=policy, selective=True)
+    eidx = np.asarray(emitted.idx)
+    assert (eidx == 5).sum() == 1  # newcomer passed through
+    assert int(np.asarray(state.tags)[1]) == 1  # occupant kept the line
+
+
+def test_apply_to_owner_range():
+    dest = jnp.full((8,), jnp.inf)
+    s = UpdateStream(
+        jnp.array([16, 17, 23, 7, NO_IDX], jnp.int32),
+        jnp.array([1.0, 2.0, 3.0, 4.0, 0.0]),
+    )
+    out = pcache.apply_to_owner(dest, s, op=ReduceOp.MIN, base=16)
+    out = np.asarray(out)
+    assert out[0] == 1.0 and out[1] == 2.0 and out[7] == 3.0
+    assert np.isinf(out[2:7]).all()  # out-of-shard entry (7) dropped
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.integers(0, 2**32 - 1),
+        st.sampled_from(CASES),
+        st.integers(4, 64),
+        st.integers(1, 200),
+    )
+    def test_root_equivalence_property(seed, case, lines, u):
+        op, policy = case
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 500))
+        stream = _rand_stream(rng, n, u, frac_valid=float(rng.random()))
+        state = make_pcache(lines, op)
+        new_state, emitted, _ = pcache.merge(state, stream, op=op, policy=policy)
+        got = _root_values(n, new_state, emitted, op)
+        want = _direct_reduce(n, np.asarray(stream.idx), np.asarray(stream.val), op)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
