@@ -12,16 +12,15 @@ import time
 
 import numpy as np
 import jax
-from jax.sharding import AxisType
-
-from repro.core import CascadeMode, TascadeConfig
+from repro.core import CascadeMode, TascadeConfig, compat
 from repro.graph import apps
 from repro.graph.partition import shard_graph
 from repro.graph.rmat import rmat_graph
 
 
 def mesh_of(shape, axes):
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes,
+                            axis_types=compat.auto_axis_types(len(axes)))
 
 
 def row(name, us, derived=""):

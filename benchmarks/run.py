@@ -5,11 +5,17 @@ Prints ``name,us_per_call,derived`` CSV. Multi-device engine benchmarks
 kernel microbenchmarks and the strong-scaling / storage models run
 in-process (1 device).
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run [--json [PATH]]
+
+``--json`` additionally writes a machine-readable perf snapshot
+(default ``BENCH_engine.json``: us_per_call + sent/hop_bytes per row) so
+the perf trajectory is tracked across PRs (see DESIGN.md §5).
 """
 from __future__ import annotations
 
+import json
 import os
+import re
 import subprocess
 import sys
 import time
@@ -19,9 +25,25 @@ import numpy as np
 
 REPO = Path(__file__).resolve().parent.parent
 
+ROWS: list[dict] = []  # collected (name, us_per_call, derived) for --json
+
+
+def _parse_derived(derived: str) -> dict:
+    """Pull numeric metrics (msgs=, hop_bytes=, ...) out of a derived blob."""
+    out = {}
+    for key, alias in (("msgs", "sent"), ("hop_bytes", "hop_bytes"),
+                       ("filtered", "filtered"), ("coalesced", "coalesced"),
+                       ("epochs", "epochs")):
+        m = re.search(rf"{key}=(-?[\d.]+)", derived)
+        if m:
+            out[alias] = float(m.group(1))
+    return out
+
 
 def row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                 "derived": derived, **_parse_derived(derived)})
 
 
 def engine_benchmarks():
@@ -35,7 +57,11 @@ def engine_benchmarks():
     ok = "ENGINE_BENCH_DONE" in proc.stdout
     for line in proc.stdout.splitlines():
         if "," in line and not line.startswith("ENGINE"):
-            print(line, flush=True)
+            name, us, derived = (line.split(",", 2) + ["", ""])[:3]
+            try:
+                row(name, float(us), derived)
+            except ValueError:
+                print(line, flush=True)
     if not ok:
         print("engine_bench,0.0,FAILED", flush=True)
         sys.stderr.write(proc.stdout[-2000:] + proc.stderr[-4000:])
@@ -119,12 +145,29 @@ def storage_model():
             f"{sw_per_tile / tascade_per_tile:.0f}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        json_path = (argv[i + 1] if i + 1 < len(argv)
+                     and not argv[i + 1].startswith("-") else "BENCH_engine.json")
     print("name,us_per_call,derived")
     ok = engine_benchmarks()
     kernel_benchmarks()
     strong_scaling_model()
     storage_model()
+    if json_path is not None:
+        snapshot = {
+            "meta": {
+                "devices": int(os.environ.get("BENCH_DEVICES", "8")),
+                "scale": int(os.environ.get("BENCH_SCALE", "10")),
+                "engine_ok": ok,
+            },
+            "rows": ROWS,
+        }
+        Path(json_path).write_text(json.dumps(snapshot, indent=1))
+        print(f"wrote {json_path} ({len(ROWS)} rows)", flush=True)
     if not ok:
         raise SystemExit(1)
 

@@ -12,9 +12,7 @@ import sys
 
 import numpy as np
 import jax
-from jax.sharding import AxisType
-
-from repro.core import CascadeMode, TascadeConfig
+from repro.core import CascadeMode, TascadeConfig, compat
 from repro.graph import apps
 from repro.graph.csr import bfs_reference, sssp_reference
 from repro.graph.partition import shard_graph
@@ -23,8 +21,8 @@ from repro.graph.rmat import rmat_graph
 
 def main():
     scale = int(sys.argv[1]) if len(sys.argv) > 1 else 10
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
     print(f"RMAT-{scale} (V={1 << scale}) on a 2x4 device mesh")
     g = rmat_graph(scale, edge_factor=8, seed=7, weighted=True)
     sg = shard_graph(g, 8)

@@ -10,16 +10,15 @@ multi-device version.
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
-
 from repro.core import (
-    CascadeMode, ReduceOp, TascadeConfig, WritePolicy, tascade_scatter_reduce,
+    CascadeMode, ReduceOp, TascadeConfig, WritePolicy, compat,
+    tascade_scatter_reduce,
 )
 
 
 def main():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
     rng = np.random.default_rng(0)
 
     # 4096 power-law keys -> 256-bin histogram (the paper's Histogram app)

@@ -1,4 +1,5 @@
 """Tascade core: proxy regions, P-caches, and cascaded reduction trees."""
+from repro.core import compat
 from repro.core.api import (
     CascadeMode,
     MeshGeom,
@@ -12,6 +13,7 @@ from repro.core.types import NO_IDX, PCacheState, UpdateStream
 
 __all__ = [
     "CascadeMode",
+    "compat",
     "MeshGeom",
     "NO_IDX",
     "PCacheState",

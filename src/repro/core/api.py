@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.core.engine import EngineState, StepStats, TascadeEngine
 from repro.core.geom import MeshGeom
 from repro.core.types import (
@@ -59,9 +60,13 @@ def tascade_scatter_reduce(
            row d = updates generated on device d (in mesh linear order).
     val  : [D, U] update values.
 
-    Runs exchange sweeps (with final write-back flush) until no update is in
-    flight anywhere, then returns the reduced array (and summed stats).
+    A single ``step(drain=True, flush=True)`` fully drains the tree (the
+    engine's per-level early-exit loops run until every queue is globally
+    empty and write-back caches are flushed forward), so no outer sweep loop
+    — and no per-sweep global psum — is needed. ``max_sweeps`` is retained
+    for API compatibility and unused.
     """
+    del max_sweeps
     op = ReduceOp(op)
     ndev = mesh.devices.size
     vpad = dest.shape[0]
@@ -81,32 +86,13 @@ def tascade_scatter_reduce(
         state, dest_shard, stats = engine.step(
             state, dest_shard, new, drain=True, flush=True
         )
-        g_inflight = jax.lax.psum(stats.inflight, axes)
-
-        def cond(carry):
-            _, _, g, sweep, _ = carry
-            return (g > 0) & (sweep < max_sweeps)
-
-        def body(carry):
-            state, dest_shard, _, sweep, acc = carry
-            state, dest_shard, s = engine.step(
-                state, dest_shard, None, drain=True, flush=True
-            )
-            g = jax.lax.psum(s.inflight, axes)
-            acc = jax.tree.map(lambda a, b: a + b, acc, _stats_vec(s))
-            return state, dest_shard, g, sweep + 1, acc
-
-        acc0 = _stats_vec(stats)
-        state, dest_shard, g_inflight, _, acc = jax.lax.while_loop(
-            cond, body, (state, dest_shard, g_inflight, jnp.int32(0), acc0)
-        )
         # Surface correctness counters (psum -> identical on all devices).
         overflow = jax.lax.psum(state.overflow, axes)
-        residual = g_inflight
-        gstats = jax.tree.map(lambda x: jax.lax.psum(x, axes), acc)
+        residual = jax.lax.psum(stats.inflight, axes)
+        gstats = jax.tree.map(lambda x: jax.lax.psum(x, axes), _stats_vec(stats))
         return dest_shard, overflow, residual, gstats
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(P(axes), P(axes), P(axes)),

@@ -1,0 +1,91 @@
+"""Version-compatibility shims over the jax public API (0.4.x .. 0.5+).
+
+The repo targets three jax API generations:
+
+  * ``jax.sharding.AxisType`` + ``jax.make_mesh(..., axis_types=...)`` and
+    ``jax.shard_map(..., check_vma=...)``        -- jax >= 0.5-era API,
+  * ``jax.make_mesh(shape, names)`` (no axis_types) and
+    ``jax.experimental.shard_map.shard_map(..., check_rep=...)``
+                                                 -- jax 0.4.x,
+  * ``jax.sharding.Mesh`` fallback when ``jax.make_mesh`` is absent.
+
+Everything that builds a mesh or wraps a per-device function goes through
+this module so the rest of the codebase is version-agnostic.
+"""
+from __future__ import annotations
+
+import enum
+import math
+
+import jax
+import numpy as np
+
+try:  # jax >= 0.5-era explicit-sharding API
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_AXIS_TYPE = True
+except ImportError:  # jax 0.4.x: no axis types; meshes are implicitly "auto"
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in so call sites can say ``AxisType.Auto`` everywhere."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPE = False
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` across versions; ``axis_types`` dropped if unknown."""
+    axis_shapes = tuple(axis_shapes)
+    axis_names = tuple(axis_names)
+    if hasattr(jax, "make_mesh"):
+        if HAS_AXIS_TYPE and axis_types is not None:
+            try:
+                return jax.make_mesh(
+                    axis_shapes, axis_names, axis_types=axis_types, devices=devices
+                )
+            except TypeError:  # make_mesh predates the axis_types kwarg
+                pass
+        if devices is not None:
+            return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+        return jax.make_mesh(axis_shapes, axis_names)
+    # Very old fallback: build a Mesh by hand.
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    ndev = math.prod(axis_shapes)
+    return jax.sharding.Mesh(devs[:ndev].reshape(axis_shapes), axis_names)
+
+
+def auto_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` when supported, else None (0.4.x meshes)."""
+    return (AxisType.Auto,) * n if HAS_AXIS_TYPE else None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` across versions.
+
+    ``check_vma`` maps onto 0.5's ``check_vma`` or 0.4.x's ``check_rep``
+    (same meaning: verify replication invariants; the engine's collectives
+    do their own accounting, so callers pass False).
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=check_vma,
+            )
+        except TypeError:
+            pass  # jax.shard_map exists but with the check_rep spelling
+        try:
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma,
+            )
+        except TypeError:
+            pass
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )

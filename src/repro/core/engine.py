@@ -15,11 +15,23 @@ Modes (paper Fig. 4):
                    claims a cache line only when it is free) — the paper's
                    opportunistic capture, decided on line occupancy.
 
+Hot-path structure: one level-round is ONE sort. ``exchange.route_and_pack``
+fuses enqueue-compaction, pre-wire duplicate coalescing (the paper's
+at-source coalescing — duplicates are merged before they cost ``sent`` /
+``hop_bytes``), and bucket packing into a single sort by (peer, idx); the
+P-cache merge that follows is entirely sort-free (scatter-based winner
+election, see ``pcache.cache_pass``).
+
 Asynchrony (paper Fig. 7 / SV-D): ``step(..., drain=False)`` performs one
 exchange round per level and keeps residual updates pending in engine state,
 overlapping tree merging with subsequent compute epochs (continuous merge).
-``drain=True`` runs rounds until every level is empty — the synchronous
-barrier-merge ablation (and the way add-reductions deliver final sums).
+``drain=True`` drains each level with a ``lax.while_loop`` that exits as
+soon as the level's queues are globally empty (occupancy counters threaded
+through the pending streams make the check O(1)), instead of a fixed
+``max_exchange_rounds`` unrolled all_to_alls — the synchronous barrier-merge
+ablation (and the way add-reductions deliver final sums) without dead
+rounds. A single ``step(drain=True, flush=True)`` therefore delivers every
+update to the root.
 
 All functions here are *per-device* and must run inside ``shard_map``.
 """
@@ -53,6 +65,13 @@ MSG_BYTES = IDX_BYTES + VAL_BYTES
 
 
 class LevelState(NamedTuple):
+    """Per-level functional state.
+
+    ``pending`` always threads its occupancy counter (``pending.n``) — the
+    level's queue occupancy — so drain loops and inflight accounting never
+    re-scan the sentinel mask.
+    """
+
     cache: PCacheState      # this level's proxy cache (empty for non-merging levels)
     pending: UpdateStream   # updates awaiting exchange along this level's axis
 
@@ -105,6 +124,16 @@ class TascadeEngine:
         self.op = op
         self.dtype = dtype
         self.update_cap = update_cap
+
+        if cfg.use_pallas and cfg.mode is CascadeMode.TASCADE:
+            # The Pallas kernel has no selective-capture mode; silently
+            # running FULL_CASCADE eviction semantics would invalidate any
+            # TASCADE-vs-FULL_CASCADE ablation (paper Fig. 4).
+            raise ValueError(
+                "use_pallas=True does not support CascadeMode.TASCADE "
+                "(selective capture); use the vectorized jnp merge "
+                "(use_pallas=False) or CascadeMode.FULL_CASCADE."
+            )
 
         live_axes = [a for a in cfg.all_axes if geom.axis_size(a) > 1]
         if not live_axes:
@@ -163,7 +192,10 @@ class TascadeEngine:
                 if spec.merge
                 else make_pcache(1, self.op, self.dtype)
             )
-            lvls.append(LevelState(cache=cache, pending=make_stream(spec.pending_cap, self.dtype)))
+            lvls.append(LevelState(
+                cache=cache,
+                pending=make_stream(spec.pending_cap, self.dtype, counted=True),
+            ))
         return EngineState(levels=tuple(lvls), overflow=jnp.int32(0))
 
     # ------------------------------------------------------------- one round
@@ -175,44 +207,57 @@ class TascadeEngine:
             peer = peer * self.geom.axis_size(a) + self.geom.owner_coord(idx, a)
         return peer
 
-    def _level_round(self, spec: LevelSpec, lvl: LevelState):
-        """One exchange+merge round at a level. Returns (new level state,
-        emissions stream for the next level, sent count, stats)."""
-        peer = self._peer_of(lvl.pending.idx, spec.axes)
-        pk = ex.bucket_pack(lvl.pending, peer, spec.num_peers, spec.bucket_cap)
+    def _level_round(self, spec: LevelSpec, lvl: LevelState,
+                     new: UpdateStream | None):
+        """One exchange+merge round at a level: the fused single-sort
+        shuffle, the wire, and a sort-free cache merge. Returns
+        (new level state, emissions for the next level, sent count,
+        filtered count, coalesced count, dropped count)."""
+        rr = ex.route_and_pack(
+            lvl.pending, new,
+            lambda i: self._peer_of(i, spec.axes),
+            spec.num_peers, spec.bucket_cap,
+            op=self.op,
+            # OWNER_DIRECT is the Dalorex baseline: no proxies, no
+            # coalescing — every generated update pays the wire.
+            coalesce=self.cfg.mode is not CascadeMode.OWNER_DIRECT,
+        )
         axis_name = spec.axes if len(spec.axes) > 1 else spec.axes[0]
-        recv = ex.all_to_all_stream(pk.packed, axis_name, spec.num_peers, spec.bucket_cap)
+        recv = ex.all_to_all_stream(rr.packed, axis_name, spec.num_peers,
+                                    spec.bucket_cap)
         if spec.merge:
             if self.cfg.use_pallas:
-                # Route the cache pass through the Pallas TPU kernel
-                # (paper-faithful sequential per-message semantics).
+                # Route the cache pass through the block-vectorized Pallas
+                # TPU kernel (same conflict-resolution semantics as
+                # pcache.cache_pass; selective capture not supported there).
                 from repro.kernels.pcache.ops import pcache_merge as _pk
 
                 tags, vals, eidx, eval_ = _pk(
                     recv.idx, recv.val, lvl.cache.tags, lvl.cache.vals,
                     op=self.op.value, policy=self.cfg.policy.value,
-                    impl="pallas",
+                    impl="pallas", interpret=self.cfg.pallas_interpret,
                 )
                 cache = PCacheState(tags, vals)
                 out = UpdateStream(eidx, eval_)
                 n_in = jnp.sum((recv.idx != NO_IDX).astype(jnp.int32))
                 n_out = jnp.sum((eidx != NO_IDX).astype(jnp.int32))
                 filtered = jnp.maximum(n_in - n_out, 0)
-                coalesced = jnp.int32(0)
             else:
+                # Already coalesced pre-exchange: the merge stays sort-free.
                 cache, out, mstats = pcache.merge(
                     lvl.cache,
                     recv,
                     op=self.op,
                     policy=self.cfg.policy,
+                    coalesce=False,
                     selective=self.cfg.mode is CascadeMode.TASCADE,
                 )
-                filtered, coalesced = mstats.n_filtered, mstats.n_coalesced
+                filtered = mstats.n_filtered
         else:
             cache, out = lvl.cache, recv
-            filtered = coalesced = jnp.int32(0)
-        new_lvl = LevelState(cache=cache, pending=pk.leftover)
-        return new_lvl, out, pk.n_sent, filtered, coalesced
+            filtered = jnp.int32(0)
+        new_lvl = LevelState(cache=cache, pending=rr.leftover)
+        return new_lvl, out, rr.n_sent, filtered, rr.n_coalesced, rr.dropped
 
     # ------------------------------------------------------------------ step
 
@@ -228,9 +273,12 @@ class TascadeEngine:
         """Push ``new`` updates into the tree and advance it.
 
         drain=False: one round per level (asynchronous/opportunistic mode).
-        drain=True : rounds until all pendings empty (synchronous merge).
+        drain=True : per-level ``lax.while_loop`` rounds with early exit the
+                     moment the level's queues are globally empty.
         flush=True : write-back caches are fully flushed forward (delivers
-                     coalesced sums to the root; used at barriers / stream end).
+                     coalesced sums to the root; used at barriers / stream
+                     end). With drain=True this lands *everything* at the
+                     root — callers need no outer sweep loop.
         """
         if not self.levels:
             # degenerate single-device tree
@@ -243,6 +291,7 @@ class TascadeEngine:
                 sent=jnp.zeros((1,), jnp.int32), hop_bytes=jnp.float32(0),
                 inflight=zero, filtered=zero, coalesced=zero)
 
+        all_axes = tuple(self.geom.axis_names)
         levels = list(state.levels)
         overflow = state.overflow
         nlev = len(self.levels)
@@ -257,37 +306,80 @@ class TascadeEngine:
             levels[li] = LevelState(cache=lvl.cache, pending=pend)
             overflow = overflow + dropped
 
-        if new is not None:
-            _enqueue_at(0, new)
-
-        rounds = self.cfg.max_exchange_rounds if drain else 1
         for li, spec in enumerate(self.levels):
-            for _ in range(rounds):
-                lvl, out, n_sent, f, c = self._level_round(spec, levels[li])
+            is_last = li + 1 == nlev
+            incoming = new if li == 0 else None
+
+            if not drain:
+                lvl, out, n_sent, f, c, d = self._level_round(
+                    spec, levels[li], incoming)
                 levels[li] = lvl
                 sent[li] = sent[li] + n_sent
                 filtered = filtered + f
                 coalesced = coalesced + c
-                if li + 1 < nlev:
-                    _enqueue_at(li + 1, out)
-                else:
-                    # Root: entries leaving the last level are owner-local.
+                overflow = overflow + d
+                if is_last:
                     dest_shard = pcache.apply_to_owner(
                         dest_shard, out, op=self.op, base=self.geom.my_base()
                     )
+                else:
+                    _enqueue_at(li + 1, out)
+            else:
+                # Early-exit drain: rounds run only while this level's queue
+                # is nonempty somewhere on the mesh (occupancy counters make
+                # the check one psum of a scalar, not a mask reduction).
+                if incoming is not None:
+                    _enqueue_at(li, incoming)
+                nxt = None if is_last else levels[li + 1]
+                # Progress bound: each round ships >= 1 message per nonempty
+                # bucket, so a full queue drains in <= ceil(cap/bucket)
+                # rounds; x2 + slack guards a pathological all-one-peer skew.
+                limit = jnp.int32(
+                    2 * math.ceil(spec.pending_cap / spec.bucket_cap) + 4)
+
+                def cond(carry):
+                    r, g = carry[0], carry[1]
+                    return (g > 0) & (r < limit)
+
+                def body(carry):
+                    (r, _, lvl, nxt, dest, ovf, s_li, filt, coal) = carry
+                    lvl, out, n_sent, f, c, d = self._level_round(
+                        spec, lvl, None)
+                    ovf = ovf + d
+                    if is_last:
+                        dest = pcache.apply_to_owner(
+                            dest, out, op=self.op, base=self.geom.my_base())
+                    else:
+                        nxt_pend, dq = ex.enqueue(nxt.pending, out)
+                        nxt = LevelState(cache=nxt.cache, pending=nxt_pend)
+                        ovf = ovf + dq
+                    g = jax.lax.psum(lvl.pending.n, all_axes)
+                    return (r + 1, g, lvl, nxt, dest, ovf,
+                            s_li + n_sent, filt + f, coal + c)
+
+                g0 = jax.lax.psum(levels[li].pending.n, all_axes)
+                carry = (jnp.int32(0), g0, levels[li], nxt, dest_shard,
+                         overflow, sent[li], filtered, coalesced)
+                (_, _, lvl, nxt, dest_shard, overflow,
+                 sent[li], filtered, coalesced) = jax.lax.while_loop(
+                    cond, body, carry)
+                levels[li] = lvl
+                if not is_last:
+                    levels[li + 1] = nxt
+
             if flush and spec.merge and self.cfg.policy is WritePolicy.WRITE_BACK:
                 cache, flushed = pcache.flush(levels[li].cache, self.op)
                 levels[li] = LevelState(cache=cache, pending=levels[li].pending)
-                if li + 1 < nlev:
-                    _enqueue_at(li + 1, flushed)
-                else:
+                if is_last:
                     dest_shard = pcache.apply_to_owner(
                         dest_shard, flushed, op=self.op, base=self.geom.my_base()
                     )
+                else:
+                    _enqueue_at(li + 1, flushed)
 
         inflight = jnp.int32(0)
         for lvl in levels:
-            inflight = inflight + jnp.sum((lvl.pending.idx != NO_IDX).astype(jnp.int32))
+            inflight = inflight + lvl.pending.count()
 
         hop_bytes = jnp.float32(0)
         for li, spec in enumerate(self.levels):

@@ -1,4 +1,4 @@
-"""Bucketed sparse exchange: the SPMD stand-in for task-invocation routing.
+"""Fused bucketed sparse exchange: the SPMD stand-in for task routing.
 
 The paper routes each (index, value) update message through the NoC toward
 the owner tile, dimension by dimension. An SPMD program cannot route per
@@ -7,65 +7,143 @@ one mesh axis: every device packs its pending updates into fixed-size
 per-peer buckets keyed by the owner's coordinate on that axis, exchanges,
 and merges what it receives. Entries that do not fit a bucket stay pending
 (backpressure — the analogue of the paper's finite router/IQ queues).
+
+``route_and_pack`` is the whole per-round shuffle in ONE sort. The previous
+pipeline paid three independent O(U log U) sorts per level-round (enqueue
+compaction, bucket packing, post-exchange segment-coalescing) and shipped
+duplicate updates over the wire before merging them. Here pending+new
+updates are sorted once by the composite key (peer, idx); that single order
+simultaneously
+
+  * groups entries by destination bucket (peer ordering),
+  * makes duplicates adjacent so they coalesce *pre-exchange* with one
+    segment reduction (the paper's at-source coalescing — duplicates never
+    reach the wire, cutting both ``sent`` and ``hop_bytes``),
+  * yields in-bucket ranks and leftover compaction from plain prefix sums.
+
+Everything else in this module (``enqueue``, ``compact``) is sort-free:
+front-compaction is a cumsum + scatter, enabled by the occupancy counters
+threaded through ``UpdateStream``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import NO_IDX, UpdateStream
+from repro.core.types import NO_IDX, ReduceOp, UpdateStream
+
+# Sort key for invalid (sentinel) entries: larger than any real index.
+_BIG = jnp.int32(2**30)
 
 
-class PackResult(NamedTuple):
-    packed: UpdateStream          # [P * K] bucketed: bucket j = slots [j*K, (j+1)*K)
-    leftover: UpdateStream        # same capacity as input, entries that overflowed
-    n_sent: jnp.ndarray           # int32 count packed
-    n_leftover: jnp.ndarray       # int32 count left pending
+class RouteResult(NamedTuple):
+    packed: UpdateStream    # [P * K] bucketed: bucket j = slots [j*K, (j+1)*K)
+    leftover: UpdateStream  # [pending cap] front-compacted, counter threaded
+    n_sent: jnp.ndarray     # int32 messages packed for the wire
+    n_leftover: jnp.ndarray  # int32 entries kept pending (bucket overflow)
+    n_coalesced: jnp.ndarray  # int32 duplicates merged before the exchange
+    dropped: jnp.ndarray    # int32 entries lost to pending-queue overflow
+                            # (must stay 0; surfaced for overflow accounting)
 
 
-def bucket_pack(stream: UpdateStream, peer: jnp.ndarray, num_peers: int,
-                bucket_cap: int) -> PackResult:
-    """Pack a sentinel-padded stream into ``num_peers`` buckets of
-    ``bucket_cap`` entries each; stable within a bucket.
+def route_and_pack(
+    pending: UpdateStream,
+    new: UpdateStream | None,
+    peer_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    num_peers: int,
+    bucket_cap: int,
+    *,
+    op: ReduceOp,
+    coalesce: bool = True,
+) -> RouteResult:
+    """One level-round shuffle — enqueue + coalesce + pack — in a single sort.
 
-    ``peer`` gives the destination bucket per entry (ignored for padding).
+    ``peer_fn`` maps a global element index to its destination bucket on this
+    level (ignored for sentinel padding). With ``coalesce`` the stream is
+    segment-combined per (peer, idx) under ``op`` before packing, so at most
+    one message per destination element leaves this device per round;
+    without it (OWNER_DIRECT / Dalorex baseline) every update is shipped
+    as-is. Leftovers (bucket overflow) come back front-compacted — and, when
+    coalescing, already merged — in a stream of ``pending``'s capacity.
     """
-    u = stream.capacity
-    valid = stream.idx != NO_IDX
-    key = jnp.where(valid, peer, num_peers)  # invalids park in bin P
-    order = jnp.argsort(key)  # stable
-    key_s = key[order]
-    idx_s = stream.idx[order]
-    val_s = stream.val[order]
-    # rank within each bucket run
-    pos = jnp.arange(u, dtype=jnp.int32)
-    run_start = jnp.where(
-        key_s != jnp.concatenate([jnp.full((1,), -1, key_s.dtype), key_s[:-1]]),
-        pos, jnp.int32(-1))
-    run_start = jax.lax.associative_scan(jnp.maximum, run_start)
-    rank = pos - run_start
-    fits = (key_s < num_peers) & (rank < bucket_cap)
-    dest = jnp.where(fits, key_s * bucket_cap + rank, num_peers * bucket_cap)
+    cap_out = pending.capacity
+    if new is None:
+        idx, val = pending.idx, pending.val
+    else:
+        idx = jnp.concatenate([pending.idx, new.idx])
+        val = jnp.concatenate([pending.val, new.val])
+    total = idx.shape[0]
+    valid = idx != NO_IDX
+    # Composite sort key (peer, idx): invalids park in peer-bin P and key
+    # _BIG so they sort last. ONE stable sort orders the round.
+    pkey = jnp.where(valid, peer_fn(idx), num_peers).astype(jnp.int32)
+    skey = jnp.where(valid, idx, _BIG)
+    pkey_s, idx_s, val_s = jax.lax.sort((pkey, skey, val), num_keys=2)
+    valid_s = pkey_s < num_peers
+
+    pos = jnp.arange(total, dtype=jnp.int32)
+    prev_p = jnp.concatenate([jnp.full((1,), -1, pkey_s.dtype), pkey_s[:-1]])
+    prev_i = jnp.concatenate([jnp.full((1,), -2, idx_s.dtype), idx_s[:-1]])
+    if coalesce:
+        # Message heads: first entry of each (peer, idx) run.
+        head = valid_s & ((pkey_s != prev_p) | (idx_s != prev_i))
+    else:
+        head = valid_s  # every update is its own message
+    seg_id = jnp.cumsum(head.astype(jnp.int32)) - 1
+    if coalesce:
+        park = jnp.where(valid_s, seg_id, total)
+        if op is ReduceOp.ADD:
+            combined = jax.ops.segment_sum(val_s, park, num_segments=total + 1)
+        elif op is ReduceOp.MIN:
+            combined = jax.ops.segment_min(val_s, park, num_segments=total + 1)
+        else:
+            combined = jax.ops.segment_max(val_s, park, num_segments=total + 1)
+        msg_val = combined[jnp.where(valid_s, seg_id, total)].astype(val.dtype)
+    else:
+        msg_val = val_s
+
+    # In-bucket rank of each message: messages-before-me with my peer.
+    peer_change = valid_s & (pkey_s != prev_p)  # always also a head
+    seg_at_peer_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(peer_change, seg_id, -1)
+    )
+    rank = seg_id - seg_at_peer_start
+
+    fits = head & (rank < bucket_cap)
+    dest = jnp.where(fits, pkey_s * bucket_cap + rank, num_peers * bucket_cap)
     packed_idx = jnp.full((num_peers * bucket_cap + 1,), NO_IDX, jnp.int32)
-    packed_val = jnp.zeros((num_peers * bucket_cap + 1,), stream.val.dtype)
+    packed_val = jnp.zeros((num_peers * bucket_cap + 1,), val.dtype)
     packed_idx = packed_idx.at[dest].set(jnp.where(fits, idx_s, NO_IDX))
-    packed_val = packed_val.at[dest].set(jnp.where(fits, val_s, 0))
-    left_mask = (key_s < num_peers) & ~fits
-    leftover = UpdateStream(
-        jnp.where(left_mask, idx_s, NO_IDX),
-        jnp.where(left_mask, val_s, 0),
-    )
-    return PackResult(
+    packed_val = packed_val.at[dest].set(jnp.where(fits, msg_val, 0))
+
+    # Leftovers: messages past the bucket cap, front-compacted by prefix sum.
+    left = head & ~fits
+    left_pos = jnp.cumsum(left.astype(jnp.int32)) - 1
+    ldest = jnp.where(left & (left_pos < cap_out), left_pos, cap_out)
+    left_idx = jnp.full((cap_out + 1,), NO_IDX, jnp.int32)
+    left_val = jnp.zeros((cap_out + 1,), val.dtype)
+    left_idx = left_idx.at[ldest].set(jnp.where(left, idx_s, NO_IDX))
+    left_val = left_val.at[ldest].set(jnp.where(left, msg_val, 0))
+
+    n_valid = jnp.sum(valid_s.astype(jnp.int32))
+    n_msgs = jnp.sum(head.astype(jnp.int32))
+    n_sent = jnp.sum(fits.astype(jnp.int32))
+    n_left_raw = n_msgs - n_sent
+    dropped = jnp.maximum(n_left_raw - cap_out, 0)
+    n_left = jnp.minimum(n_left_raw, cap_out)
+    return RouteResult(
         packed=UpdateStream(packed_idx[:-1], packed_val[:-1]),
-        leftover=leftover,
-        n_sent=jnp.sum(fits.astype(jnp.int32)),
-        n_leftover=jnp.sum(left_mask.astype(jnp.int32)),
+        leftover=UpdateStream(left_idx[:cap_out], left_val[:cap_out], n_left),
+        n_sent=n_sent,
+        n_leftover=n_left,
+        n_coalesced=n_valid - n_msgs,
+        dropped=dropped,
     )
 
 
-def all_to_all_stream(packed: UpdateStream, axis_name: str, num_peers: int,
+def all_to_all_stream(packed: UpdateStream, axis_name, num_peers: int,
                       bucket_cap: int) -> UpdateStream:
     """Exchange packed buckets along one mesh axis. Returns the [P*K]
     entries received (bucket j = what peer j sent me)."""
@@ -77,29 +155,45 @@ def all_to_all_stream(packed: UpdateStream, axis_name: str, num_peers: int,
 
 
 def enqueue(pending: UpdateStream, new: UpdateStream) -> tuple[UpdateStream, jnp.ndarray]:
-    """Append ``new``'s valid entries into free slots of ``pending``.
+    """Append ``new``'s valid entries after ``pending``'s first ``n`` slots.
 
-    Compacts both streams; returns the merged stream (capacity of
-    ``pending``) and the count of dropped entries (overflow — must be zero
-    for correctness; surfaced so callers/tests can assert or resize).
+    Sort-free: ``pending`` is front-compacted with its occupancy counter, so
+    appending is a prefix sum over ``new``'s valid mask plus one scatter.
+    A ``pending`` without a counter is front-compacted first (one more
+    prefix-sum scatter), so arbitrary sentinel-padded streams stay valid
+    inputs. Returns the merged stream (same capacity, counter updated) and
+    the count of dropped entries (overflow — must be zero for correctness;
+    surfaced so callers/tests can assert or resize).
     """
+    if pending.n is None:
+        pending = compact(pending)
     cap = pending.capacity
-    idx = jnp.concatenate([pending.idx, new.idx])
-    val = jnp.concatenate([pending.val, new.val])
-    valid = idx != NO_IDX
-    order = jnp.argsort(~valid)  # valid entries first, stable
-    idx_c = idx[order]
-    val_c = val[order]
-    n_valid = jnp.sum(valid.astype(jnp.int32))
-    dropped = jnp.maximum(n_valid - cap, 0)
-    return UpdateStream(idx_c[:cap], val_c[:cap]), dropped
+    base = pending.count()
+    valid = new.idx != NO_IDX
+    slot = base + jnp.cumsum(valid.astype(jnp.int32)) - 1
+    dest = jnp.where(valid & (slot < cap), slot, cap)
+    idx = jnp.concatenate([pending.idx, jnp.full((1,), NO_IDX, jnp.int32)])
+    val = jnp.concatenate([pending.val, jnp.zeros((1,), pending.val.dtype)])
+    idx = idx.at[dest].set(jnp.where(valid, new.idx, NO_IDX))
+    val = val.at[dest].set(jnp.where(valid, new.val, 0))
+    n_new = jnp.sum(valid.astype(jnp.int32))
+    dropped = jnp.maximum(base + n_new - cap, 0)
+    n = jnp.minimum(base + n_new, cap)
+    return UpdateStream(idx[:cap], val[:cap], n), dropped
 
 
 def compact(stream: UpdateStream, cap: int | None = None) -> UpdateStream:
-    """Move valid entries to the front (optionally shrinking capacity)."""
-    order = jnp.argsort(stream.idx == NO_IDX)
-    idx = stream.idx[order]
-    val = stream.val[order]
-    if cap is not None:
-        idx, val = idx[:cap], val[:cap]
-    return UpdateStream(idx, val)
+    """Move valid entries to the front (optionally shrinking capacity).
+
+    Sort-free (stable prefix-sum scatter); threads the occupancy counter.
+    """
+    out_cap = stream.capacity if cap is None else cap
+    valid = stream.idx != NO_IDX
+    slot = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    dest = jnp.where(valid & (slot < out_cap), slot, out_cap)
+    idx = jnp.full((out_cap + 1,), NO_IDX, jnp.int32).at[dest].set(
+        jnp.where(valid, stream.idx, NO_IDX))
+    val = jnp.zeros((out_cap + 1,), stream.val.dtype).at[dest].set(
+        jnp.where(valid, stream.val, 0))
+    n = jnp.minimum(jnp.sum(valid.astype(jnp.int32)), out_cap)
+    return UpdateStream(idx[:out_cap], val[:out_cap], n)

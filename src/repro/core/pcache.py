@@ -15,14 +15,20 @@ Two implementations with identical *root semantics* (the multiset of
   ``merge_seq``  -- per-entry sequential loop, exactly the paper's
                     one-message-per-cycle tile semantics. Used as the oracle
                     and for paper-faithful filter-rate measurements.
-  ``merge``      -- TPU-native vectorized form: sort + segment-combine
-                    (within-batch coalescing), then a gather/compare/scatter
-                    cache pass. This is the hardware adaptation: the VPU wants
-                    vector ops, not a message loop. Eviction *order* differs
-                    from ``merge_seq``; reduction results do not.
+  ``merge``      -- TPU-native vectorized form built on ``cache_pass``: a
+                    SORT-FREE gather/compare/scatter conflict resolution
+                    (winner election is a scatter-max over element ids, and
+                    all value movement uses associative reduction scatters).
+                    This is the hardware adaptation: the VPU wants vector
+                    ops, not a message loop. Which contender wins a line
+                    differs from ``merge_seq``; reduction results do not.
 
-The vectorized cache pass is also available as a Pallas TPU kernel
-(``repro.kernels.pcache``); ``merge`` is its reference implementation.
+Within-batch coalescing happens pre-exchange in the fused
+``exchange.route_and_pack`` shuffle on the engine path (the paper's
+at-source coalescing); ``merge(coalesce=True)`` keeps a standalone
+sort-based front-end for direct callers. The vectorized cache pass is also
+available as a block-vectorized Pallas TPU kernel (``repro.kernels.pcache``);
+``cache_pass`` is its reference implementation.
 """
 from __future__ import annotations
 
@@ -83,6 +89,120 @@ def _segment_coalesce(stream: UpdateStream, op: ReduceOp) -> tuple[UpdateStream,
     return UpdateStream(out_idx, out_val), n_unique
 
 
+def _scatter_combine(arr: jnp.ndarray, slot: jnp.ndarray, val: jnp.ndarray,
+                     mask: jnp.ndarray, op: ReduceOp) -> jnp.ndarray:
+    """``arr[slot] = op.combine(arr[slot], val) where mask`` — order-free.
+
+    Scatter-add/min/max are associative+commutative, so concurrent writes to
+    one slot need no winner ordering. Unmasked entries land in a discard bin.
+    """
+    s = arr.shape[0]
+    identity = jnp.asarray(op.identity, arr.dtype)
+    p = jnp.where(mask, slot, s)
+    v = jnp.where(mask, val, identity).astype(arr.dtype)
+    padded = jnp.concatenate([arr, identity[None]])
+    if op is ReduceOp.ADD:
+        padded = padded.at[p].add(v)
+    elif op is ReduceOp.MIN:
+        padded = padded.at[p].min(v)
+    else:
+        padded = padded.at[p].max(v)
+    return padded[:s]
+
+
+def cache_pass(
+    tags: jnp.ndarray,
+    vals: jnp.ndarray,
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    *,
+    op: ReduceOp,
+    policy: WritePolicy,
+    selective: bool = False,
+):
+    """Sort-free vectorized conflict resolution against a direct-mapped cache.
+
+    Winner election among entries contending for one line is a scatter-max
+    over element indices (largest contending element id claims the line)
+    instead of a sort: entirely gather/compare/scatter, so a level-round's
+    only sort stays in ``exchange.route_and_pack``. Duplicate entries of the
+    winning element combine into the line with one more reduction scatter.
+
+    Emissions are positional ([U], slot j belongs to input entry j): an
+    entry's own pass-through/improving write, or — write-back — the occupant
+    its (unique per line) primary winner evicted. Returns
+    ``(tags, vals, emit_idx, emit_val, n_filtered)``.
+
+    Uses a python-int sentinel internally (not the module-level jnp scalar
+    ``NO_IDX``) so the whole pass stays constant-free and can trace inside a
+    ``pallas_call`` kernel without captured-constant errors.
+    """
+    _NOI = -1  # == int(NO_IDX); plain int so no jnp constant is captured
+    u, s = idx.shape[0], tags.shape[0]
+    valid = idx != _NOI
+    slot = jnp.where(valid, idx % s, 0)
+    cur_tag = tags[slot]
+    cur_val = vals[slot]
+    hit = valid & (cur_tag == idx)
+
+    contend = valid & ~hit
+    if selective:
+        # Opportunistic capture: only free lines may be claimed; updates to
+        # occupied lines pass through (no eviction churn) — the paper's
+        # selective cascading decided on local line occupancy.
+        contend = contend & (cur_tag == _NOI)
+    # Winner election without a sort: per line, the largest contending
+    # element index claims it (any deterministic choice is valid).
+    slot_c = jnp.where(contend, slot, s)
+    cand = jnp.full((s + 1,), _NOI, jnp.int32).at[slot_c].max(
+        jnp.where(contend, idx, _NOI))
+    claimed = cand[:s] != _NOI
+    winner = contend & (cand[slot] == idx)  # every duplicate of the winner id
+    # Losers: every non-hit entry that did not claim a line — including, in
+    # selective mode, updates blocked by an occupied line, which must pass
+    # through toward the owner rather than be dropped.
+    loser = valid & ~hit & ~winner
+
+    if policy is WritePolicy.WRITE_THROUGH:
+        # Hits combine into the line; only improvements propagate (the cache
+        # filters the rest — safe because a cached value was itself emitted
+        # when written). Winners replace the occupant silently (its writes
+        # were already propagated) and emit.
+        improved = hit & op.improves(val, cur_val)
+        vals_h = _scatter_combine(vals, slot, val, hit, op)
+        win_val = _scatter_combine(
+            jnp.full((s,), op.identity, vals.dtype), slot, val, winner, op)
+        new_tags = jnp.where(claimed, cand[:s], tags)
+        new_vals = jnp.where(claimed, win_val, vals_h)
+        emit = improved | winner | loser
+        # Emitting the raw operand is correct for every op: an improving
+        # min/max hit satisfies combine(val, cur) == val, and add must ship
+        # the delta (not the running sum) to avoid double counting.
+        e_idx = jnp.where(emit, idx, _NOI)
+        e_val = jnp.where(emit, val, jnp.zeros_like(val))
+        n_filtered = jnp.sum((hit & ~improved).astype(jnp.int32))
+    else:  # WRITE_BACK
+        # Hits coalesce silently; winners evict the (post-coalesce) occupant
+        # and install their combined value; losers pass through.
+        vals_h = _scatter_combine(vals, slot, val, hit, op)
+        win_val = _scatter_combine(
+            jnp.full((s,), op.identity, vals.dtype), slot, val, winner, op)
+        new_tags = jnp.where(claimed, cand[:s], tags)
+        new_vals = jnp.where(claimed, win_val, vals_h)
+        # One "primary" entry per claimed line (first winner position)
+        # carries the eviction so emissions stay positional and disjoint.
+        pos = jnp.arange(u, dtype=jnp.int32)
+        first = jnp.full((s + 1,), u, jnp.int32).at[slot_c].min(
+            jnp.where(winner, pos, u))
+        primary = winner & (first[slot] == pos)
+        evict = primary & (cur_tag != _NOI)
+        e_idx = jnp.where(loser, idx, jnp.where(evict, cur_tag, _NOI))
+        e_val = jnp.where(loser, val,
+                          jnp.where(evict, vals_h[slot], jnp.zeros_like(val)))
+        n_filtered = jnp.zeros((), jnp.int32)
+    return new_tags, new_vals, e_idx, e_val, n_filtered
+
+
 def merge(
     state: PCacheState,
     stream: UpdateStream,
@@ -92,82 +212,26 @@ def merge(
     coalesce: bool = True,
     selective: bool = False,
 ) -> tuple[PCacheState, UpdateStream, MergeStats]:
-    """Vectorized P-cache merge. Emission stream capacity is 2*U (write-back
-    can emit both pass-through losers and evicted occupants).
+    """Vectorized P-cache merge; emission stream is positional with the
+    input's capacity (each entry emits at most one message — its own
+    pass-through, or the occupant its primary winner evicted).
 
-    ``selective`` is the SPMD analogue of the paper's selective cascading:
-    an update is *captured* by this proxy only when capture is free (its line
-    hits or is empty); updates whose line is occupied by another element pass
-    through toward the owner unmodified instead of churning evictions —
-    opportunistic capture based on local occupancy, decided per element
-    rather than per message.
+    ``coalesce`` runs the sort-based within-batch segment combine first; the
+    engine passes False because the fused exchange already coalesced
+    pre-wire, which keeps the whole cache pass sort-free. ``selective`` is
+    the SPMD analogue of the paper's selective cascading (see
+    ``cache_pass``).
     """
     n_raw = jnp.sum((stream.idx != NO_IDX).astype(jnp.int32))
     if coalesce:
         stream, n_unique = _segment_coalesce(stream, op)
     else:
         n_unique = n_raw
-    u, s = stream.capacity, state.size
-    idx, val = stream.idx, stream.val
-    valid = idx != NO_IDX
-    slot = jnp.where(valid, idx % s, 0)
-    cur_tag = state.tags[slot]
-    cur_val = state.vals[slot]
-    hit = valid & (cur_tag == idx)
-
-    # --- winner election among non-hit candidates contending for a slot ---
-    contend = valid & ~hit
-    if selective:
-        # opportunistic capture: only lines that are free may be claimed;
-        # occupied lines let the update pass through (no eviction churn).
-        contend = contend & (cur_tag == NO_IDX)
-    race_key = jnp.where(contend, slot, s)  # s = out-of-race bin
-    order = jnp.argsort(race_key, stable=True)
-    key_sorted = race_key[order]
-    prev = jnp.concatenate([jnp.full((1,), -1, key_sorted.dtype), key_sorted[:-1]])
-    first = (key_sorted != prev) & (key_sorted < s)
-    winner = jnp.zeros((u,), dtype=bool).at[order].set(first)
-    loser = valid & ~hit & ~winner
-
-    identity = jnp.asarray(op.identity, state.vals.dtype)
-
-    if policy is WritePolicy.WRITE_THROUGH:
-        # Hits: write+emit only improvements; the cache filters the rest.
-        improved = hit & op.improves(val, cur_val)
-        vals1 = _masked_set(state.vals, slot, op.combine(val, cur_val), improved)
-        tags1 = state.tags
-        # Winners: occupy the line (previous occupant's writes were already
-        # propagated when made, so it is dropped silently) and emit.
-        tags2 = _masked_set(tags1, slot, idx, winner)
-        vals2 = _masked_set(vals1, slot, val, winner)
-        emit_mask = improved | winner | loser
-        e_idx = jnp.where(emit_mask, idx, NO_IDX)
-        e_val = jnp.where(emit_mask, jnp.where(improved, op.combine(val, cur_val), val),
-                          jnp.zeros_like(val))
-        evict_idx = jnp.full((u,), NO_IDX, dtype=jnp.int32)
-        evict_val = jnp.zeros((u,), dtype=val.dtype)
-        new_state = PCacheState(tags2, vals2)
-        n_filtered = jnp.sum((hit & ~improved).astype(jnp.int32))
-    else:  # WRITE_BACK
-        # Hits coalesce into the line (no emission).
-        vals1 = _masked_set(state.vals, slot, op.combine(val, cur_val), hit)
-        # Winners evict the (possibly just-coalesced) occupant and take the line.
-        occ_tag = state.tags[slot]
-        occ_val = vals1[slot]
-        evict = winner & (occ_tag != NO_IDX)
-        evict_idx = jnp.where(evict, occ_tag, NO_IDX)
-        evict_val = jnp.where(evict, occ_val, jnp.zeros_like(occ_val))
-        tags2 = _masked_set(state.tags, slot, idx, winner)
-        vals2 = _masked_set(vals1, slot, val, winner)
-        # Losers pass through toward the next level unmodified.
-        e_idx = jnp.where(loser, idx, NO_IDX)
-        e_val = jnp.where(loser, val, jnp.zeros_like(val))
-        new_state = PCacheState(tags2, vals2)
-        n_filtered = jnp.zeros((), jnp.int32)
-
-    out = UpdateStream(
-        jnp.concatenate([e_idx, evict_idx]), jnp.concatenate([e_val, evict_val])
+    tags, vals, e_idx, e_val, n_filtered = cache_pass(
+        state.tags, state.vals, stream.idx, stream.val,
+        op=op, policy=policy, selective=selective,
     )
+    out = UpdateStream(e_idx, e_val)
     n_out = jnp.sum((out.idx != NO_IDX).astype(jnp.int32))
     stats = MergeStats(
         n_in=n_raw,
@@ -175,21 +239,7 @@ def merge(
         n_coalesced=n_raw - n_unique,
         n_filtered=n_filtered,
     )
-    return new_state, out, stats
-
-
-def _masked_set(arr: jnp.ndarray, pos: jnp.ndarray, new: jnp.ndarray, mask: jnp.ndarray):
-    """``arr[pos] = new where mask`` with unique ``pos`` among masked entries.
-
-    Unmasked entries are routed to a discard slot: writing back the old value
-    in place would race (undefined scatter order) against a masked write to
-    the same position.
-    """
-    n = arr.shape[0]
-    p = jnp.where(mask, pos, n)
-    padded = jnp.concatenate([arr, arr[:1]])
-    padded = padded.at[p].set(jnp.where(mask, new, padded[n]))
-    return padded[:n]
+    return PCacheState(tags, vals), out, stats
 
 
 def flush(state: PCacheState, op: ReduceOp) -> tuple[PCacheState, UpdateStream]:
@@ -236,7 +286,10 @@ def merge_seq(
             tags = tags.at[sl].set(jnp.where(imp, iid, tag))
             vals = vals.at[sl].set(jnp.where(imp, newv, vals[sl]))
             e_idx = e_idx.at[n_e].set(jnp.where(imp, iid, e_idx[n_e]))
-            e_val = e_val.at[n_e].set(jnp.where(imp, newv, e_val[n_e]))
+            # Emit the raw operand: min/max improving writes satisfy
+            # combine(v, cur) == v, and add must ship the delta (the running
+            # sum would double count at the root).
+            e_val = e_val.at[n_e].set(jnp.where(imp, v, e_val[n_e]))
             n_e = n_e + imp.astype(jnp.int32)
             n_filt = n_filt + (active & ~imp).astype(jnp.int32)
         else:  # WRITE_BACK

@@ -96,14 +96,28 @@ class UpdateStream(NamedTuple):
 
     idx: int32[U] -- global destination indices, NO_IDX marks padding.
     val: f32[U]   -- update values (reduction operands).
+    n:   int32[]  -- optional occupancy counter: number of valid entries.
+                     When present the stream is *front-compacted* (all valid
+                     entries in slots [0, n)). Engine-internal pending queues
+                     always carry it so drain loops can early-exit on empty
+                     queues without re-scanning the sentinel mask; ad-hoc
+                     streams (app-generated updates, exchange receives) leave
+                     it None and ``count()`` falls back to a mask reduction.
     """
 
     idx: jnp.ndarray
     val: jnp.ndarray
+    n: jnp.ndarray | None = None
 
     @property
     def capacity(self) -> int:
         return self.idx.shape[0]
+
+    def count(self) -> jnp.ndarray:
+        """Number of valid entries (O(1) when the counter is threaded)."""
+        if self.n is not None:
+            return self.n
+        return jnp.sum((self.idx != NO_IDX).astype(jnp.int32))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +138,12 @@ class TascadeConfig:
       dense_threshold-- update density above which a level switches to the
                         dense psum_scatter path (density-adaptive dispatch;
                         the SPMD analogue of congestion-aware capture).
+      max_exchange_rounds -- safety bound on drain rounds per level (the
+                        early-exit drain loop normally stops well before it).
+      use_pallas     -- route P-cache merges through the Pallas kernel.
+      pallas_interpret -- Pallas execution override: None auto-selects by
+                        backend (compiled on TPU, interpreted elsewhere);
+                        True/False force interpret/compiled mode.
     """
 
     region_axes: Sequence[str] = ("model",)
@@ -136,6 +156,7 @@ class TascadeConfig:
     dense_threshold: float = 0.25
     max_exchange_rounds: int = 8
     use_pallas: bool = False  # route P-cache merges through the Pallas kernel
+    pallas_interpret: bool | None = None  # None = auto-select by backend
 
     def __post_init__(self):
         object.__setattr__(self, "region_axes", tuple(self.region_axes))
@@ -157,8 +178,12 @@ def make_pcache(num_lines: int, op: ReduceOp, dtype=jnp.float32) -> PCacheState:
     )
 
 
-def make_stream(capacity: int, dtype=jnp.float32) -> UpdateStream:
+def make_stream(capacity: int, dtype=jnp.float32, *,
+                counted: bool = False) -> UpdateStream:
+    """Empty stream; ``counted=True`` threads the occupancy counter (engine
+    pending queues), ``False`` leaves it off (ad-hoc scratch streams)."""
     return UpdateStream(
         idx=jnp.full((capacity,), NO_IDX, dtype=jnp.int32),
         val=jnp.zeros((capacity,), dtype=dtype),
+        n=jnp.int32(0) if counted else None,
     )

@@ -28,6 +28,7 @@ from repro.core import (
     TascadeConfig,
     TascadeEngine,
     WritePolicy,
+    compat,
 )
 from repro.core.types import NO_IDX, UpdateStream
 from repro.graph.partition import ShardedGraph
@@ -127,7 +128,7 @@ def _label_correcting(mesh, sg: ShardedGraph, cfg: TascadeConfig, *,
         return dist, m
 
     a = _axes(mesh)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=_graph_specs(mesh),
         out_specs=(P(a), RunMetrics(*([P()] * 7))),
@@ -223,20 +224,12 @@ def run_pagerank(mesh, sg: ShardedGraph, cfg: TascadeConfig, iters: int = 20,
                                   jnp.where(ok, contrib, 0.0))
                 state = engine.init_state()
                 sums = jnp.zeros((sg.shard,), jnp.float32)
+                # One drain+flush step delivers every contribution (the
+                # engine's early-exit loops drain each level until its queue
+                # is globally empty) — no outer sweep loop, no global psum
+                # spent on dead rounds.
                 state, sums, stats = engine.step(state, sums, new,
                                                  drain=True, flush=True)
-                g0 = jax.lax.psum(stats.inflight, axes)
-
-                def cond2(c):
-                    return c[3] > 0
-
-                def body2(c):
-                    st, sm, _, _ = c
-                    st, sm, s2 = engine.step(st, sm, None, drain=True, flush=True)
-                    return st, sm, s2, jax.lax.psum(s2.inflight, axes)
-
-                state, sums, stats, _ = jax.lax.while_loop(
-                    cond2, body2, (state, sums, stats, g0))
                 stats_sent = jnp.sum(stats.sent)
                 hopb = stats.hop_bytes
                 filtered, coalesced = stats.filtered, stats.coalesced
@@ -262,7 +255,7 @@ def run_pagerank(mesh, sg: ShardedGraph, cfg: TascadeConfig, iters: int = 20,
         return rank, m
 
     a = _axes(mesh)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=_graph_specs(mesh) + (P(a, None),),
         out_specs=(P(a), RunMetrics(*([P()] * 7))),
@@ -292,18 +285,8 @@ def run_spmv(mesh, sg: ShardedGraph, x: np.ndarray, cfg: TascadeConfig):
                            jnp.where(ok, contrib, 0.0))
         y = jnp.zeros((sg.shard,), jnp.float32)
         state = engine.init_state()
+        # Single drain+flush delivery (early-exit drains make it complete).
         state, y, stats = engine.step(state, y, new, drain=True, flush=True)
-        g0 = jax.lax.psum(stats.inflight, axes)
-
-        def cond(c):
-            return c[3] > 0
-
-        def body(c):
-            st, yy, _, _ = c
-            st, yy, s2 = engine.step(st, yy, None, drain=True, flush=True)
-            return st, yy, s2, jax.lax.psum(s2.inflight, axes)
-
-        state, y, stats, _ = jax.lax.while_loop(cond, body, (state, y, stats, g0))
         m = RunMetrics(
             epochs=jnp.int32(1),
             sent_total=jax.lax.psum(jnp.sum(stats.sent), axes),
@@ -316,7 +299,7 @@ def run_spmv(mesh, sg: ShardedGraph, x: np.ndarray, cfg: TascadeConfig):
         return y, m
 
     a = _axes(mesh)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=_graph_specs(mesh) + (P(a),),
         out_specs=(P(a), RunMetrics(*([P()] * 7))),

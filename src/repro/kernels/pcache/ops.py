@@ -1,7 +1,15 @@
 """Jitted dispatcher for the P-cache merge.
 
-On TPU the Pallas kernel runs compiled; elsewhere it runs in interpret mode
-(tests) or falls back to the jnp oracle (fast CPU path for the engine).
+``impl="pallas"`` runs the block-vectorized kernel — compiled on TPU,
+interpreter elsewhere (``interpret=None`` auto-selects; pass True/False to
+force, e.g. via ``TascadeConfig.pallas_interpret``). ``impl="ref"`` is the
+sequential per-message oracle (paper tile semantics). ``impl="auto"`` picks
+pallas on TPU and the oracle on other backends.
+
+The two impls are root-equivalent (cache content + emissions reduce to the
+same owner values), not element-identical: the vectorized kernel resolves a
+block's line conflicts with scatter-based winner election, the oracle one
+message at a time.
 """
 from __future__ import annotations
 
@@ -13,13 +21,14 @@ from repro.kernels.pcache.pcache import pcache_merge_pallas
 from repro.kernels.pcache.ref import pcache_merge_ref
 
 
-@functools.partial(jax.jit, static_argnames=("op", "policy", "impl", "block"))
+@functools.partial(jax.jit,
+                   static_argnames=("op", "policy", "impl", "block", "interpret"))
 def pcache_merge(idx, val, tags, vals, *, op: str, policy: str,
-                 impl: str = "auto", block: int = 1024):
+                 impl: str = "auto", block: int = 1024,
+                 interpret: bool | None = None):
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "pallas":
-        interp = jax.default_backend() != "tpu"
         return pcache_merge_pallas(idx, val, tags, vals, op=op, policy=policy,
-                                   block=block, interpret=interp)
+                                   block=block, interpret=interpret)
     return pcache_merge_ref(idx, val, tags, vals, op=op, policy=policy)

@@ -2,14 +2,25 @@
 
 The cache (tags+vals) is pinned in VMEM for the whole call — this is the
 hardware adaptation of the paper's SRAM-resident direct-mapped cache. The
-update stream is tiled through VMEM in blocks; within a block entries are
-processed in order, exactly the paper's one-message-per-cycle tile semantics
-(hit-combine / miss-insert / conflict-evict, write-through or write-back).
+update stream is tiled through VMEM in blocks; each block is resolved with
+ONE vectorized conflict-resolution pass (the VPU form of the paper's
+one-message-per-cycle tile loop):
 
-Emissions are *positional*: entry j's emission (its own improving write for
-write-through; the evicted occupant for write-back) lands in output slot j,
-NO_IDX if none. This keeps the kernel deterministic and trivially
-parallel-checkable against the pure-jnp oracle in ``ref.py``.
+  * hits combine into their line with an associative reduction scatter,
+  * winner election among lines' contenders is a scatter-max over element
+    ids (no sort, no per-message loop),
+  * duplicate entries of a winning element combine into the claimed line
+    with one more reduction scatter.
+
+This mirrors ``repro.core.pcache.cache_pass`` exactly, so the kernel and
+the engine's vectorized merge are bit-identical per block; across block
+boundaries only *which* contender holds a line can differ, never the root
+reduction result (root-equivalence against the sequential oracle is the
+contract, enforced in tests).
+
+Emissions are *positional*: entry j's emission (its own improving write /
+pass-through, or — write-back — the occupant evicted by the block's primary
+winner at j) lands in output slot j, NO_IDX if none.
 
 VMEM budget: cache of S lines = S*(4+4) bytes + one stream block; with the
 default S<=64K lines and block 1024 this is well under 1 MiB.
@@ -25,45 +36,34 @@ import jax.experimental.pallas as pl
 NO_IDX = -1
 
 
+def _block_pass(idx, val, tags, vals, *, op: str, policy: str):
+    """One block's vectorized conflict resolution: delegates to the single
+    source of truth, ``repro.core.pcache.cache_pass`` (pure jnp on block
+    arrays, so it traces inside the kernel), keeping the kernel and the
+    engine's vectorized merge bit-identical by construction. Selective
+    capture is an engine-side concern and not offered here."""
+    from repro.core.pcache import cache_pass
+    from repro.core.types import ReduceOp, WritePolicy
+
+    new_tags, new_vals, e_idx, e_val, _ = cache_pass(
+        tags, vals, idx, val,
+        op=ReduceOp(op), policy=WritePolicy(policy), selective=False,
+    )
+    return new_tags, new_vals, e_idx, e_val
+
+
 def _kernel(idx_ref, val_ref, tags_in_ref, vals_in_ref,
             tags_ref, vals_ref, eidx_ref, eval_ref,
-            *, op: str, policy: str, identity: float):
+            *, op: str, policy: str):
     del tags_in_ref, vals_in_ref  # aliased into tags_ref / vals_ref
-    bu = idx_ref.shape[0]
-    s = tags_ref.shape[0]
-
-    def body(j, _):
-        iid = idx_ref[j]
-        v = val_ref[j]
-        active = iid != NO_IDX
-        sl = jax.lax.rem(jnp.where(active, iid, 0), s)
-        tag = tags_ref[sl]
-        cur = vals_ref[sl]
-        hit = active & (tag == iid)
-
-        if policy == "write_through":
-            eff = jnp.where(hit, cur, jnp.asarray(identity, cur.dtype))
-            if op == "min":
-                imp = active & (v < eff)
-                newv = jnp.minimum(v, eff)
-            else:  # max
-                imp = active & (v > eff)
-                newv = jnp.maximum(v, eff)
-            tags_ref[sl] = jnp.where(imp, iid, tag)
-            vals_ref[sl] = jnp.where(imp, newv, cur)
-            eidx_ref[j] = jnp.where(imp, iid, NO_IDX)
-            eval_ref[j] = jnp.where(imp, newv, jnp.zeros_like(v))
-        else:  # write_back (add)
-            empty = tag == NO_IDX
-            conflict = active & ~hit & ~empty
-            newv = jnp.where(hit, cur + v, v)
-            eidx_ref[j] = jnp.where(conflict, tag, NO_IDX)
-            eval_ref[j] = jnp.where(conflict, cur, jnp.zeros_like(cur))
-            tags_ref[sl] = jnp.where(active, iid, tag)
-            vals_ref[sl] = jnp.where(active, newv, cur)
-        return 0
-
-    jax.lax.fori_loop(0, bu, body, 0)
+    new_tags, new_vals, e_idx, e_val = _block_pass(
+        idx_ref[...], val_ref[...], tags_ref[...], vals_ref[...],
+        op=op, policy=policy,
+    )
+    tags_ref[...] = new_tags
+    vals_ref[...] = new_vals
+    eidx_ref[...] = e_idx
+    eval_ref[...] = e_val
 
 
 def pcache_merge_pallas(
@@ -75,13 +75,17 @@ def pcache_merge_pallas(
     op: str,
     policy: str,
     block: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Merge a sentinel-padded update stream into a direct-mapped cache.
 
     Returns (tags, vals, emit_idx, emit_val); emissions positional per entry.
+    ``interpret=None`` auto-selects by backend: compiled on TPU, interpreter
+    everywhere else (CPU/GPU hosts running the TPU kernel for tests).
     """
     assert op in ("min", "max", "add") and policy in ("write_through", "write_back")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     u = idx.shape[0]
     s = tags.shape[0]
     if u % block:
@@ -89,9 +93,8 @@ def pcache_merge_pallas(
         idx = jnp.concatenate([idx, jnp.full((pad,), NO_IDX, idx.dtype)])
         val = jnp.concatenate([val, jnp.zeros((pad,), val.dtype)])
     up = idx.shape[0]
-    identity = {"min": jnp.inf, "max": -jnp.inf, "add": 0.0}[op]
 
-    kern = functools.partial(_kernel, op=op, policy=policy, identity=identity)
+    kern = functools.partial(_kernel, op=op, policy=policy)
     out_shapes = (
         jax.ShapeDtypeStruct((s,), tags.dtype),
         jax.ShapeDtypeStruct((s,), vals.dtype),

@@ -12,6 +12,13 @@ def pcache_merge_ref(idx, val, tags, vals, *, op: str, policy: str):
     identity = {"min": jnp.inf, "max": -jnp.inf, "add": 0.0}[op]
     s = tags.shape[0]
 
+    def combine(a, b):
+        if op == "min":
+            return jnp.minimum(a, b)
+        if op == "max":
+            return jnp.maximum(a, b)
+        return a + b
+
     def step(carry, xs):
         tags, vals = carry
         iid, v = xs
@@ -24,17 +31,20 @@ def pcache_merge_ref(idx, val, tags, vals, *, op: str, policy: str):
             eff = jnp.where(hit, cur, jnp.asarray(identity, cur.dtype))
             if op == "min":
                 imp = active & (v < eff)
-                newv = jnp.minimum(v, eff)
-            else:
+            elif op == "max":
                 imp = active & (v > eff)
-                newv = jnp.maximum(v, eff)
+            else:  # add: every delta matters, nothing filters
+                imp = active
+            newv = combine(v, eff)
             tags = tags.at[sl].set(jnp.where(imp, iid, tag))
             vals = vals.at[sl].set(jnp.where(imp, newv, cur))
-            e = (jnp.where(imp, iid, NO_IDX), jnp.where(imp, newv, jnp.zeros_like(v)))
+            # Emit the raw operand (== newv for improving min/max; for add it
+            # is the delta, avoiding double counting at the root).
+            e = (jnp.where(imp, iid, NO_IDX), jnp.where(imp, v, jnp.zeros_like(v)))
         else:
             empty = tag == NO_IDX
             conflict = active & ~hit & ~empty
-            newv = jnp.where(hit, cur + v, v)
+            newv = jnp.where(hit, combine(cur, v), v)
             e = (jnp.where(conflict, tag, NO_IDX),
                  jnp.where(conflict, cur, jnp.zeros_like(cur)))
             tags = tags.at[sl].set(jnp.where(active, iid, tag))

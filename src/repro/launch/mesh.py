@@ -6,16 +6,17 @@ multi-pod = 2 pods x 256 = 512 chips (pod, data, model).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.core import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes,
+                            axis_types=compat.auto_axis_types(len(axes)))
 
 
 def make_debug_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for subprocess tests (8 fake host devices)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes,
+                            axis_types=compat.auto_axis_types(len(axes)))

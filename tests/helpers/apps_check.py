@@ -7,9 +7,8 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
-from repro.core import CascadeMode, TascadeConfig
+from repro.core import CascadeMode, TascadeConfig, compat
 from repro.graph import apps
 from repro.graph.csr import (
     bfs_reference,
@@ -24,7 +23,8 @@ from repro.graph.rmat import rmat_graph
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
     ndev = 8
     scale = 8  # 256 vertices, ~4k edges
     g = rmat_graph(scale, edge_factor=8, seed=3, weighted=True)

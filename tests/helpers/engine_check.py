@@ -10,15 +10,18 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
 from repro.core import (
     CascadeMode,
+    MeshGeom,
     ReduceOp,
     TascadeConfig,
+    TascadeEngine,
     WritePolicy,
+    compat,
     tascade_scatter_reduce,
 )
+from repro.core.types import UpdateStream, make_stream
 
 
 def direct_reduce(n, idx, val, op):
@@ -35,17 +38,79 @@ def direct_reduce(n, idx, val, op):
     return out
 
 
+def count_sorts(jaxpr) -> int:
+    """Recursively count sort primitives in a (closed) jaxpr."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "sort":
+            n += 1
+        for v in eqn.params.values():
+            if hasattr(v, "eqns"):          # inner Jaxpr
+                n += count_sorts(v)
+            elif hasattr(v, "jaxpr"):       # ClosedJaxpr
+                n += count_sorts(v.jaxpr)
+            elif isinstance(v, (list, tuple)):
+                for w in v:
+                    if hasattr(w, "eqns"):
+                        n += count_sorts(w)
+                    elif hasattr(w, "jaxpr"):
+                        n += count_sorts(w.jaxpr)
+    return n
+
+
+def check_single_sort_per_level_round(mesh, vpad, u):
+    """Acceptance: exactly one sort-based shuffle per level-round in
+    engine.step (the fused route_and_pack; no enqueue/pack/coalesce sorts)."""
+    from jax.sharding import PartitionSpec as P
+
+    geom = MeshGeom.from_mesh(mesh, vpad)
+    for mode in CascadeMode:
+        op = ReduceOp.MIN
+        cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                            capacity_ratio=4, mode=mode,
+                            policy=WritePolicy.WRITE_THROUGH)
+        engine = TascadeEngine(cfg, geom, op, update_cap=u)
+        nlev = len(engine.levels)
+
+        def shard_fn(dest, idx, val):
+            state = engine.init_state()
+            new = UpdateStream(idx.reshape(-1), val.reshape(-1))
+            # drain=False -> exactly one round per level
+            state, dest, stats = engine.step(state, dest.reshape(-1), new)
+            return dest
+
+        axes = tuple(mesh.axis_names)
+        fn = compat.shard_map(shard_fn, mesh=mesh,
+                              in_specs=(P(axes), P(axes), P(axes)),
+                              out_specs=P(axes), check_vma=False)
+        jaxpr = jax.make_jaxpr(fn)(
+            jnp.zeros((vpad,), jnp.float32),
+            jnp.zeros((8, u), jnp.int32),
+            jnp.zeros((8, u), jnp.float32),
+        )
+        n_sorts = count_sorts(jaxpr.jaxpr)
+        assert n_sorts == nlev, (
+            f"{mode.value}: {n_sorts} sorts for {nlev} level-rounds")
+        print(f"OK jaxpr {mode.value}: {n_sorts} sort(s) for {nlev} level(s)")
+
+
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
     ndev = 8
     vpad = 256
     u = 64
     rng = np.random.default_rng(0)
 
+    check_single_sort_per_level_round(mesh, vpad, u)
+
+    # Full {ADD,MIN,MAX} x {WT,WB} x mode product: the fused pipeline must be
+    # root-equivalent to a direct reduction for every configuration.
     cases = []
     for mode in CascadeMode:
-        cases.append((ReduceOp.MIN, WritePolicy.WRITE_THROUGH, mode))
-        cases.append((ReduceOp.ADD, WritePolicy.WRITE_BACK, mode))
+        for op in (ReduceOp.MIN, ReduceOp.MAX, ReduceOp.ADD):
+            cases.append((op, WritePolicy.WRITE_THROUGH, mode))
+            cases.append((op, WritePolicy.WRITE_BACK, mode))
 
     hop_bytes = {}
     for op, policy, mode in cases:
@@ -72,11 +137,13 @@ def main():
         )
         want = direct_reduce(vpad, idx, val, op)
         got = np.asarray(out, np.float64)
-        assert int(stats["overflow"]) == 0, f"overflow in {mode}"
-        assert int(stats["residual"]) == 0, f"residual inflight in {mode}"
-        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
-        hop_bytes[(op, mode)] = float(stats["hop_bytes"])
-        print(f"OK {op.value:3s} {mode.value:12s} sent={int(stats['sent_total'])} "
+        assert int(stats["overflow"]) == 0, f"overflow in {policy} {mode}"
+        assert int(stats["residual"]) == 0, f"residual inflight in {policy} {mode}"
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{op} {policy} {mode}")
+        hop_bytes[(op, policy, mode)] = float(stats["hop_bytes"])
+        print(f"OK {op.value:3s} {policy.value:13s} {mode.value:12s} "
+              f"sent={int(stats['sent_total'])} "
               f"hopB={float(stats['hop_bytes']):.0f} filt={int(stats['filtered'])} "
               f"coal={int(stats['coalesced'])}")
 
@@ -101,11 +168,12 @@ def main():
 
     # Paper Figs. 3-4: proxies reduce traffic vs the Dalorex baseline on
     # skewed updates, for both filtering (min) and coalescing (add).
-    for op in (ReduceOp.MIN, ReduceOp.ADD):
-        base = hop_bytes[(op, CascadeMode.OWNER_DIRECT)]
-        merged = hop_bytes[(op, CascadeMode.PROXY_MERGE)]
-        casc = hop_bytes[(op, CascadeMode.FULL_CASCADE)]
-        tasc = hop_bytes[(op, CascadeMode.TASCADE)]
+    for op, policy in ((ReduceOp.MIN, WritePolicy.WRITE_THROUGH),
+                       (ReduceOp.ADD, WritePolicy.WRITE_BACK)):
+        base = hop_bytes[(op, policy, CascadeMode.OWNER_DIRECT)]
+        merged = hop_bytes[(op, policy, CascadeMode.PROXY_MERGE)]
+        casc = hop_bytes[(op, policy, CascadeMode.FULL_CASCADE)]
+        tasc = hop_bytes[(op, policy, CascadeMode.TASCADE)]
         print(f"traffic {op.value}: direct={base:.0f} proxy={merged:.0f} "
               f"cascade={casc:.0f} tascade={tasc:.0f}")
         assert merged < base, f"{op}: proxy merge did not reduce traffic"

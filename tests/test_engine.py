@@ -11,13 +11,13 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
 from repro.core import (
     CascadeMode,
     ReduceOp,
     TascadeConfig,
     WritePolicy,
+    compat,
     tascade_scatter_reduce,
 )
 
@@ -26,8 +26,8 @@ REPO = Path(__file__).resolve().parent.parent
 
 def test_single_device_degenerate():
     """Mesh of one device: the tree collapses to a root apply."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
     vpad = 32
     idx = jnp.array([[3, 3, 5, -1, 31, 0, 3, -1]], jnp.int32)
     val = jnp.array([[1.0, 2.0, 7.0, 0.0, 4.0, 9.0, 0.5, 0.0]], jnp.float32)

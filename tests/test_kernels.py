@@ -1,5 +1,13 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
-swept over shapes, dtypes, ops, and policies."""
+swept over shapes, dtypes, ops, and policies.
+
+The block-vectorized P-cache kernel is *root-equivalent* to the sequential
+per-message oracle — {cache content (write-back) + emissions} reduce to the
+same owner values — but not element-identical: it resolves a block's line
+conflicts with scatter-based winner election, so *which* contender holds a
+line differs from one-message-at-a-time processing. Per block it matches
+``repro.core.pcache.cache_pass`` exactly.
+"""
 import numpy as np
 import pytest
 
@@ -24,13 +32,39 @@ except ImportError:  # pragma: no cover
 
 PC_CASES = [("min", "write_through"), ("max", "write_through"), ("add", "write_back")]
 
+_REDUCE = {"min": min, "max": max, "add": lambda a, b: a + b}
+
+
+def _root_reduce(n, idx, val, op):
+    ident = {"min": np.inf, "max": -np.inf, "add": 0.0}[op]
+    out = np.full((n,), ident, np.float64)
+    for i, v in zip(np.asarray(idx), np.asarray(val, np.float64)):
+        if i != -1:
+            out[i] = _REDUCE[op](out[i], v)
+    return out
+
+
+def _root_of_merge(n, tags, vals, eidx, eval_, op, policy):
+    """Owner values implied by a merge result: emissions, plus cache content
+    for write-back (write-through caches mirror already-emitted values)."""
+    idx = [np.asarray(eidx)]
+    val = [np.asarray(eval_, np.float64)]
+    if policy == "write_back":
+        t = np.asarray(tags)
+        idx.append(t[t != -1])
+        val.append(np.asarray(vals, np.float64)[t != -1])
+    return _root_reduce(n, np.concatenate(idx), np.concatenate(val), op)
+
 
 @pytest.mark.parametrize("op,policy", PC_CASES)
 @pytest.mark.parametrize("u,s,block", [(64, 16, 32), (300, 64, 128), (1024, 256, 1024)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_pcache_kernel_matches_ref(op, policy, u, s, block, dtype):
+def test_pcache_kernel_root_equivalent_to_ref(op, policy, u, s, block, dtype):
+    """Vectorized kernel and sequential oracle must imply identical owner
+    values for the same stream (the paper's correctness contract)."""
     rng = np.random.default_rng(u + s)
-    idx = rng.integers(0, 4 * s, size=u).astype(np.int32)
+    n = 4 * s
+    idx = rng.integers(0, n, size=u).astype(np.int32)
     idx = np.where(rng.random(u) < 0.85, idx, -1)
     val = (rng.standard_normal(u) * 4).astype(np.float32)
     idx_j = jnp.asarray(idx)
@@ -42,28 +76,62 @@ def test_pcache_kernel_matches_ref(op, policy, u, s, block, dtype):
     got = pcache_merge(idx_j, val_j, tags0, vals0, op=op, policy=policy,
                        impl="pallas", block=block)
     want = pcache_merge_ref(idx_j, val_j, tags0, vals0, op=op, policy=policy)
-    for g, w, name in zip(got, want, ("tags", "vals", "eidx", "eval")):
-        g, w = np.asarray(g, np.float64), np.asarray(w, np.float64)
-        mask = np.isfinite(w)
-        np.testing.assert_array_equal(np.isfinite(g), mask, err_msg=name)
-        np.testing.assert_allclose(g[mask], w[mask], rtol=1e-2, atol=1e-2,
-                                   err_msg=name)
+    # bf16 add: accumulation order differs between the vectorized and the
+    # sequential form, so rounding can drift by ~2^-8 per partial sum.
+    rtol, atol = (5e-2, 2e-1) if dtype == jnp.bfloat16 else (1e-5, 1e-5)
+    g = _root_of_merge(n, *got, op, policy)
+    w = _root_of_merge(n, *want, op, policy)
+    fin = np.isfinite(w)
+    np.testing.assert_array_equal(np.isfinite(g), fin)
+    np.testing.assert_allclose(g[fin], w[fin], rtol=rtol, atol=atol)
+    # and both must match the direct reduction of the raw stream
+    direct = _root_reduce(n, idx, np.where(idx == -1, 0, val), op)
+    np.testing.assert_allclose(np.where(fin, w, 0), np.where(fin, direct, 0),
+                               rtol=rtol, atol=atol)
+
+
+def test_pcache_kernel_matches_vectorized_merge():
+    """With one block covering the stream, the kernel must be bit-identical
+    to the engine's vectorized cache pass (same conflict resolution)."""
+    from repro.core import pcache as core_pcache
+    from repro.core.types import ReduceOp, WritePolicy
+
+    rng = np.random.default_rng(11)
+    u, s = 128, 32
+    for op, policy in PC_CASES:
+        idx = rng.integers(0, 4 * s, size=u).astype(np.int32)
+        idx = np.where(rng.random(u) < 0.8, idx, -1)
+        val = rng.standard_normal(u).astype(np.float32)
+        ident = {"min": np.inf, "max": -np.inf, "add": 0.0}[op]
+        tags0 = jnp.full((s,), -1, jnp.int32)
+        vals0 = jnp.full((s,), ident, jnp.float32)
+        got = pcache_merge(jnp.asarray(idx), jnp.asarray(val), tags0, vals0,
+                           op=op, policy=policy, impl="pallas", block=u)
+        want = core_pcache.cache_pass(
+            tags0, vals0, jnp.asarray(idx), jnp.asarray(val),
+            op=ReduceOp(op), policy=WritePolicy(policy))[:4]
+        for g, w, name in zip(got, want, ("tags", "vals", "eidx", "eval")):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                          err_msg=f"{op}/{policy}/{name}")
 
 
 def test_pcache_kernel_chained_blocks():
-    """Block boundary must not change semantics (cache carried across tiles)."""
+    """Block partitioning may change which contender holds a line, but never
+    the root reduction (cache is carried across tiles)."""
     rng = np.random.default_rng(3)
-    u, s = 256, 32
-    idx = jnp.asarray(rng.integers(0, 128, size=u).astype(np.int32))
-    val = jnp.asarray(rng.standard_normal(u).astype(np.float32))
+    u, s, n = 256, 32, 128
+    idx = rng.integers(0, n, size=u).astype(np.int32)
+    val = rng.standard_normal(u).astype(np.float32)
     tags0 = jnp.full((s,), -1, jnp.int32)
     vals0 = jnp.full((s,), np.inf, jnp.float32)
-    a = pcache_merge(idx, val, tags0, vals0, op="min", policy="write_through",
-                     impl="pallas", block=32)
-    b = pcache_merge(idx, val, tags0, vals0, op="min", policy="write_through",
-                     impl="pallas", block=256)
-    for x, y in zip(a, b):
-        np.testing.assert_allclose(np.asarray(x), np.asarray(y))
+    a = pcache_merge(jnp.asarray(idx), jnp.asarray(val), tags0, vals0,
+                     op="min", policy="write_through", impl="pallas", block=32)
+    b = pcache_merge(jnp.asarray(idx), jnp.asarray(val), tags0, vals0,
+                     op="min", policy="write_through", impl="pallas", block=256)
+    ra = _root_of_merge(n, *a, "min", "write_through")
+    rb = _root_of_merge(n, *b, "min", "write_through")
+    np.testing.assert_allclose(ra, rb)
+    np.testing.assert_allclose(ra, _root_reduce(n, idx, val, "min"))
 
 
 # --------------------------------------------------------- segment_reduce
@@ -128,8 +196,8 @@ if HAVE_HYP:
                            op=op, policy=policy, impl="pallas", block=64)
         want = pcache_merge_ref(jnp.asarray(idx), jnp.asarray(val), tags0,
                                 vals0, op=op, policy=policy)
-        for g, w in zip(got, want):
-            g, w = np.asarray(g, np.float64), np.asarray(w, np.float64)
-            m = np.isfinite(w)
-            np.testing.assert_array_equal(np.isfinite(g), m)
-            np.testing.assert_allclose(g[m], w[m], rtol=1e-5, atol=1e-5)
+        g = _root_of_merge(3 * s, *got, op, policy)
+        w = _root_of_merge(3 * s, *want, op, policy)
+        m = np.isfinite(w)
+        np.testing.assert_array_equal(np.isfinite(g), m)
+        np.testing.assert_allclose(g[m], w[m], rtol=1e-5, atol=1e-5)
