@@ -27,13 +27,18 @@ def row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
-def timed(fn, *args, reps=3):
+def timed(fn, *args, reps=5):
+    """Best-of-reps wall time: the min is the standard noise-robust timing
+    statistic — shared-CPU tenancy and scheduler jitter only ever ADD time,
+    so the fastest rep is the closest to the code's true cost."""
     fn(*args)  # warm / compile
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = fn(*args)
         jax.block_until_ready(out[0] if isinstance(out, tuple) else out)
-    return (time.perf_counter() - t0) / reps * 1e6, out
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out
 
 
 def cfg_for(mode, region=("model",), cascade=("data",), C=8, sync=False):

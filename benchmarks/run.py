@@ -81,11 +81,13 @@ def kernel_benchmarks():
     def timed(fn, reps=5):
         out = fn()
         jax.block_until_ready(out)
-        t0 = time.perf_counter()
+        best = float("inf")
         for _ in range(reps):
+            t0 = time.perf_counter()
             out = fn()
             jax.block_until_ready(out)
-        return (time.perf_counter() - t0) / reps * 1e6
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
 
     u, s = 4096, 1024
     idx = jnp.asarray(rng.integers(0, 4 * s, u).astype(np.int32))
@@ -145,6 +147,67 @@ def storage_model():
             f"{sw_per_tile / tascade_per_tile:.0f}")
 
 
+def compare_snapshots(old_path: str, rows: list[dict],
+                      wall_tol: float = 0.25,
+                      traffic_tol: float = 0.01) -> list[str]:
+    """Print per-row us_per_call / sent / hop_bytes deltas against a previous
+    ``BENCH_engine.json`` and return the regressions — the CI gate for the
+    perf trajectory. Two gates on ``fig4/*`` rows:
+
+      * wall-clock grew more than ``wall_tol`` (25%, overridable via the
+        ``BENCH_WALL_TOL`` env var) — a tolerance meant to absorb moderate
+        runner-speed differences between the machine that produced the
+        snapshot and the one re-running it (timings are NOT
+        machine-independent; regenerate the snapshot when switching
+        hardware classes, and loosen the tolerance on heavily time-shared
+        runners where best-of-reps timing still jitters),
+      * ``sent``/``hop_bytes`` drifted more than ``traffic_tol`` (1%) in
+        either direction — traffic counts ARE machine-independent, so any
+        drift means the exchange pipeline changed behavior (intentional
+        changes must regenerate the committed snapshot in the same PR).
+    """
+    wall_tol = float(os.environ.get("BENCH_WALL_TOL", wall_tol))
+    old = {r["name"]: r for r in
+           json.loads(Path(old_path).read_text()).get("rows", [])}
+    regressions: list[str] = []
+
+    def delta(new_v, old_v):
+        if new_v is None or old_v is None or old_v == 0:
+            return None
+        return (float(new_v) - float(old_v)) / float(old_v)
+
+    def fmt(d):
+        return "     n/a" if d is None else f"{d * 100:+7.1f}%"
+
+    print(f"\n-- compare vs {old_path} "
+          "(us_per_call / sent / hop_bytes deltas) --")
+    print(f"{'name':44s} {'us_delta':>8s} {'sent_d':>8s} {'hopB_d':>8s}")
+    for r in rows:
+        o = old.get(r["name"])
+        if o is None or r["us_per_call"] == 0:
+            continue
+        dus = delta(r["us_per_call"], o.get("us_per_call"))
+        dsent = delta(r.get("sent"), o.get("sent"))
+        dhop = delta(r.get("hop_bytes"), o.get("hop_bytes"))
+        flag = ""
+        if r["name"].startswith("fig4/"):
+            if dus is not None and dus > wall_tol:
+                flag = "  << REGRESSION"
+                regressions.append(
+                    f"{r['name']}: {o['us_per_call']:.0f}us -> "
+                    f"{r['us_per_call']:.0f}us ({dus * 100:+.1f}%)")
+            for label, dt in (("sent", dsent), ("hop_bytes", dhop)):
+                if dt is not None and abs(dt) > traffic_tol:
+                    flag = "  << REGRESSION"
+                    regressions.append(
+                        f"{r['name']}: {label} drifted {dt * 100:+.2f}%")
+        print(f"{r['name']:44s} {fmt(dus)} {fmt(dsent)} {fmt(dhop)}{flag}",
+              flush=True)
+    for line in regressions:
+        print(f"REGRESSION {line}", flush=True)
+    return regressions
+
+
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     json_path = None
@@ -152,6 +215,12 @@ def main(argv=None) -> None:
         i = argv.index("--json")
         json_path = (argv[i + 1] if i + 1 < len(argv)
                      and not argv[i + 1].startswith("-") else "BENCH_engine.json")
+    compare_path = None
+    if "--compare" in argv:
+        i = argv.index("--compare")
+        compare_path = (argv[i + 1] if i + 1 < len(argv)
+                        and not argv[i + 1].startswith("-")
+                        else "BENCH_engine.json")
     print("name,us_per_call,derived")
     ok = engine_benchmarks()
     kernel_benchmarks()
@@ -168,8 +237,15 @@ def main(argv=None) -> None:
         }
         Path(json_path).write_text(json.dumps(snapshot, indent=1))
         print(f"wrote {json_path} ({len(ROWS)} rows)", flush=True)
+    regressions = []
+    if compare_path is not None and Path(compare_path).exists():
+        regressions = compare_snapshots(compare_path, ROWS)
     if not ok:
         raise SystemExit(1)
+    if regressions:
+        raise SystemExit(
+            f"{len(regressions)} fig4/* regression(s) — see REGRESSION "
+            "lines above (wall-clock past tolerance and/or traffic drift)")
 
 
 if __name__ == "__main__":

@@ -15,22 +15,32 @@ Modes (paper Fig. 4):
                    claims a cache line only when it is free) — the paper's
                    opportunistic capture, decided on line occupancy.
 
-Hot-path structure: one level-round is ONE sort. ``exchange.route_and_pack``
-fuses enqueue-compaction, pre-wire duplicate coalescing (the paper's
-at-source coalescing — duplicates are merged before they cost ``sent`` /
-``hop_bytes``), and bucket packing into a single sort by (peer, idx); the
-P-cache merge that follows is entirely sort-free (scatter-based winner
+Hot-path structure: one level-round is ONE sort of the packed wire word and
+ONE collective. ``exchange.route_and_pack`` fuses enqueue-compaction,
+pre-wire duplicate coalescing (the paper's at-source coalescing), and
+bucket packing into a single sort of the bit-packed (key, value-bits) word;
+``exchange.all_to_all_wire`` ships the packed block in one ``all_to_all``;
+the P-cache merge that follows is entirely sort-free (scatter-based winner
 election, see ``pcache.cache_pass``).
+
+Geometric level-capacity plan: once updates have been exchanged along a
+level's axes, the indices a device can hold are confined to its *coverage*
+— ``padded_elements / prod(exchanged axis sizes)`` — and coalescing caps
+per-peer messages at the next level's coverage. Level i+1's pending queue
+and bucket caps are therefore sized from level i's worst-case *coalesced*
+outflow (leftover ≤ coverage, one round's merge emissions ≤ received, plus
+a cache flush), not from the raw injection capacity: queues, sorts, and
+wire blocks shrink geometrically toward the root instead of growing by
+``peers x bucket`` each level.
 
 Asynchrony (paper Fig. 7 / SV-D): ``step(..., drain=False)`` performs one
 exchange round per level and keeps residual updates pending in engine state,
 overlapping tree merging with subsequent compute epochs (continuous merge).
-``drain=True`` drains each level with a ``lax.while_loop`` that exits as
-soon as the level's queues are globally empty (occupancy counters threaded
-through the pending streams make the check O(1)), instead of a fixed
-``max_exchange_rounds`` unrolled all_to_alls — the synchronous barrier-merge
-ablation (and the way add-reductions deliver final sums) without dead
-rounds. A single ``step(drain=True, flush=True)`` therefore delivers every
+``drain=True`` advances ALL levels together — each ``lax.while_loop``
+iteration runs one round at every level leaf→root, so an update can
+traverse the whole tree in a single iteration — and exits as soon as every
+queue on the mesh is empty (occupancy counters make the check one psum of a
+scalar). A single ``step(drain=True, flush=True)`` therefore delivers every
 update to the root.
 
 All functions here are *per-device* and must run inside ``shard_map``.
@@ -54,14 +64,16 @@ from repro.core.types import (
     ReduceOp,
     TascadeConfig,
     UpdateStream,
+    WireFormat,
     WritePolicy,
     make_pcache,
     make_stream,
+    wire_format_for,
 )
 
 IDX_BYTES = 4
 VAL_BYTES = 4
-MSG_BYTES = IDX_BYTES + VAL_BYTES
+MSG_BYTES = IDX_BYTES + VAL_BYTES  # one packed wire word
 
 
 class LevelState(NamedTuple):
@@ -102,6 +114,9 @@ class LevelSpec:
     merge: bool               # P-cache merge after this level's exchange?
     cache_lines: int
     mean_hops: float          # torus traffic weight for this exchange
+    coverage: int             # unique indices a device can hold AFTER this
+                              # level's exchange (vpad / prod exchanged sizes)
+    fmt: WireFormat | None    # packed wire layout (None -> unpacked fallback)
 
 
 class TascadeEngine:
@@ -156,17 +171,24 @@ class TascadeEngine:
             if len(groups) == 1:
                 merge_flags = [False]
 
+        # With pre-wire coalescing (every mode but OWNER_DIRECT) a device
+        # ships at most one message per destination element per round, so
+        # coverage bounds — not raw capacity — size everything upstream.
+        coalescing = mode is not CascadeMode.OWNER_DIRECT
         slack = cfg.exchange_slack
+        vpad = geom.padded_elements
         cap = max(int(update_cap * slack), 8)
+        cov = vpad  # unique-index coverage entering level 0
         specs = []
-        for gi, (axes, merge) in enumerate(zip(groups, merge_flags)):
+        for axes, merge in zip(groups, merge_flags):
             peers = math.prod(geom.axis_size(a) for a in axes)
-            bucket = max(int(math.ceil(cap * slack / peers)), 1)
-            coverage = geom.padded_elements
-            for prior in groups[: gi + 1]:
-                for a in prior:
-                    coverage //= geom.axis_size(a)
-            lines = max(int(math.ceil(coverage / cfg.capacity_ratio)), 8) if merge else 0
+            cov_next = max(cov // peers, 1)  # coverage after this exchange;
+                                             # also the per-peer unique bound
+            if coalescing:
+                bucket = max(min(int(math.ceil(cap * slack / peers)), cov_next), 1)
+            else:
+                bucket = max(int(math.ceil(cap * slack / peers)), 1)
+            lines = max(int(math.ceil(cov_next / cfg.capacity_ratio)), 8) if merge else 0
             hops = sum(geom.axis_size(a) / 4.0 for a in axes)
             specs.append(
                 LevelSpec(
@@ -177,9 +199,19 @@ class TascadeEngine:
                     merge=merge,
                     cache_lines=lines,
                     mean_hops=hops,
+                    coverage=cov_next,
+                    fmt=wire_format_for(peers, vpad, dtype),
                 )
             )
-            cap = max(int(peers * bucket), 8)  # next level's worst-case inflow
+            if coalescing:
+                # Next queue's worst-case occupancy between its own rounds:
+                # its re-coalesced leftover (unique => <= cov_next), plus one
+                # round of this level's merge emissions (<= received, itself
+                # <= min(peers * bucket, cov)), plus a full cache flush.
+                cap = max(cov_next + min(peers * bucket, cov) + lines, 8)
+            else:
+                cap = max(int(peers * bucket), 8)  # raw one-round inflow
+            cov = cov_next
         self.levels = tuple(specs)
 
     # ------------------------------------------------------------------ state
@@ -210,9 +242,9 @@ class TascadeEngine:
     def _level_round(self, spec: LevelSpec, lvl: LevelState,
                      new: UpdateStream | None):
         """One exchange+merge round at a level: the fused single-sort
-        shuffle, the wire, and a sort-free cache merge. Returns
-        (new level state, emissions for the next level, sent count,
-        filtered count, coalesced count, dropped count)."""
+        shuffle, ONE collective on the packed wire word, and a sort-free
+        cache merge. Returns (new level state, emissions for the next level,
+        sent count, filtered count, coalesced count, dropped count)."""
         rr = ex.route_and_pack(
             lvl.pending, new,
             lambda i: self._peer_of(i, spec.axes),
@@ -221,10 +253,10 @@ class TascadeEngine:
             # OWNER_DIRECT is the Dalorex baseline: no proxies, no
             # coalescing — every generated update pays the wire.
             coalesce=self.cfg.mode is not CascadeMode.OWNER_DIRECT,
+            fmt=spec.fmt,
         )
         axis_name = spec.axes if len(spec.axes) > 1 else spec.axes[0]
-        recv = ex.all_to_all_stream(rr.packed, axis_name, spec.num_peers,
-                                    spec.bucket_cap)
+        recv = ex.all_to_all_wire(rr.wire, axis_name, spec.fmt, self.dtype)
         if spec.merge:
             if self.cfg.use_pallas:
                 # Route the cache pass through the block-vectorized Pallas
@@ -239,8 +271,8 @@ class TascadeEngine:
                 )
                 cache = PCacheState(tags, vals)
                 out = UpdateStream(eidx, eval_)
-                n_in = jnp.sum((recv.idx != NO_IDX).astype(jnp.int32))
-                n_out = jnp.sum((eidx != NO_IDX).astype(jnp.int32))
+                n_in = jnp.sum(recv.idx != NO_IDX, dtype=jnp.int32)
+                n_out = jnp.sum(eidx != NO_IDX, dtype=jnp.int32)
                 filtered = jnp.maximum(n_in - n_out, 0)
             else:
                 # Already coalesced pre-exchange: the merge stays sort-free.
@@ -259,6 +291,62 @@ class TascadeEngine:
         new_lvl = LevelState(cache=cache, pending=rr.leftover)
         return new_lvl, out, rr.n_sent, filtered, rr.n_coalesced, rr.dropped
 
+    # --------------------------------------------------- interleaved drain
+
+    def _drain_all(self, levels, dest_shard, overflow, sent, filtered,
+                   coalesced):
+        """Early-exit drain advancing ALL levels per iteration (leaf→root,
+        so an update can traverse the whole tree in one iteration). Stops
+        the moment every queue on the mesh is empty — the check is one psum
+        of the summed occupancy counters."""
+        all_axes = tuple(self.geom.axis_names)
+        nlev = len(self.levels)
+        # Progress bound: each round ships >= 1 message per nonempty bucket,
+        # so a full queue drains in <= ceil(cap/bucket) of its own rounds;
+        # x2 + slack per level guards a pathological all-one-peer skew.
+        limit = jnp.int32(sum(
+            2 * math.ceil(s.pending_cap / s.bucket_cap) + 4 for s in self.levels
+        ) + 2 * nlev)
+
+        def occupancy(lvls):
+            t = jnp.int32(0)
+            for l in lvls:
+                t = t + l.pending.n
+            return t
+
+        def cond(carry):
+            r, g = carry[0], carry[1]
+            return (g > 0) & (r < limit)
+
+        def body(carry):
+            r, _, lvls, dest, ovf, s_vec, filt, coal = carry
+            lvls = list(lvls)
+            for li, spec in enumerate(self.levels):
+                lvl, out, n_sent, f, c, d = self._level_round(
+                    spec, lvls[li], None)
+                lvls[li] = lvl
+                ovf = ovf + d
+                if li + 1 == nlev:
+                    dest = pcache.apply_to_owner(
+                        dest, out, op=self.op, base=self.geom.my_base())
+                else:
+                    pend, dq = ex.enqueue(lvls[li + 1].pending, out)
+                    lvls[li + 1] = LevelState(cache=lvls[li + 1].cache,
+                                              pending=pend)
+                    ovf = ovf + dq
+                s_vec = s_vec.at[li].add(n_sent)
+                filt = filt + f
+                coal = coal + c
+            g = jax.lax.psum(occupancy(lvls), all_axes)
+            return (r + 1, g, tuple(lvls), dest, ovf, s_vec, filt, coal)
+
+        g0 = jax.lax.psum(occupancy(levels), all_axes)
+        carry = (jnp.int32(0), g0, tuple(levels), dest_shard, overflow,
+                 sent, filtered, coalesced)
+        (_, _, lvls, dest_shard, overflow,
+         sent, filtered, coalesced) = jax.lax.while_loop(cond, body, carry)
+        return list(lvls), dest_shard, overflow, sent, filtered, coalesced
+
     # ------------------------------------------------------------------ step
 
     def step(
@@ -273,8 +361,9 @@ class TascadeEngine:
         """Push ``new`` updates into the tree and advance it.
 
         drain=False: one round per level (asynchronous/opportunistic mode).
-        drain=True : per-level ``lax.while_loop`` rounds with early exit the
-                     moment the level's queues are globally empty.
+        drain=True : interleaved ``lax.while_loop`` rounds over all levels
+                     with early exit the moment every queue is globally
+                     empty.
         flush=True : write-back caches are fully flushed forward (delivers
                      coalesced sums to the root; used at barriers / stream
                      end). With drain=True this lands *everything* at the
@@ -291,11 +380,10 @@ class TascadeEngine:
                 sent=jnp.zeros((1,), jnp.int32), hop_bytes=jnp.float32(0),
                 inflight=zero, filtered=zero, coalesced=zero)
 
-        all_axes = tuple(self.geom.axis_names)
         levels = list(state.levels)
         overflow = state.overflow
         nlev = len(self.levels)
-        sent = [jnp.int32(0) for _ in range(nlev)]
+        sent = jnp.zeros((nlev,), jnp.int32)
         filtered = jnp.int32(0)
         coalesced = jnp.int32(0)
 
@@ -306,15 +394,42 @@ class TascadeEngine:
             levels[li] = LevelState(cache=lvl.cache, pending=pend)
             overflow = overflow + dropped
 
-        for li, spec in enumerate(self.levels):
-            is_last = li + 1 == nlev
-            incoming = new if li == 0 else None
+        def _flush_at(li: int):
+            nonlocal dest_shard
+            cache, flushed = pcache.flush(levels[li].cache, self.op)
+            levels[li] = LevelState(cache=cache, pending=levels[li].pending)
+            if li + 1 == nlev:
+                dest_shard = pcache.apply_to_owner(
+                    dest_shard, flushed, op=self.op, base=self.geom.my_base())
+            else:
+                _enqueue_at(li + 1, flushed)
 
-            if not drain:
+        if drain:
+            if new is not None:
+                _enqueue_at(0, new)
+            (levels, dest_shard, overflow,
+             sent, filtered, coalesced) = self._drain_all(
+                levels, dest_shard, overflow, sent, filtered, coalesced)
+            if flush and self.cfg.policy is WritePolicy.WRITE_BACK:
+                # Flush caches root-ward one level at a time; each flush can
+                # wake downstream queues, so re-drain after each (cheap when
+                # already empty: the loop exits on its precomputed psum).
+                for li, spec in enumerate(self.levels):
+                    if not spec.merge:
+                        continue
+                    _flush_at(li)
+                    (levels, dest_shard, overflow,
+                     sent, filtered, coalesced) = self._drain_all(
+                        levels, dest_shard, overflow, sent, filtered,
+                        coalesced)
+        else:
+            for li, spec in enumerate(self.levels):
+                is_last = li + 1 == nlev
+                incoming = new if li == 0 else None
                 lvl, out, n_sent, f, c, d = self._level_round(
                     spec, levels[li], incoming)
                 levels[li] = lvl
-                sent[li] = sent[li] + n_sent
+                sent = sent.at[li].add(n_sent)
                 filtered = filtered + f
                 coalesced = coalesced + c
                 overflow = overflow + d
@@ -324,58 +439,9 @@ class TascadeEngine:
                     )
                 else:
                     _enqueue_at(li + 1, out)
-            else:
-                # Early-exit drain: rounds run only while this level's queue
-                # is nonempty somewhere on the mesh (occupancy counters make
-                # the check one psum of a scalar, not a mask reduction).
-                if incoming is not None:
-                    _enqueue_at(li, incoming)
-                nxt = None if is_last else levels[li + 1]
-                # Progress bound: each round ships >= 1 message per nonempty
-                # bucket, so a full queue drains in <= ceil(cap/bucket)
-                # rounds; x2 + slack guards a pathological all-one-peer skew.
-                limit = jnp.int32(
-                    2 * math.ceil(spec.pending_cap / spec.bucket_cap) + 4)
-
-                def cond(carry):
-                    r, g = carry[0], carry[1]
-                    return (g > 0) & (r < limit)
-
-                def body(carry):
-                    (r, _, lvl, nxt, dest, ovf, s_li, filt, coal) = carry
-                    lvl, out, n_sent, f, c, d = self._level_round(
-                        spec, lvl, None)
-                    ovf = ovf + d
-                    if is_last:
-                        dest = pcache.apply_to_owner(
-                            dest, out, op=self.op, base=self.geom.my_base())
-                    else:
-                        nxt_pend, dq = ex.enqueue(nxt.pending, out)
-                        nxt = LevelState(cache=nxt.cache, pending=nxt_pend)
-                        ovf = ovf + dq
-                    g = jax.lax.psum(lvl.pending.n, all_axes)
-                    return (r + 1, g, lvl, nxt, dest, ovf,
-                            s_li + n_sent, filt + f, coal + c)
-
-                g0 = jax.lax.psum(levels[li].pending.n, all_axes)
-                carry = (jnp.int32(0), g0, levels[li], nxt, dest_shard,
-                         overflow, sent[li], filtered, coalesced)
-                (_, _, lvl, nxt, dest_shard, overflow,
-                 sent[li], filtered, coalesced) = jax.lax.while_loop(
-                    cond, body, carry)
-                levels[li] = lvl
-                if not is_last:
-                    levels[li + 1] = nxt
-
-            if flush and spec.merge and self.cfg.policy is WritePolicy.WRITE_BACK:
-                cache, flushed = pcache.flush(levels[li].cache, self.op)
-                levels[li] = LevelState(cache=cache, pending=levels[li].pending)
-                if is_last:
-                    dest_shard = pcache.apply_to_owner(
-                        dest_shard, flushed, op=self.op, base=self.geom.my_base()
-                    )
-                else:
-                    _enqueue_at(li + 1, flushed)
+                if flush and spec.merge and \
+                        self.cfg.policy is WritePolicy.WRITE_BACK:
+                    _flush_at(li)
 
         inflight = jnp.int32(0)
         for lvl in levels:
@@ -387,7 +453,7 @@ class TascadeEngine:
 
         new_state = EngineState(levels=tuple(levels), overflow=overflow)
         stats = StepStats(
-            sent=jnp.stack(sent),
+            sent=sent,
             hop_bytes=hop_bytes,
             inflight=inflight,
             filtered=filtered,

@@ -8,18 +8,27 @@ per-peer buckets keyed by the owner's coordinate on that axis, exchanges,
 and merges what it receives. Entries that do not fit a bucket stay pending
 (backpressure — the analogue of the paper's finite router/IQ queues).
 
-``route_and_pack`` is the whole per-round shuffle in ONE sort. The previous
-pipeline paid three independent O(U log U) sorts per level-round (enqueue
-compaction, bucket packing, post-exchange segment-coalescing) and shipped
-duplicate updates over the wire before merging them. Here pending+new
-updates are sorted once by the composite key (peer, idx); that single order
-simultaneously
+``route_and_pack`` is the whole per-round shuffle in ONE sort, and with the
+packed wire format (``types.WireFormat``) the sort runs on ONE operand and
+the exchange is ONE collective:
 
-  * groups entries by destination bucket (peer ordering),
-  * makes duplicates adjacent so they coalesce *pre-exchange* with one
-    segment reduction (the paper's at-source coalescing — duplicates never
-    reach the wire, cutting both ``sent`` and ``hop_bytes``),
-  * yields in-bucket ranks and leftover compaction from plain prefix sums.
+  * the routing key ``(peer << idx_bits) | idx`` and the value's raw bits
+    are bit-packed into a single 64-bit wire word (one u64 when jax x64 is
+    live, else a key lane + value-bits lane of one i32 block) — as narrow as
+    the paper's hardware message,
+  * ONE stable sort of the packed words simultaneously groups entries by
+    destination bucket, makes duplicates adjacent so they coalesce
+    *pre-exchange* with one segment reduction (the paper's at-source
+    coalescing — duplicates never reach the wire, cutting both ``sent`` and
+    ``hop_bytes``), and yields in-bucket ranks and leftover compaction from
+    plain prefix sums,
+  * ``all_to_all_wire`` then moves the packed buckets with ONE collective
+    per level-round (enforced by a jaxpr check next to the single-sort
+    check in ``tests/helpers/engine_check.py``).
+
+When the packed format cannot represent a level (value dtype not 32-bit, or
+peer+idx overflow the 31-bit key) the same pipeline runs unpacked: a
+(peer, idx, value) multi-operand sort and a two-lane wire.
 
 Everything else in this module (``enqueue``, ``compact``) is sort-free:
 front-compaction is a cumsum + scatter, enabled by the occupancy counters
@@ -32,20 +41,83 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import NO_IDX, ReduceOp, UpdateStream
+from repro.core.types import (
+    NO_IDX,
+    ReduceOp,
+    UpdateStream,
+    WireFormat,
+    bits_val,
+    val_bits,
+)
 
-# Sort key for invalid (sentinel) entries: larger than any real index.
+# Sort key for invalid (sentinel) entries on the unpacked path: larger than
+# any real index.
 _BIG = jnp.int32(2**30)
 
 
 class RouteResult(NamedTuple):
-    packed: UpdateStream    # [P * K] bucketed: bucket j = slots [j*K, (j+1)*K)
-    leftover: UpdateStream  # [pending cap] front-compacted, counter threaded
-    n_sent: jnp.ndarray     # int32 messages packed for the wire
-    n_leftover: jnp.ndarray  # int32 entries kept pending (bucket overflow)
-    n_coalesced: jnp.ndarray  # int32 duplicates merged before the exchange
-    dropped: jnp.ndarray    # int32 entries lost to pending-queue overflow
-                            # (must stay 0; surfaced for overflow accounting)
+    wire: jnp.ndarray | tuple   # packed wire block for all_to_all_wire:
+                                #   WireFormat.word64: u64 [P, K]
+                                #   WireFormat paired: i32 [P, 2K] (key|bits)
+                                #   unpacked (fmt None): (i32 [P,K], val [P,K])
+    leftover: UpdateStream      # [pending cap] front-compacted, counter threaded
+    n_sent: jnp.ndarray         # int32 messages packed for the wire
+    n_leftover: jnp.ndarray     # int32 entries kept pending (bucket overflow)
+    n_coalesced: jnp.ndarray    # int32 duplicates merged before the exchange
+    dropped: jnp.ndarray        # int32 entries lost to pending-queue overflow
+                                # (must stay 0; surfaced for overflow accounting)
+
+
+def _segments_to_buckets(
+    idx_s, val_s, valid_s, pkey_s, head, cap_out, num_peers, bucket_cap,
+    *, op: ReduceOp, coalesce: bool, val_dtype,
+):
+    """Shared tail of the shuffle: segment-coalesce, in-bucket ranks, bucket
+    scatter destinations, leftover compaction — all prefix sums over one
+    already-sorted order. Returns (msg_val, fits, dest, leftover stream
+    pieces, counters)."""
+    total = idx_s.shape[0]
+    seg_id = jnp.cumsum(head, dtype=jnp.int32) - 1
+    if coalesce:
+        park = jnp.where(valid_s, seg_id, total)
+        if op is ReduceOp.ADD:
+            combined = jax.ops.segment_sum(val_s, park, num_segments=total + 1)
+        elif op is ReduceOp.MIN:
+            combined = jax.ops.segment_min(val_s, park, num_segments=total + 1)
+        else:
+            combined = jax.ops.segment_max(val_s, park, num_segments=total + 1)
+        msg_val = combined[jnp.where(valid_s, seg_id, total)].astype(val_dtype)
+    else:
+        msg_val = val_s
+
+    # In-bucket rank of each message: messages-before-me with my peer.
+    prev_p = jnp.concatenate([jnp.full((1,), -1, pkey_s.dtype), pkey_s[:-1]])
+    peer_change = valid_s & (pkey_s != prev_p)  # always also a head
+    seg_at_peer_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(peer_change, seg_id, -1)
+    )
+    rank = seg_id - seg_at_peer_start
+
+    fits = head & (rank < bucket_cap)
+    dest = jnp.where(fits, pkey_s * bucket_cap + rank, num_peers * bucket_cap)
+
+    # Leftovers: messages past the bucket cap, front-compacted by prefix sum.
+    left = head & ~fits
+    left_pos = jnp.cumsum(left, dtype=jnp.int32) - 1
+    ldest = jnp.where(left & (left_pos < cap_out), left_pos, cap_out)
+    left_idx = jnp.full((cap_out + 1,), NO_IDX, jnp.int32)
+    left_val = jnp.zeros((cap_out + 1,), val_dtype)
+    left_idx = left_idx.at[ldest].set(jnp.where(left, idx_s, NO_IDX))
+    left_val = left_val.at[ldest].set(jnp.where(left, msg_val, 0))
+
+    n_valid = jnp.sum(valid_s, dtype=jnp.int32)
+    n_msgs = jnp.sum(head, dtype=jnp.int32)
+    n_sent = jnp.sum(fits, dtype=jnp.int32)
+    n_left_raw = n_msgs - n_sent
+    dropped = jnp.maximum(n_left_raw - cap_out, 0)
+    n_left = jnp.minimum(n_left_raw, cap_out)
+    leftover = UpdateStream(left_idx[:cap_out], left_val[:cap_out], n_left)
+    return msg_val, fits, dest, leftover, n_sent, n_left, n_valid - n_msgs, dropped
 
 
 def route_and_pack(
@@ -57,6 +129,7 @@ def route_and_pack(
     *,
     op: ReduceOp,
     coalesce: bool = True,
+    fmt: WireFormat | None = None,
 ) -> RouteResult:
     """One level-round shuffle — enqueue + coalesce + pack — in a single sort.
 
@@ -67,6 +140,11 @@ def route_and_pack(
     without it (OWNER_DIRECT / Dalorex baseline) every update is shipped
     as-is. Leftovers (bucket overflow) come back front-compacted — and, when
     coalescing, already merged — in a stream of ``pending``'s capacity.
+
+    With ``fmt`` the shuffle runs on the packed wire word — one sort operand
+    (u64) or key + value-bits (paired i32) — and ``wire`` is the single
+    block ``all_to_all_wire`` exchanges with ONE collective. Without it the
+    unpacked (idx lane, value lane) form is used.
     """
     cap_out = pending.capacity
     if new is None:
@@ -74,84 +152,134 @@ def route_and_pack(
     else:
         idx = jnp.concatenate([pending.idx, new.idx])
         val = jnp.concatenate([pending.val, new.val])
-    total = idx.shape[0]
     valid = idx != NO_IDX
-    # Composite sort key (peer, idx): invalids park in peer-bin P and key
-    # _BIG so they sort last. ONE stable sort orders the round.
+    if fmt is not None and jnp.dtype(val.dtype).itemsize != 4:
+        fmt = None  # value bits don't fit the 32-bit word half: go unpacked
+    if fmt is not None:
+        assert fmt.num_peers == num_peers
+        return _route_packed(idx, val, valid, peer_fn, cap_out, bucket_cap,
+                             op=op, coalesce=coalesce, fmt=fmt)
+    return _route_unpacked(idx, val, valid, peer_fn, num_peers, cap_out,
+                           bucket_cap, op=op, coalesce=coalesce)
+
+
+def _route_packed(idx, val, valid, peer_fn, cap_out, bucket_cap, *,
+                  op: ReduceOp, coalesce: bool, fmt: WireFormat):
+    num_peers = fmt.num_peers
+    peer = jnp.where(valid, peer_fn(idx), num_peers).astype(jnp.int32)
+    # Routing key: (peer, idx) in one non-negative int32; invalids park in
+    # peer-bin P so they sort last.
+    key = jnp.where(valid, (peer << fmt.idx_bits) | idx, fmt.invalid_key)
+    if fmt.word64:
+        # ONE sort of ONE operand: the full 64-bit wire word. Value bits ride
+        # in the low half as payload; (peer, idx) order comes from the high
+        # half, so duplicates stay adjacent regardless of their values.
+        word = (key.astype(jnp.uint64) << 32) | val_bits(val).astype(jnp.uint64)
+        (word_s,) = jax.lax.sort((word,), num_keys=1)
+        key_s = (word_s >> 32).astype(jnp.int32)
+        val_s = bits_val(word_s.astype(jnp.uint32), val.dtype)
+    else:
+        # Same word split into two i32 lanes; still ONE sort primitive.
+        bits = val_bits(val).astype(jnp.int32)
+        key_s, bits_s = jax.lax.sort((key, bits), num_keys=1)
+        val_s = bits_val(bits_s, val.dtype)
+    valid_s = key_s < fmt.invalid_key
+    idx_s = key_s & fmt.idx_mask
+    pkey_s = key_s >> fmt.idx_bits
+
+    prev_k = jnp.concatenate([jnp.full((1,), -1, key_s.dtype), key_s[:-1]])
+    if coalesce:
+        head = valid_s & (key_s != prev_k)  # first entry of each (peer, idx) run
+    else:
+        head = valid_s  # every update is its own message
+
+    (msg_val, fits, dest, leftover,
+     n_sent, n_left, n_coal, dropped) = _segments_to_buckets(
+        idx_s, val_s, valid_s, pkey_s, head, cap_out, num_peers, bucket_cap,
+        op=op, coalesce=coalesce, val_dtype=val.dtype)
+
+    inv_key = jnp.int32(fmt.invalid_key)
+    if fmt.word64:
+        word_msg = (key_s.astype(jnp.uint64) << 32) | \
+            val_bits(msg_val).astype(jnp.uint64)
+        wire = jnp.full((num_peers * bucket_cap + 1,),
+                        jnp.uint64(fmt.invalid_key) << 32, jnp.uint64)
+        wire = wire.at[dest].set(jnp.where(
+            fits, word_msg, jnp.uint64(fmt.invalid_key) << 32))
+        wire = wire[:-1].reshape(num_peers, bucket_cap)
+    else:
+        kl = jnp.full((num_peers * bucket_cap + 1,), inv_key, jnp.int32)
+        vl = jnp.zeros((num_peers * bucket_cap + 1,), jnp.int32)
+        kl = kl.at[dest].set(jnp.where(fits, key_s, inv_key))
+        vl = vl.at[dest].set(jnp.where(
+            fits, val_bits(msg_val).astype(jnp.int32), 0))
+        wire = jnp.concatenate(
+            [kl[:-1].reshape(num_peers, bucket_cap),
+             vl[:-1].reshape(num_peers, bucket_cap)], axis=1)
+    return RouteResult(wire=wire, leftover=leftover, n_sent=n_sent,
+                       n_leftover=n_left, n_coalesced=n_coal, dropped=dropped)
+
+
+def _route_unpacked(idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
+                    *, op: ReduceOp, coalesce: bool):
+    """Fallback shuffle for levels the packed word cannot represent: one
+    multi-operand sort by (peer, idx), two-lane wire."""
     pkey = jnp.where(valid, peer_fn(idx), num_peers).astype(jnp.int32)
     skey = jnp.where(valid, idx, _BIG)
     pkey_s, idx_s, val_s = jax.lax.sort((pkey, skey, val), num_keys=2)
     valid_s = pkey_s < num_peers
-
-    pos = jnp.arange(total, dtype=jnp.int32)
     prev_p = jnp.concatenate([jnp.full((1,), -1, pkey_s.dtype), pkey_s[:-1]])
     prev_i = jnp.concatenate([jnp.full((1,), -2, idx_s.dtype), idx_s[:-1]])
     if coalesce:
-        # Message heads: first entry of each (peer, idx) run.
         head = valid_s & ((pkey_s != prev_p) | (idx_s != prev_i))
     else:
-        head = valid_s  # every update is its own message
-    seg_id = jnp.cumsum(head.astype(jnp.int32)) - 1
-    if coalesce:
-        park = jnp.where(valid_s, seg_id, total)
-        if op is ReduceOp.ADD:
-            combined = jax.ops.segment_sum(val_s, park, num_segments=total + 1)
-        elif op is ReduceOp.MIN:
-            combined = jax.ops.segment_min(val_s, park, num_segments=total + 1)
-        else:
-            combined = jax.ops.segment_max(val_s, park, num_segments=total + 1)
-        msg_val = combined[jnp.where(valid_s, seg_id, total)].astype(val.dtype)
-    else:
-        msg_val = val_s
+        head = valid_s
 
-    # In-bucket rank of each message: messages-before-me with my peer.
-    peer_change = valid_s & (pkey_s != prev_p)  # always also a head
-    seg_at_peer_start = jax.lax.associative_scan(
-        jnp.maximum, jnp.where(peer_change, seg_id, -1)
-    )
-    rank = seg_id - seg_at_peer_start
+    (msg_val, fits, dest, leftover,
+     n_sent, n_left, n_coal, dropped) = _segments_to_buckets(
+        idx_s, val_s, valid_s, pkey_s, head, cap_out, num_peers, bucket_cap,
+        op=op, coalesce=coalesce, val_dtype=val.dtype)
 
-    fits = head & (rank < bucket_cap)
-    dest = jnp.where(fits, pkey_s * bucket_cap + rank, num_peers * bucket_cap)
     packed_idx = jnp.full((num_peers * bucket_cap + 1,), NO_IDX, jnp.int32)
     packed_val = jnp.zeros((num_peers * bucket_cap + 1,), val.dtype)
     packed_idx = packed_idx.at[dest].set(jnp.where(fits, idx_s, NO_IDX))
     packed_val = packed_val.at[dest].set(jnp.where(fits, msg_val, 0))
-
-    # Leftovers: messages past the bucket cap, front-compacted by prefix sum.
-    left = head & ~fits
-    left_pos = jnp.cumsum(left.astype(jnp.int32)) - 1
-    ldest = jnp.where(left & (left_pos < cap_out), left_pos, cap_out)
-    left_idx = jnp.full((cap_out + 1,), NO_IDX, jnp.int32)
-    left_val = jnp.zeros((cap_out + 1,), val.dtype)
-    left_idx = left_idx.at[ldest].set(jnp.where(left, idx_s, NO_IDX))
-    left_val = left_val.at[ldest].set(jnp.where(left, msg_val, 0))
-
-    n_valid = jnp.sum(valid_s.astype(jnp.int32))
-    n_msgs = jnp.sum(head.astype(jnp.int32))
-    n_sent = jnp.sum(fits.astype(jnp.int32))
-    n_left_raw = n_msgs - n_sent
-    dropped = jnp.maximum(n_left_raw - cap_out, 0)
-    n_left = jnp.minimum(n_left_raw, cap_out)
-    return RouteResult(
-        packed=UpdateStream(packed_idx[:-1], packed_val[:-1]),
-        leftover=UpdateStream(left_idx[:cap_out], left_val[:cap_out], n_left),
-        n_sent=n_sent,
-        n_leftover=n_left,
-        n_coalesced=n_valid - n_msgs,
-        dropped=dropped,
-    )
+    wire = (packed_idx[:-1].reshape(num_peers, bucket_cap),
+            packed_val[:-1].reshape(num_peers, bucket_cap))
+    return RouteResult(wire=wire, leftover=leftover, n_sent=n_sent,
+                       n_leftover=n_left, n_coalesced=n_coal, dropped=dropped)
 
 
-def all_to_all_stream(packed: UpdateStream, axis_name, num_peers: int,
-                      bucket_cap: int) -> UpdateStream:
-    """Exchange packed buckets along one mesh axis. Returns the [P*K]
-    entries received (bucket j = what peer j sent me)."""
-    idx = packed.idx.reshape(num_peers, bucket_cap)
-    val = packed.val.reshape(num_peers, bucket_cap)
-    ridx = jax.lax.all_to_all(idx, axis_name, split_axis=0, concat_axis=0)
-    rval = jax.lax.all_to_all(val, axis_name, split_axis=0, concat_axis=0)
-    return UpdateStream(ridx.reshape(-1), rval.reshape(-1))
+def wire_to_stream(wire, fmt: WireFormat | None, dtype=jnp.float32) -> UpdateStream:
+    """Unpack a wire block (local or received) into a flat [P*K] stream."""
+    if fmt is None:
+        idx, val = wire
+        return UpdateStream(idx.reshape(-1), val.reshape(-1))
+    if fmt.word64:
+        word = wire.reshape(-1)
+        key = (word >> 32).astype(jnp.int32)
+        val = bits_val(word.astype(jnp.uint32), dtype)
+    else:
+        k = wire.shape[1] // 2
+        key = wire[:, :k].reshape(-1)
+        val = bits_val(wire[:, k:].reshape(-1), dtype)
+    live = key < fmt.invalid_key
+    return UpdateStream(jnp.where(live, key & fmt.idx_mask, NO_IDX),
+                        jnp.where(live, val, 0))
+
+
+def all_to_all_wire(wire, axis_name, fmt: WireFormat | None,
+                    dtype=jnp.float32) -> UpdateStream:
+    """Exchange packed buckets along one mesh axis — ONE collective on the
+    packed wire block (two only on the unpacked fallback). Returns the
+    [P*K] entries received (bucket j = what peer j sent me)."""
+    if fmt is None:
+        idx, val = wire
+        ridx = jax.lax.all_to_all(idx, axis_name, split_axis=0, concat_axis=0)
+        rval = jax.lax.all_to_all(val, axis_name, split_axis=0, concat_axis=0)
+        return wire_to_stream((ridx, rval), None, dtype)
+    recv = jax.lax.all_to_all(wire, axis_name, split_axis=0, concat_axis=0)
+    return wire_to_stream(recv, fmt, dtype)
 
 
 def enqueue(pending: UpdateStream, new: UpdateStream) -> tuple[UpdateStream, jnp.ndarray]:
@@ -170,13 +298,13 @@ def enqueue(pending: UpdateStream, new: UpdateStream) -> tuple[UpdateStream, jnp
     cap = pending.capacity
     base = pending.count()
     valid = new.idx != NO_IDX
-    slot = base + jnp.cumsum(valid.astype(jnp.int32)) - 1
+    slot = base + jnp.cumsum(valid, dtype=jnp.int32) - 1
     dest = jnp.where(valid & (slot < cap), slot, cap)
     idx = jnp.concatenate([pending.idx, jnp.full((1,), NO_IDX, jnp.int32)])
     val = jnp.concatenate([pending.val, jnp.zeros((1,), pending.val.dtype)])
     idx = idx.at[dest].set(jnp.where(valid, new.idx, NO_IDX))
     val = val.at[dest].set(jnp.where(valid, new.val, 0))
-    n_new = jnp.sum(valid.astype(jnp.int32))
+    n_new = jnp.sum(valid, dtype=jnp.int32)
     dropped = jnp.maximum(base + n_new - cap, 0)
     n = jnp.minimum(base + n_new, cap)
     return UpdateStream(idx[:cap], val[:cap], n), dropped
@@ -189,11 +317,11 @@ def compact(stream: UpdateStream, cap: int | None = None) -> UpdateStream:
     """
     out_cap = stream.capacity if cap is None else cap
     valid = stream.idx != NO_IDX
-    slot = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    slot = jnp.cumsum(valid, dtype=jnp.int32) - 1
     dest = jnp.where(valid & (slot < out_cap), slot, out_cap)
     idx = jnp.full((out_cap + 1,), NO_IDX, jnp.int32).at[dest].set(
         jnp.where(valid, stream.idx, NO_IDX))
     val = jnp.zeros((out_cap + 1,), stream.val.dtype).at[dest].set(
         jnp.where(valid, stream.val, 0))
-    n = jnp.minimum(jnp.sum(valid.astype(jnp.int32)), out_cap)
+    n = jnp.minimum(jnp.sum(valid, dtype=jnp.int32), out_cap)
     return UpdateStream(idx[:out_cap], val[:out_cap], n)

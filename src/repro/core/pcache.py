@@ -71,7 +71,7 @@ def _segment_coalesce(stream: UpdateStream, op: ReduceOp) -> tuple[UpdateStream,
     # Segment boundaries: first occurrence of each index.
     prev = jnp.concatenate([jnp.full((1,), -2, key_sorted.dtype), key_sorted[:-1]])
     head = (key_sorted != prev) & valid
-    seg_id = jnp.cumsum(head.astype(jnp.int32)) - 1  # [-1 for leading invalids]
+    seg_id = jnp.cumsum(head, dtype=jnp.int32) - 1  # [-1 for leading invalids]
     seg_id = jnp.where(valid, seg_id, u)  # park invalids in an overflow bin
     if op is ReduceOp.ADD:
         combined = jax.ops.segment_sum(val_sorted, seg_id, num_segments=u + 1)
@@ -79,7 +79,7 @@ def _segment_coalesce(stream: UpdateStream, op: ReduceOp) -> tuple[UpdateStream,
         combined = jax.ops.segment_min(val_sorted, seg_id, num_segments=u + 1)
     else:
         combined = jax.ops.segment_max(val_sorted, seg_id, num_segments=u + 1)
-    n_unique = jnp.sum(head.astype(jnp.int32))
+    n_unique = jnp.sum(head, dtype=jnp.int32)
     # Scatter unique entries densely to the front of a fresh stream.
     slots = jnp.where(head, seg_id, u)
     out_idx = jnp.full((u + 1,), NO_IDX, dtype=jnp.int32).at[slots].set(
@@ -180,7 +180,7 @@ def cache_pass(
         # the delta (not the running sum) to avoid double counting.
         e_idx = jnp.where(emit, idx, _NOI)
         e_val = jnp.where(emit, val, jnp.zeros_like(val))
-        n_filtered = jnp.sum((hit & ~improved).astype(jnp.int32))
+        n_filtered = jnp.sum(hit & ~improved, dtype=jnp.int32)
     else:  # WRITE_BACK
         # Hits coalesce silently; winners evict the (post-coalesce) occupant
         # and install their combined value; losers pass through.
@@ -222,7 +222,7 @@ def merge(
     the SPMD analogue of the paper's selective cascading (see
     ``cache_pass``).
     """
-    n_raw = jnp.sum((stream.idx != NO_IDX).astype(jnp.int32))
+    n_raw = jnp.sum(stream.idx != NO_IDX, dtype=jnp.int32)
     if coalesce:
         stream, n_unique = _segment_coalesce(stream, op)
     else:
@@ -232,7 +232,7 @@ def merge(
         op=op, policy=policy, selective=selective,
     )
     out = UpdateStream(e_idx, e_val)
-    n_out = jnp.sum((out.idx != NO_IDX).astype(jnp.int32))
+    n_out = jnp.sum(out.idx != NO_IDX, dtype=jnp.int32)
     stats = MergeStats(
         n_in=n_raw,
         n_out=n_out,
@@ -307,7 +307,7 @@ def merge_seq(
     tags, vals, e_idx, e_val, n_e, n_filt = jax.lax.fori_loop(
         0, u, body, (state.tags, state.vals, e_idx0, e_val0, jnp.int32(0), jnp.int32(0))
     )
-    n_raw = jnp.sum((stream.idx != NO_IDX).astype(jnp.int32))
+    n_raw = jnp.sum(stream.idx != NO_IDX, dtype=jnp.int32)
     stats = MergeStats(n_in=n_raw, n_out=n_e, n_coalesced=jnp.int32(0), n_filtered=n_filt)
     return PCacheState(tags, vals), UpdateStream(e_idx, e_val), stats
 

@@ -15,6 +15,7 @@ import dataclasses
 import enum
 from typing import NamedTuple, Sequence
 
+import jax
 import jax.numpy as jnp
 
 # Sentinel index marking an inactive update slot / empty cache line.
@@ -117,7 +118,7 @@ class UpdateStream(NamedTuple):
         """Number of valid entries (O(1) when the counter is threaded)."""
         if self.n is not None:
             return self.n
-        return jnp.sum((self.idx != NO_IDX).astype(jnp.int32))
+        return jnp.sum(self.idx != NO_IDX, dtype=jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,6 +169,80 @@ class TascadeConfig:
     def all_axes(self) -> tuple[str, ...]:
         """Leaf-to-root order of exchange axes."""
         return tuple(self.region_axes) + tuple(self.cascade_axes)
+
+
+# --------------------------------------------------------------- wire format
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """Static single-word wire layout for one exchange level.
+
+    A cascaded-update message is one 64-bit word: the high 32 bits are the
+    routing key ``(peer << idx_bits) | idx`` (peer = destination bucket on
+    this level, idx = global element index), the low 32 bits are the value's
+    raw IEEE-754 bits. Two physical realizations, chosen statically:
+
+      word64=True  -- one ``uint64`` array (requires jax x64); the level-round
+                      sort runs on a SINGLE operand and the wire is a single
+                      [P, K] u64 ``all_to_all``.
+      word64=False -- the same word split into two i32 lanes (key lane +
+                      value-bits lane) laid out as one [P, 2K] i32 block, so
+                      the wire is still ONE collective; the sort carries the
+                      key plus one payload operand.
+
+    Either way a message costs 8 wire bytes (``engine.MSG_BYTES``). Invalid
+    slots carry ``invalid_key`` (peer field == num_peers), which also makes
+    padding sort after every live message.
+
+    Float caveat: the value bits ride in the word's low half purely as
+    payload — messages are grouped by the high (key) half, so the value's
+    bit pattern never influences routing, coalescing, or which duplicate
+    wins (duplicates are segment-combined under the reduction op). Values
+    round-trip bit-exactly through ``bitcast``; no precision is lost.
+    """
+
+    idx_bits: int
+    num_peers: int
+    word64: bool
+
+    @property
+    def idx_mask(self) -> int:
+        return (1 << self.idx_bits) - 1
+
+    @property
+    def invalid_key(self) -> int:
+        return self.num_peers << self.idx_bits
+
+
+def x64_live() -> bool:
+    """Whether 64-bit array types are enabled in this process."""
+    return bool(jax.config.jax_enable_x64)
+
+
+def wire_format_for(num_peers: int, num_elements: int,
+                    dtype=jnp.float32) -> WireFormat | None:
+    """Resolve the packed wire layout for a level, or None if the packed
+    format cannot represent it (value dtype not 32-bit, or peer+idx do not
+    fit the 31-bit key) — callers then fall back to the unpacked path."""
+    if jnp.dtype(dtype).itemsize != 4:
+        return None
+    idx_bits = max(1, int(num_elements - 1).bit_length())
+    # key = (peer << idx_bits) | idx must stay a non-negative int32,
+    # including the invalid bin at peer == num_peers.
+    if (num_peers + 1) << idx_bits > 2**31:
+        return None
+    return WireFormat(idx_bits=idx_bits, num_peers=num_peers,
+                      word64=x64_live())
+
+
+def val_bits(val: jnp.ndarray) -> jnp.ndarray:
+    """Raw IEEE bits of a 32-bit value array, as uint32 (zero-extendable)."""
+    return jax.lax.bitcast_convert_type(val, jnp.uint32)
+
+
+def bits_val(bits: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Inverse of ``val_bits`` (uint32/int32 bit pattern -> value dtype)."""
+    return jax.lax.bitcast_convert_type(bits.astype(jnp.uint32), dtype)
 
 
 def make_pcache(num_lines: int, op: ReduceOp, dtype=jnp.float32) -> PCacheState:

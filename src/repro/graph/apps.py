@@ -44,6 +44,25 @@ class RunMetrics(NamedTuple):
     edges_relaxed: jnp.ndarray  # int64-ish f32 count of generated updates
 
 
+# Compiled-app cache: the static plan (mesh, config, shard shapes, app tag)
+# fully determines the traced program; graph/vector payloads are passed as
+# call arguments. Re-jitting per run paid a full retrace + XLA compile on
+# EVERY invocation — the dominant cost of a run at bench scale — so runs
+# after the first now reuse the executable (BFS shares SSSP's: unit weights
+# are data, not trace constants).
+_JIT_CACHE: dict = {}
+_JIT_CACHE_MAX = 64  # FIFO-bounded: each entry retains an XLA executable
+
+
+def _cached(key, build):
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        if len(_JIT_CACHE) >= _JIT_CACHE_MAX:
+            _JIT_CACHE.pop(next(iter(_JIT_CACHE)))
+        fn = _JIT_CACHE[key] = build()
+    return fn
+
+
 def _axes(mesh):
     return tuple(mesh.axis_names)
 
@@ -64,57 +83,121 @@ def _wb_cfg(cfg: TascadeConfig) -> TascadeConfig:
 # ----------------------------------------------------- label-correcting apps
 
 def _label_correcting(mesh, sg: ShardedGraph, cfg: TascadeConfig, *,
-                      init_fn, cand_fn, max_epochs: int):
-    """Shared driver for BFS / SSSP / WCC (write-through min)."""
+                      init_fn, cand_fn, max_epochs: int,
+                      worklist_cap: int | None = None,
+                      cache_key=None):
+    """Shared driver for BFS / SSSP / WCC (write-through min).
+
+    Frontier-proportional worklists: instead of masking the full edge list
+    each epoch (O(E) work regardless of frontier size), the frontier
+    vertices' out-degrees are prefix-summed and their out-edges gathered
+    through the shard's CSR ``row_ptr`` into a fixed-capacity worklist
+    stream, so the engine's level-0 shuffle sees frontier edges, not E.
+    ``worklist_cap`` bounds the stream (default ``sg.emax``, which can never
+    truncate since a device's frontier out-degree sum is at most its edge
+    count); with a smaller cap, vertices whose edges did not fit stay in the
+    frontier with a per-vertex *progress cursor* and resume from their first
+    unprocessed edge next epoch (a vertex that improves again resets its
+    cursor for a full re-relax). Truncation therefore only stretches the
+    epoch schedule, never loses edges — even for vertices whose out-degree
+    exceeds the whole worklist.
+    """
     cfg = _wt_cfg(cfg)
+    wcap = sg.emax if worklist_cap is None else min(worklist_cap, sg.emax)
+
+    def build():
+        return _build_label_correcting(
+            mesh, sg, cfg, init_fn=init_fn, cand_fn=cand_fn,
+            max_epochs=max_epochs, wcap=wcap)
+
+    if cache_key is None:
+        # unknown init/cand closures: don't risk cross-caller collisions
+        return build()
+    return _cached(("label", cache_key, mesh, cfg, sg.vpad, sg.shard,
+                    sg.emax, max_epochs, wcap), build)
+
+
+def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
+                            wcap):
     geom = MeshGeom.from_mesh(mesh, sg.vpad)
-    engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=sg.emax)
+    engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=wcap)
     axes = _axes(mesh)
     sync = cfg.sync_merge
+    # Close over shape scalars only: capturing ``sg`` itself would pin the
+    # full numpy edge arrays inside the long-lived _JIT_CACHE entry.
+    n_shard, n_emax = sg.shard, sg.emax
 
-    def shard_fn(src_local, dst, weight):
-        src_local = src_local.reshape(-1)
+    def shard_fn(row_ptr, dst, weight, seed):
+        # ``seed`` (the root/source vertex) is a traced scalar, not a trace
+        # constant: one compiled executable serves every source vertex, so
+        # root sweeps don't recompile per root.
+        row_ptr = row_ptr.reshape(-1)
         dst = dst.reshape(-1)
         weight = weight.reshape(-1)
+        deg_v = row_ptr[1:] - row_ptr[:-1]  # int32[shard] local out-degrees
+        slots = jnp.arange(wcap, dtype=jnp.int32)
         base = geom.my_base()
-        dist0, frontier0 = init_fn(base, sg.shard)
+        dist0, frontier0 = init_fn(base, n_shard, seed)
         state0 = engine.init_state()
 
         def cond(c):
-            _, _, _, active, epoch, _ = c
+            _, _, _, _, active, epoch, _ = c
             return (active > 0) & (epoch < max_epochs)
 
         def body(c):
-            state, dist, frontier, _, epoch, acc = c
-            in_f = frontier[jnp.clip(src_local, 0, sg.shard - 1)]
-            ok = (src_local >= 0) & in_f
-            cand = cand_fn(dist, src_local, weight)
+            state, dist, frontier, skip, _, epoch, acc = c
+            # CSR-driven active-edge gather: prefix-sum the frontier
+            # vertices' REMAINING degrees (the cursor ``skip`` marks edges
+            # already relaxed on carried vertices), then map each worklist
+            # slot back to its (vertex, edge) pair — O(wcap log shard),
+            # not O(E).
+            adeg = jnp.where(frontier, deg_v - skip, 0)
+            cum = jnp.cumsum(adeg)               # inclusive; cum[-1] = total
+            total = cum[-1]
+            start = cum - adeg                   # worklist offset per vertex
+            u = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32)
+            uc = jnp.clip(u, 0, n_shard - 1)
+            e = jnp.clip(row_ptr[uc] + skip[uc] + (slots - start[uc]),
+                         0, n_emax - 1)
+            ok = slots < total
+            cand = cand_fn(dist, uc, weight[e])
             new = UpdateStream(
-                jnp.where(ok, dst, NO_IDX),
+                jnp.where(ok, dst[e], NO_IDX),
                 jnp.where(ok, cand, 0.0),
             )
+            # Vertices whose edge range spilled past the worklist stay in
+            # the frontier and resume at their cursor next epoch.
+            carried = frontier & (cum > wcap)
+            processed = jnp.clip(jnp.minimum(cum, wcap) - start, 0, None)
             old = dist
             state, dist, stats = engine.step(
                 state, dist, new, drain=sync, flush=False
             )
-            frontier = dist < old
-            n_relaxed = jnp.sum(ok.astype(jnp.int32))
+            improved = dist < old
+            # An improved vertex must re-relax ALL its edges with the new
+            # label, so its cursor resets; an untouched carried vertex
+            # advances past what this epoch covered.
+            skip = jnp.where(carried & ~improved, skip + processed, 0)
+            frontier = improved | carried
+            n_relaxed = jnp.minimum(total, wcap)
             active = jax.lax.psum(
-                jnp.sum(frontier.astype(jnp.int32)) + stats.inflight, axes
+                jnp.sum(frontier, dtype=jnp.int32) + stats.inflight, axes
             )
             acc = (
-                acc[0] + jnp.sum(stats.sent),
+                acc[0] + jnp.sum(stats.sent, dtype=jnp.int32),
                 acc[1] + stats.hop_bytes,
                 acc[2] + stats.filtered,
                 acc[3] + stats.coalesced,
                 acc[4] + n_relaxed.astype(jnp.float32),
             )
-            return state, dist, frontier, active, epoch + 1, acc
+            return state, dist, frontier, skip, active, epoch + 1, acc
 
         acc0 = (jnp.int32(0), jnp.float32(0), jnp.int32(0), jnp.int32(0),
                 jnp.float32(0))
-        state, dist, _, active, epoch, acc = jax.lax.while_loop(
-            cond, body, (state0, dist0, frontier0, jnp.int32(1), jnp.int32(0), acc0)
+        skip0 = jnp.zeros((n_shard,), jnp.int32)
+        state, dist, _, _, active, epoch, acc = jax.lax.while_loop(
+            cond, body,
+            (state0, dist0, frontier0, skip0, jnp.int32(1), jnp.int32(0), acc0)
         )
         m = RunMetrics(
             epochs=epoch,
@@ -128,41 +211,43 @@ def _label_correcting(mesh, sg: ShardedGraph, cfg: TascadeConfig, *,
         return dist, m
 
     a = _axes(mesh)
-    fn = compat.shard_map(
+    return jax.jit(compat.shard_map(
         shard_fn, mesh=mesh,
-        in_specs=_graph_specs(mesh),
+        in_specs=_graph_specs(mesh) + (P(),),  # replicated root scalar
         out_specs=(P(a), RunMetrics(*([P()] * 7))),
         check_vma=False,
-    )
-    return jax.jit(fn)
+    ))
 
 
 def run_sssp(mesh, sg: ShardedGraph, root: int, cfg: TascadeConfig,
-             max_epochs: int = 256):
-    def init(base, shard):
+             max_epochs: int = 256, worklist_cap: int | None = None):
+    def init(base, shard, seed):
         local = jnp.arange(shard) + base
-        dist = jnp.where(local == root, 0.0, jnp.inf).astype(jnp.float32)
-        frontier = local == root
+        dist = jnp.where(local == seed, 0.0, jnp.inf).astype(jnp.float32)
+        frontier = local == seed
         return dist, frontier
 
     def cand(dist, src_local, w):
         return dist[jnp.clip(src_local, 0, dist.shape[0] - 1)] + w
 
     fn = _label_correcting(mesh, sg, cfg, init_fn=init, cand_fn=cand,
-                           max_epochs=max_epochs)
-    return fn(jnp.asarray(sg.src_local), jnp.asarray(sg.dst),
-              jnp.asarray(sg.weight))
+                           max_epochs=max_epochs, worklist_cap=worklist_cap,
+                           cache_key="sssp")
+    return fn(jnp.asarray(sg.row_ptr), jnp.asarray(sg.dst),
+              jnp.asarray(sg.weight), jnp.int32(root))
 
 
 def run_bfs(mesh, sg: ShardedGraph, root: int, cfg: TascadeConfig,
-            max_epochs: int = 256):
+            max_epochs: int = 256, worklist_cap: int | None = None):
     sg_unit = dataclasses.replace(sg, weight=np.ones_like(sg.weight))
-    return run_sssp(mesh, sg_unit, root, cfg, max_epochs)
+    return run_sssp(mesh, sg_unit, root, cfg, max_epochs, worklist_cap)
 
 
-def run_wcc(mesh, sg: ShardedGraph, cfg: TascadeConfig, max_epochs: int = 256):
+def run_wcc(mesh, sg: ShardedGraph, cfg: TascadeConfig, max_epochs: int = 256,
+            worklist_cap: int | None = None):
     """Graph must be symmetrized (edges both ways)."""
-    def init(base, shard):
+    def init(base, shard, seed):
+        del seed  # label propagation has no source vertex
         local = (jnp.arange(shard) + base).astype(jnp.float32)
         # padding vertices (>= true V) keep their own id and never propagate
         return local, jnp.ones((shard,), bool)
@@ -172,9 +257,10 @@ def run_wcc(mesh, sg: ShardedGraph, cfg: TascadeConfig, max_epochs: int = 256):
         return dist[jnp.clip(src_local, 0, dist.shape[0] - 1)]
 
     fn = _label_correcting(mesh, sg, cfg, init_fn=init, cand_fn=cand,
-                           max_epochs=max_epochs)
-    return fn(jnp.asarray(sg.src_local), jnp.asarray(sg.dst),
-              jnp.asarray(sg.weight))
+                           max_epochs=max_epochs, worklist_cap=worklist_cap,
+                           cache_key="wcc")
+    return fn(jnp.asarray(sg.row_ptr), jnp.asarray(sg.dst),
+              jnp.asarray(sg.weight), jnp.int32(0))
 
 
 # --------------------------------------------------------------- add apps
@@ -184,17 +270,26 @@ def run_pagerank(mesh, sg: ShardedGraph, cfg: TascadeConfig, iters: int = 20,
     """Power iteration; per-iteration sums delivered via the write-back tree
     (sparse path) or the dense psum_scatter tree (density-adaptive path)."""
     cfg = _wb_cfg(cfg)
+    fn = _cached(("pagerank", mesh, cfg, iters, d, dense, sg.num_vertices,
+                  sg.vpad, sg.shard, sg.emax),
+                 lambda: _build_pagerank(mesh, sg, cfg, iters, d, dense))
+    return fn(jnp.asarray(sg.src_local), jnp.asarray(sg.dst),
+              jnp.asarray(sg.weight), jnp.asarray(sg.deg))
+
+
+def _build_pagerank(mesh, sg, cfg, iters, d, dense):
     geom = MeshGeom.from_mesh(mesh, sg.vpad)
     engine = TascadeEngine(cfg, geom, ReduceOp.ADD, update_cap=sg.emax)
     axes = _axes(mesh)
     n = sg.num_vertices
+    n_shard, n_vpad = sg.shard, sg.vpad  # scalars only; don't capture sg
 
     def shard_fn(src_local, dst, weight, deg):
         src_local = src_local.reshape(-1)
         dst = dst.reshape(-1)
         deg = deg.reshape(-1)
         ok = src_local >= 0
-        srcc = jnp.clip(src_local, 0, sg.shard - 1)
+        srcc = jnp.clip(src_local, 0, n_shard - 1)
 
         def body(carry, _):
             rank, acc = carry
@@ -202,14 +297,14 @@ def run_pagerank(mesh, sg: ShardedGraph, cfg: TascadeConfig, iters: int = 20,
             if dense:
                 part = jax.ops.segment_sum(
                     jnp.where(ok, contrib, 0.0),
-                    jnp.where(ok, dst, sg.vpad),
-                    num_segments=sg.vpad + 1,
+                    jnp.where(ok, dst, n_vpad),
+                    num_segments=n_vpad + 1,
                 )[:-1]
                 sums = engine.dense_reduce(part)
                 stats_sent = jnp.int32(0)
                 # dense-tree traffic: per axis stage, each device moves
                 # (P-1)/P of its current block over ~P/4 mean torus hops.
-                size = float(sg.vpad)
+                size = float(n_vpad)
                 hb = 0.0
                 for ax in geom.axis_names:
                     pa = geom.axis_size(ax)
@@ -223,14 +318,14 @@ def run_pagerank(mesh, sg: ShardedGraph, cfg: TascadeConfig, iters: int = 20,
                 new = UpdateStream(jnp.where(ok, dst, NO_IDX),
                                   jnp.where(ok, contrib, 0.0))
                 state = engine.init_state()
-                sums = jnp.zeros((sg.shard,), jnp.float32)
+                sums = jnp.zeros((n_shard,), jnp.float32)
                 # One drain+flush step delivers every contribution (the
                 # engine's early-exit loops drain each level until its queue
                 # is globally empty) — no outer sweep loop, no global psum
                 # spent on dead rounds.
                 state, sums, stats = engine.step(state, sums, new,
                                                  drain=True, flush=True)
-                stats_sent = jnp.sum(stats.sent)
+                stats_sent = jnp.sum(stats.sent, dtype=jnp.int32)
                 hopb = stats.hop_bytes
                 filtered, coalesced = stats.filtered, stats.coalesced
                 overflow = state.overflow
@@ -239,7 +334,7 @@ def run_pagerank(mesh, sg: ShardedGraph, cfg: TascadeConfig, iters: int = 20,
                    acc[3] + coalesced, acc[4] + overflow)
             return (rank, acc), None
 
-        rank0 = jnp.full((sg.shard,), 1.0 / n, jnp.float32)
+        rank0 = jnp.full((n_shard,), 1.0 / n, jnp.float32)
         acc0 = (jnp.int32(0), jnp.float32(0), jnp.int32(0), jnp.int32(0),
                 jnp.int32(0))
         (rank, acc), _ = jax.lax.scan(body, (rank0, acc0), None, length=iters)
@@ -255,24 +350,30 @@ def run_pagerank(mesh, sg: ShardedGraph, cfg: TascadeConfig, iters: int = 20,
         return rank, m
 
     a = _axes(mesh)
-    fn = compat.shard_map(
+    return jax.jit(compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=_graph_specs(mesh) + (P(a, None),),
         out_specs=(P(a), RunMetrics(*([P()] * 7))),
         check_vma=False,
-    )
-    return jax.jit(fn)(jnp.asarray(sg.src_local), jnp.asarray(sg.dst),
-                       jnp.asarray(sg.weight), jnp.asarray(sg.deg))
+    ))
 
 
 def run_spmv(mesh, sg: ShardedGraph, x: np.ndarray, cfg: TascadeConfig):
     """y[dst] += w * x[src]; x owner-sharded, one write-back delivery."""
     cfg = _wb_cfg(cfg)
+    xpad = np.zeros((sg.vpad,), np.float32)
+    xpad[: x.shape[0]] = x
+    fn = _cached(("spmv", mesh, cfg, sg.vpad, sg.shard, sg.emax),
+                 lambda: _build_spmv(mesh, sg, cfg))
+    return fn(jnp.asarray(sg.src_local), jnp.asarray(sg.dst),
+              jnp.asarray(sg.weight), jnp.asarray(xpad))
+
+
+def _build_spmv(mesh, sg, cfg):
     geom = MeshGeom.from_mesh(mesh, sg.vpad)
     engine = TascadeEngine(cfg, geom, ReduceOp.ADD, update_cap=sg.emax)
     axes = _axes(mesh)
-    xpad = np.zeros((sg.vpad,), np.float32)
-    xpad[: x.shape[0]] = x
+    n_shard = sg.shard  # scalar only; don't capture sg in the cached closure
 
     def shard_fn(src_local, dst, weight, x_shard):
         src_local = src_local.reshape(-1)
@@ -280,16 +381,16 @@ def run_spmv(mesh, sg: ShardedGraph, x: np.ndarray, cfg: TascadeConfig):
         weight = weight.reshape(-1)
         x_shard = x_shard.reshape(-1)
         ok = src_local >= 0
-        contrib = weight * x_shard[jnp.clip(src_local, 0, sg.shard - 1)]
+        contrib = weight * x_shard[jnp.clip(src_local, 0, n_shard - 1)]
         new = UpdateStream(jnp.where(ok, dst, NO_IDX),
                            jnp.where(ok, contrib, 0.0))
-        y = jnp.zeros((sg.shard,), jnp.float32)
+        y = jnp.zeros((n_shard,), jnp.float32)
         state = engine.init_state()
         # Single drain+flush delivery (early-exit drains make it complete).
         state, y, stats = engine.step(state, y, new, drain=True, flush=True)
         m = RunMetrics(
             epochs=jnp.int32(1),
-            sent_total=jax.lax.psum(jnp.sum(stats.sent), axes),
+            sent_total=jax.lax.psum(jnp.sum(stats.sent, dtype=jnp.int32), axes),
             hop_bytes=jax.lax.psum(stats.hop_bytes, axes),
             filtered=jax.lax.psum(stats.filtered, axes),
             coalesced=jax.lax.psum(stats.coalesced, axes),
@@ -299,14 +400,12 @@ def run_spmv(mesh, sg: ShardedGraph, x: np.ndarray, cfg: TascadeConfig):
         return y, m
 
     a = _axes(mesh)
-    fn = compat.shard_map(
+    return jax.jit(compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=_graph_specs(mesh) + (P(a),),
         out_specs=(P(a), RunMetrics(*([P()] * 7))),
         check_vma=False,
-    )
-    return jax.jit(fn)(jnp.asarray(sg.src_local), jnp.asarray(sg.dst),
-                       jnp.asarray(sg.weight), jnp.asarray(xpad))
+    ))
 
 
 def run_histogram(mesh, keys: np.ndarray, num_bins: int, cfg: TascadeConfig):

@@ -36,6 +36,18 @@ class CSRGraph:
     def degrees(self) -> np.ndarray:
         return np.diff(self.indptr)
 
+    def shard_row_offsets(self, lo: int, hi: int) -> np.ndarray:
+        """Local CSR row offsets for the vertex range [lo, hi): entry i is
+        the offset of vertex lo+i's first out-edge *within the shard's own
+        edge slice* (``indices[indptr[lo]:indptr[hi]]``). This is what lets
+        a device walk exactly its frontier vertices' out-edges — the
+        activity-proportional worklist gather — instead of masking the full
+        edge list. Ranges fully past ``num_vertices`` (devices that hold
+        only padding vertices) yield a single zero offset."""
+        hi = min(hi, self.num_vertices)
+        lo = min(lo, hi)
+        return (self.indptr[lo:hi + 1] - self.indptr[lo]).astype(np.int64)
+
     @classmethod
     def from_edges(cls, src, dst, num_vertices: int, weights=None,
                    dedup: bool = True, symmetrize: bool = False) -> "CSRGraph":

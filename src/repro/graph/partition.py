@@ -5,6 +5,12 @@ across the grid with no preprocessing: device d owns vertices
 [d*shard, (d+1)*shard) and the out-edges of those vertices. Per-device edge
 arrays are padded to the max local edge count so the whole structure is one
 rectangular array sharded on its leading (device) axis.
+
+Because a device's vertex range is contiguous and CSR stores edges in
+(src, dst) order, each device's edge slice *is* a CSR sub-matrix: the local
+row offsets ``row_ptr`` (threaded through ``ShardedGraph``) let the apps
+gather exactly the out-edges of their frontier vertices — the
+frontier-proportional worklist — instead of masking the full edge list.
 """
 from __future__ import annotations
 
@@ -27,6 +33,9 @@ class ShardedGraph:
     dst: np.ndarray        # int32 [D, emax] global dst id, -1 = padding
     weight: np.ndarray     # float32 [D, emax]
     deg: np.ndarray        # float32 [D, shard] out-degree (0 for pad vertices)
+    row_ptr: np.ndarray    # int32 [D, shard+1] local CSR offsets: vertex i of
+                           # device d owns edge slots [row_ptr[d,i],
+                           # row_ptr[d,i+1]) of that device's edge arrays
 
     @property
     def num_devices(self) -> int:
@@ -54,14 +63,20 @@ def shard_graph(g: CSRGraph, ndev: int, pad_to_multiple: int = 8) -> ShardedGrap
     dst_a = np.full((ndev, emax), -1, np.int32)
     w_a = np.zeros((ndev, emax), np.float32)
     deg = np.zeros((ndev, shard), np.float32)
+    row_ptr = np.zeros((ndev, shard + 1), np.int32)
     for d, (sl, ds, ww) in enumerate(per_dev):
         k = sl.shape[0]
         src_l[d, :k] = sl
         dst_a[d, :k] = ds
         w_a[d, :k] = ww
         np.add.at(deg[d], sl.astype(np.int64), 1.0)
+        # The d-th vertex block is contiguous in the CSR, so its edge slice
+        # keeps CSR order and the local row offsets come straight from it.
+        offs = g.shard_row_offsets(d * shard, (d + 1) * shard)
+        row_ptr[d, : offs.shape[0]] = offs.astype(np.int32)
+        row_ptr[d, offs.shape[0]:] = np.int32(k)  # padded vertices: empty rows
 
     return ShardedGraph(
         num_vertices=v, vpad=vpad, shard=shard, emax=emax,
-        src_local=src_l, dst=dst_a, weight=w_a, deg=deg,
+        src_local=src_l, dst=dst_a, weight=w_a, deg=deg, row_ptr=row_ptr,
     )

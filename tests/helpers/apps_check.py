@@ -22,6 +22,58 @@ from repro.graph.partition import shard_graph
 from repro.graph.rmat import rmat_graph
 
 
+def frontier_sync_oracle(g, sg, root, wcap, max_epochs=256):
+    """Numpy replay of the sync-mode label-correcting schedule with
+    per-device frontier worklists: each epoch gathers exactly the frontier
+    vertices' *remaining* out-edges (truncated at ``wcap`` per device;
+    spilled vertices stay in the frontier and resume at their progress
+    cursor, resetting it whenever their own label improves), relaxes them
+    all, and advances the frontier. Returns (dist, edges_relaxed, epochs) —
+    the oracle for the engine's ``RunMetrics.edges_relaxed``
+    frontier-proportionality contract."""
+    v = g.num_vertices
+    degs = g.degrees
+    src, dst = g.src_per_edge, g.indices
+    w = (g.weights if g.weights is not None
+         else np.ones(g.num_edges, np.float32))
+    dist = np.full(v, np.inf, np.float32)
+    dist[root] = 0.0
+    frontier = np.zeros(v, bool)
+    frontier[root] = True
+    skip = np.zeros(v, np.int64)
+    edges = 0
+    epochs = 0
+    while frontier.any() and epochs < max_epochs:
+        carried = np.zeros(v, bool)
+        processed = np.zeros(v, np.int64)
+        esel = np.zeros(g.num_edges, bool)
+        for d in range(sg.num_devices):
+            lo, hi = d * sg.shard, min(v, (d + 1) * sg.shard)
+            f = frontier[lo:hi]
+            adeg = np.where(f, degs[lo:hi] - skip[lo:hi], 0)
+            cum = np.cumsum(adeg)
+            total = int(cum[-1]) if cum.size else 0
+            edges += min(total, wcap)
+            start = cum - adeg
+            for i in np.nonzero(f)[0]:
+                n_take = max(0, min(int(cum[i]), wcap) - int(start[i]))
+                if n_take:
+                    e0 = g.indptr[lo + i] + skip[lo + i]
+                    esel[e0: e0 + n_take] = True
+                processed[lo + i] = max(0, min(int(cum[i]), wcap) - int(start[i]))
+                if cum[i] > wcap:
+                    carried[lo + i] = True
+        cand = (dist[src[esel]] + w[esel]).astype(np.float32)
+        nd = dist.copy()
+        np.minimum.at(nd, dst[esel], cand)
+        improved = nd < dist
+        skip = np.where(carried & ~improved, skip + processed, 0)
+        frontier = improved | carried
+        dist = nd
+        epochs += 1
+    return dist, edges, epochs
+
+
 def main():
     mesh = compat.make_mesh((2, 4), ("data", "model"),
                             axis_types=compat.auto_axis_types(2))
@@ -48,6 +100,37 @@ def main():
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
         print(f"OK sssp sync={sync} epochs={int(m.epochs)} sent={int(m.sent_total)} "
               f"filtered={int(m.filtered)} coalesced={int(m.coalesced)}")
+
+    # ---- frontier-proportional worklists: edges_relaxed == frontier
+    # out-degree sum, per epoch, against the numpy worklist oracle ----
+    c_sync = TascadeConfig(**{**cfg.__dict__, "sync_merge": True})
+    o_dist, o_edges, o_epochs = frontier_sync_oracle(g, sg, root, sg.emax)
+    dist, m = apps.run_sssp(mesh, sg, root, c_sync)
+    assert int(m.epochs) == o_epochs, (int(m.epochs), o_epochs)
+    assert int(m.edges_relaxed) == o_edges, (int(m.edges_relaxed), o_edges)
+    np.testing.assert_array_equal(np.asarray(dist)[:v], o_dist[:v])
+    print(f"OK worklist oracle: edges_relaxed={o_edges} epochs={o_epochs} "
+          "(= frontier out-degree sums; dist bit-equal)")
+
+    # ---- truncated worklists: carryover keeps results exact, only the
+    # epoch schedule stretches ----
+    wcap = 64
+    o_dist, o_edges, o_epochs = frontier_sync_oracle(g, sg, root, wcap)
+    dist, m = apps.run_sssp(mesh, sg, root, c_sync, worklist_cap=wcap)
+    assert int(m.epochs) == o_epochs and int(m.edges_relaxed) == o_edges, (
+        int(m.epochs), o_epochs, int(m.edges_relaxed), o_edges)
+    np.testing.assert_array_equal(np.asarray(dist)[:v], o_dist[:v])
+    np.testing.assert_allclose(np.asarray(dist)[:v], want, rtol=1e-4, atol=1e-4)
+    print(f"OK worklist truncation wcap={wcap}: epochs {o_epochs} "
+          f"edges={o_edges}, dist still exact")
+
+    # ---- overflow surfacing: an undersized engine must COUNT its drops in
+    # RunMetrics.overflow, never silently clamp them away ----
+    c_tiny = TascadeConfig(**{**cfg.__dict__, "exchange_slack": 0.25,
+                              "sync_merge": True})
+    _, m = apps.run_sssp(mesh, sg, root, c_tiny, max_epochs=32)
+    assert int(m.overflow) > 0, "undersized queues must surface overflow"
+    print(f"OK overflow surfaced through RunMetrics: {int(m.overflow)} drops")
 
     # ---- BFS ----
     want = bfs_reference(g, root)

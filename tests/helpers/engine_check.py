@@ -38,29 +38,35 @@ def direct_reduce(n, idx, val, op):
     return out
 
 
-def count_sorts(jaxpr) -> int:
-    """Recursively count sort primitives in a (closed) jaxpr."""
+def count_primitive(jaxpr, name: str) -> int:
+    """Recursively count occurrences of a primitive in a (closed) jaxpr."""
     n = 0
     for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "sort":
+        if eqn.primitive.name == name:
             n += 1
         for v in eqn.params.values():
             if hasattr(v, "eqns"):          # inner Jaxpr
-                n += count_sorts(v)
+                n += count_primitive(v, name)
             elif hasattr(v, "jaxpr"):       # ClosedJaxpr
-                n += count_sorts(v.jaxpr)
+                n += count_primitive(v.jaxpr, name)
             elif isinstance(v, (list, tuple)):
                 for w in v:
                     if hasattr(w, "eqns"):
-                        n += count_sorts(w)
+                        n += count_primitive(w, name)
                     elif hasattr(w, "jaxpr"):
-                        n += count_sorts(w.jaxpr)
+                        n += count_primitive(w.jaxpr, name)
     return n
 
 
+def count_sorts(jaxpr) -> int:
+    return count_primitive(jaxpr, "sort")
+
+
 def check_single_sort_per_level_round(mesh, vpad, u):
-    """Acceptance: exactly one sort-based shuffle per level-round in
-    engine.step (the fused route_and_pack; no enqueue/pack/coalesce sorts)."""
+    """Acceptance: exactly one sort-based shuffle AND exactly one all_to_all
+    collective per level-round in engine.step (the fused route_and_pack on
+    the packed single-word wire; no enqueue/pack/coalesce sorts, no
+    second per-lane exchange)."""
     from jax.sharding import PartitionSpec as P
 
     geom = MeshGeom.from_mesh(mesh, vpad)
@@ -71,6 +77,8 @@ def check_single_sort_per_level_round(mesh, vpad, u):
                             policy=WritePolicy.WRITE_THROUGH)
         engine = TascadeEngine(cfg, geom, op, update_cap=u)
         nlev = len(engine.levels)
+        assert all(s.fmt is not None for s in engine.levels), (
+            "packed wire format must resolve for the f32 test config")
 
         def shard_fn(dest, idx, val):
             state = engine.init_state()
@@ -89,9 +97,36 @@ def check_single_sort_per_level_round(mesh, vpad, u):
             jnp.zeros((8, u), jnp.float32),
         )
         n_sorts = count_sorts(jaxpr.jaxpr)
+        n_a2a = count_primitive(jaxpr.jaxpr, "all_to_all")
         assert n_sorts == nlev, (
             f"{mode.value}: {n_sorts} sorts for {nlev} level-rounds")
-        print(f"OK jaxpr {mode.value}: {n_sorts} sort(s) for {nlev} level(s)")
+        assert n_a2a == nlev, (
+            f"{mode.value}: {n_a2a} all_to_all for {nlev} level-rounds")
+        print(f"OK jaxpr {mode.value}: {n_sorts} sort(s), {n_a2a} "
+              f"all_to_all(s) for {nlev} level(s)")
+
+
+def check_overflow_accounting(mesh, ndev):
+    """EngineState.overflow is an exact audit: with all-ones ADD updates and
+    no coalescing (OWNER_DIRECT), every dropped update removes exactly 1.0
+    of delivered mass, so delivered + overflow == injected."""
+    vpad, u = 128, 96
+    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                        capacity_ratio=4, policy=WritePolicy.WRITE_BACK,
+                        mode=CascadeMode.OWNER_DIRECT, exchange_slack=0.25)
+    rng = np.random.default_rng(7)
+    idx = rng.integers(0, vpad, size=(ndev, u)).astype(np.int32)
+    val = np.ones((ndev, u), np.float32)
+    out, stats = tascade_scatter_reduce(
+        jnp.zeros((vpad,), jnp.float32), jnp.asarray(idx), jnp.asarray(val),
+        op=ReduceOp.ADD, cfg=cfg, mesh=mesh, return_stats=True)
+    delivered = float(np.asarray(out).sum())
+    dropped = int(stats["overflow"])
+    assert dropped > 0, "undersized queues must actually drop here"
+    assert int(stats["residual"]) == 0
+    assert delivered + dropped == ndev * u, (delivered, dropped)
+    print(f"OK overflow accounting: delivered={delivered:.0f} + "
+          f"dropped={dropped} == injected={ndev * u}")
 
 
 def main():
@@ -103,6 +138,7 @@ def main():
     rng = np.random.default_rng(0)
 
     check_single_sort_per_level_round(mesh, vpad, u)
+    check_overflow_accounting(mesh, ndev)
 
     # Full {ADD,MIN,MAX} x {WT,WB} x mode product: the fused pipeline must be
     # root-equivalent to a direct reduction for every configuration.

@@ -1,0 +1,182 @@
+"""Overflow-accounting property tests for the exchange pipeline.
+
+The backpressure contract: every update that cannot be held is *counted*,
+never silently clamped away. ``enqueue`` and ``route_and_pack`` return exact
+``dropped`` counts under capacity pressure (so ``EngineState.overflow`` — and
+through it ``RunMetrics.overflow`` — is an exact audit of lost updates), and
+``compact`` is lossless whenever the target capacity suffices.
+
+Deterministic sweeps always run; hypothesis widens the sweep when available
+(same dependency policy as tests/test_kernels.py).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import exchange as ex
+from repro.core.types import (
+    NO_IDX,
+    ReduceOp,
+    UpdateStream,
+    make_stream,
+    wire_format_for,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+
+def _stream(rng, n, u, frac_valid=0.8):
+    idx = rng.integers(0, n, size=u).astype(np.int32)
+    idx = np.where(rng.random(u) < frac_valid, idx, -1)
+    val = (rng.standard_normal(u) * 4).astype(np.float32)
+    val = np.where(idx == -1, 0, val)
+    return UpdateStream(jnp.asarray(idx), jnp.asarray(val))
+
+
+def _check_enqueue_exact(rng, cap, n_pre, n_new):
+    """dropped == max(0, occupancy + new_valid - cap), and the kept prefix is
+    exactly the first entries that fit (FIFO, no clamping)."""
+    pend = make_stream(cap, counted=True)
+    pre = _stream(rng, 50, n_pre, frac_valid=0.7)
+    pend, d0 = ex.enqueue(pend, pre)
+    occ0 = int(pend.n)
+    n_pre_valid = int(np.sum(np.asarray(pre.idx) != -1))
+    assert int(d0) == max(0, n_pre_valid - cap)
+    assert occ0 == min(n_pre_valid, cap)
+
+    new = _stream(rng, 50, n_new, frac_valid=0.7)
+    n_new_valid = int(np.sum(np.asarray(new.idx) != -1))
+    out, dropped = ex.enqueue(pend, new)
+    want_drop = max(0, occ0 + n_new_valid - cap)
+    assert int(dropped) == want_drop, (
+        f"cap={cap} occ={occ0} new={n_new_valid}: "
+        f"dropped={int(dropped)} want={want_drop}")
+    assert int(out.n) == min(occ0 + n_new_valid, cap)
+    # FIFO: survivors are pending's entries then new's first valid entries.
+    kept_new = [int(i) for i in np.asarray(new.idx) if i != -1][: cap - occ0]
+    got = np.asarray(out.idx)
+    np.testing.assert_array_equal(got[occ0:int(out.n)], kept_new)
+    assert np.all(got[int(out.n):] == -1)
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("cap,n_pre,n_new", [(8, 6, 20), (4, 10, 10),
+                                             (16, 4, 8), (5, 0, 30)])
+def test_enqueue_dropped_exact(seed, cap, n_pre, n_new):
+    _check_enqueue_exact(np.random.default_rng(seed), cap, n_pre, n_new)
+
+
+def test_compact_lossless_when_capacity_suffices():
+    rng = np.random.default_rng(0)
+    s = _stream(rng, 30, 24, frac_valid=0.5)
+    n_valid = int(np.sum(np.asarray(s.idx) != -1))
+    c = ex.compact(s, cap=n_valid)  # exact fit
+    assert int(c.n) == n_valid
+    got = sorted(int(i) for i in np.asarray(c.idx) if i != -1)
+    want = sorted(int(i) for i in np.asarray(s.idx) if i != -1)
+    assert got == want
+
+
+def _route_drop_oracle(idx, peer_of, num_peers, bucket_cap, cap_out, coalesce):
+    """Numpy oracle for route_and_pack's (sent, leftover, dropped) counters."""
+    valid = idx[idx != -1]
+    if coalesce:
+        msgs_per_peer = {}
+        for p in range(num_peers):
+            msgs_per_peer[p] = len(np.unique(valid[peer_of(valid) == p]))
+    else:
+        msgs_per_peer = {p: int(np.sum(peer_of(valid) == p))
+                         for p in range(num_peers)}
+    sent = sum(min(m, bucket_cap) for m in msgs_per_peer.values())
+    over = sum(max(m - bucket_cap, 0) for m in msgs_per_peer.values())
+    dropped = max(over - cap_out, 0)
+    return sent, min(over, cap_out), dropped
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("coalesce", [False, True])
+@pytest.mark.parametrize("packed", [False, True])
+def test_route_and_pack_dropped_exact(seed, coalesce, packed):
+    """Under severe bucket + pending pressure, the dropped counter equals the
+    numpy oracle exactly — overflow is audited, not clamped."""
+    rng = np.random.default_rng(seed)
+    n, u, P, K, cap = 24, 48, 4, 2, 6  # tiny buckets + tiny pending queue
+    fmt = wire_format_for(P, n) if packed else None
+    if packed:
+        assert fmt is not None
+    pending = make_stream(cap, counted=True)
+    new = _stream(rng, n, u)
+    rr = ex.route_and_pack(pending, new, lambda i: i % P, P, K,
+                           op=ReduceOp.ADD, coalesce=coalesce, fmt=fmt)
+    idx = np.asarray(new.idx)
+    want_sent, want_left, want_drop = _route_drop_oracle(
+        idx, lambda v: v % P, P, K, cap, coalesce)
+    assert int(rr.n_sent) == want_sent
+    assert int(rr.n_leftover) == want_left
+    assert int(rr.dropped) == want_drop
+    assert want_drop > 0 or seed != 0  # the sweep must exercise real pressure
+    # wire + leftover carry exactly the surviving messages
+    stream = ex.wire_to_stream(rr.wire, fmt)
+    n_wire = int(np.sum(np.asarray(stream.idx) != -1))
+    assert n_wire == want_sent
+    assert int(np.sum(np.asarray(rr.leftover.idx) != -1)) == want_left
+
+
+@pytest.mark.parametrize("packed", [False, True])
+def test_wire_roundtrip_bit_exact(packed):
+    """Values (including negatives, denormals, inf) round-trip through the
+    wire bit-exactly when the wire alone touches them (coalesce=False: the
+    shuffle moves bits, no reduction arithmetic). With coalescing, values
+    additionally pass through the reduction op, which follows XLA float
+    semantics (e.g. denormal flushing on CPU) — that is an op property, not
+    a wire property, so it is out of scope here."""
+    P, K = 2, 8
+    fmt = wire_format_for(P, 16) if packed else None
+    specials = np.array([1.5, -2.25, 0.0, -0.0, np.inf, -np.inf,
+                         1e-40, 3.4e38], np.float32)
+    idx = np.arange(8, dtype=np.int32) * 2 % 16
+    pending = make_stream(8, counted=True)
+    new = UpdateStream(jnp.asarray(idx), jnp.asarray(specials))
+    rr = ex.route_and_pack(pending, new, lambda i: i % P, P, K,
+                           op=ReduceOp.MIN, coalesce=False, fmt=fmt)
+    assert int(rr.dropped) == 0 and int(rr.n_leftover) == 0
+    stream = ex.wire_to_stream(rr.wire, fmt)
+    got = {int(i): np.asarray(stream.val)[k]
+           for k, i in enumerate(np.asarray(stream.idx)) if i != -1}
+    for i, v in zip(idx, specials):
+        assert int(i) in got
+        np.testing.assert_array_equal(
+            np.float32(v).view(np.uint32), np.float32(got[int(i)]).view(np.uint32),
+            err_msg=f"idx {i} value bits changed on the wire")
+
+
+if HAVE_HYP:
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 40),
+           st.integers(0, 40), st.integers(0, 40))
+    def test_enqueue_dropped_exact_property(seed, cap, n_pre, n_new):
+        _check_enqueue_exact(np.random.default_rng(seed), cap,
+                             max(n_pre, 1), max(n_new, 1))
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(1, 4),
+           st.integers(1, 12), st.booleans(), st.booleans())
+    def test_route_dropped_exact_property(seed, P, K, cap, coalesce, packed):
+        rng = np.random.default_rng(seed)
+        n, u = 20, 40
+        fmt = wire_format_for(P, n) if packed else None
+        pending = make_stream(cap, counted=True)
+        new = _stream(rng, n, u)
+        rr = ex.route_and_pack(pending, new, lambda i: i % P, P, K,
+                               op=ReduceOp.MIN, coalesce=coalesce, fmt=fmt)
+        want_sent, want_left, want_drop = _route_drop_oracle(
+            np.asarray(new.idx), lambda v: v % P, P, K, cap, coalesce)
+        assert int(rr.n_sent) == want_sent
+        assert int(rr.n_leftover) == want_left
+        assert int(rr.dropped) == want_drop

@@ -32,6 +32,7 @@ from repro.core.types import (
     WritePolicy,
     make_pcache,
     make_stream,
+    wire_format_for,
 )
 from repro.kernels.pcache.ops import pcache_merge
 
@@ -64,40 +65,55 @@ def _rand_stream(rng, n, u, frac_valid=0.8):
 
 # ------------------------------------------------- 1. route_and_pack contract
 
+def _fmt_for(kind, num_peers, n):
+    """Resolve the wire layout under test: the packed single-word format or
+    the unpacked (idx lane, value lane) fallback."""
+    if kind == "packed":
+        fmt = wire_format_for(num_peers, n)
+        assert fmt is not None
+        return fmt
+    return None
+
+
 @pytest.mark.parametrize("op", OPS)
 @pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("wire", ["packed", "unpacked"])
 @pytest.mark.parametrize("seed", [0, 1, 2])
-def test_route_and_pack_conserves_reduction(op, mode, seed):
+def test_route_and_pack_conserves_reduction(op, mode, wire, seed):
     rng = np.random.default_rng(seed)
     n, u, P, K = 97, 48, 4, 5
     coalesce = mode is not CascadeMode.OWNER_DIRECT
+    fmt = _fmt_for(wire, P, n)
     pending = make_stream(u, counted=True)
     new = _rand_stream(rng, n, u)
     rr = ex.route_and_pack(pending, new, lambda i: i % P, P, K,
-                           op=op, coalesce=coalesce)
+                           op=op, coalesce=coalesce, fmt=fmt)
     assert int(rr.dropped) == 0
-    all_idx = np.concatenate([np.asarray(rr.packed.idx),
+    packed = ex.wire_to_stream(rr.wire, fmt)
+    all_idx = np.concatenate([np.asarray(packed.idx),
                               np.asarray(rr.leftover.idx)])
-    all_val = np.concatenate([np.asarray(rr.packed.val),
+    all_val = np.concatenate([np.asarray(packed.val),
                               np.asarray(rr.leftover.val)])
     got = _direct_reduce(n, all_idx, all_val, op)
     want = _direct_reduce(n, np.asarray(new.idx), np.asarray(new.val), op)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
     # counters are consistent with the arrays
-    assert int(rr.n_sent) == int(np.sum(np.asarray(rr.packed.idx) != -1))
+    assert int(rr.n_sent) == int(np.sum(np.asarray(packed.idx) != -1))
     assert int(rr.n_leftover) == int(np.sum(np.asarray(rr.leftover.idx) != -1))
     assert int(rr.leftover.n) == int(rr.n_leftover)
 
 
 @pytest.mark.parametrize("coalesce", [False, True])
-def test_route_and_pack_bucket_structure(coalesce):
+@pytest.mark.parametrize("wire", ["packed", "unpacked"])
+def test_route_and_pack_bucket_structure(coalesce, wire):
     rng = np.random.default_rng(7)
     n, u, P, K = 64, 40, 4, 4
+    fmt = _fmt_for(wire, P, n)
     pending = make_stream(u, counted=True)
     new = _rand_stream(rng, n, u)
     rr = ex.route_and_pack(pending, new, lambda i: i % P, P, K,
-                           op=ReduceOp.ADD, coalesce=coalesce)
-    packed = np.asarray(rr.packed.idx).reshape(P, K)
+                           op=ReduceOp.ADD, coalesce=coalesce, fmt=fmt)
+    packed = np.asarray(ex.wire_to_stream(rr.wire, fmt).idx).reshape(P, K)
     for p in range(P):
         bucket = packed[p][packed[p] != -1]
         assert np.all(bucket % P == p), f"foreign entry in bucket {p}"
@@ -121,7 +137,8 @@ def test_coalescing_never_increases_sent(op, seed):
     sent = {}
     for coalesce in (False, True):
         rr = ex.route_and_pack(pending, new, lambda i: i % P, P, K,
-                               op=op, coalesce=coalesce)
+                               op=op, coalesce=coalesce,
+                               fmt=wire_format_for(P, n))
         sent[coalesce] = int(rr.n_sent) + int(rr.n_leftover)
     assert sent[True] <= sent[False]
 
@@ -130,14 +147,17 @@ def test_route_and_pack_fuses_pending_and_new():
     """Pending leftovers and fresh updates coalesce across the two streams."""
     pend0 = make_stream(8, counted=True)
     a = UpdateStream(jnp.array([5, 3, -1, 5], jnp.int32),
-                     jnp.array([1.0, 2.0, 0.0, 4.0]))
+                     jnp.array([1.0, 2.0, 0.0, 4.0], jnp.float32))
     pend, dropped = ex.enqueue(pend0, a)
     assert int(dropped) == 0 and int(pend.n) == 3
-    b = UpdateStream(jnp.array([5, 3], jnp.int32), jnp.array([8.0, 16.0]))
+    b = UpdateStream(jnp.array([5, 3], jnp.int32),
+                     jnp.array([8.0, 16.0], jnp.float32))
+    fmt = wire_format_for(2, 8)
     rr = ex.route_and_pack(pend, b, lambda i: i % 2, 2, 4,
-                           op=ReduceOp.ADD, coalesce=True)
+                           op=ReduceOp.ADD, coalesce=True, fmt=fmt)
+    stream = ex.wire_to_stream(rr.wire, fmt)
     packed = {int(i): float(v) for i, v in
-              zip(np.asarray(rr.packed.idx), np.asarray(rr.packed.val))
+              zip(np.asarray(stream.idx), np.asarray(stream.val))
               if i != -1}
     assert packed == {5: 13.0, 3: 18.0}  # one message per element, fully summed
     assert int(rr.n_coalesced) == 3

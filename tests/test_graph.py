@@ -55,6 +55,26 @@ def test_shard_graph_partition_roundtrip():
     assert (srcs // sg.shard == d).all()
 
 
+def test_shard_graph_row_ptr_is_local_csr():
+    """row_ptr must describe each device's edge slice as a CSR sub-matrix:
+    vertex i of device d owns exactly edge slots [row_ptr[d,i],
+    row_ptr[d,i+1]) — the contract the frontier worklist gather relies on."""
+    g = rmat_graph(7, edge_factor=4, seed=2)
+    sg = shard_graph(g, 8)
+    for d in range(sg.num_devices):
+        rp = sg.row_ptr[d]
+        assert rp[0] == 0 and (np.diff(rp) >= 0).all()
+        k = int((sg.src_local[d] >= 0).sum())
+        assert rp[-1] == k  # offsets span exactly the real edges
+        for i in range(sg.shard):
+            lo, hi = int(rp[i]), int(rp[i + 1])
+            # every edge in vertex i's range really has src_local == i
+            np.testing.assert_array_equal(sg.src_local[d, lo:hi], i)
+        # per-vertex degrees from row_ptr agree with the deg array
+        np.testing.assert_array_equal(np.diff(rp).astype(np.float32),
+                                      sg.deg[d])
+
+
 def test_oracles_line_graph():
     # path 0->1->2->3 with weights
     g = CSRGraph.from_edges([0, 1, 2], [1, 2, 3], 4,

@@ -178,6 +178,33 @@ def test_embedding_bag_all_padding_bag():
     np.testing.assert_allclose(np.asarray(got), np.zeros((2, 4)))
 
 
+def test_embedding_bag_pallas_bench_parity():
+    """The block-vectorized kernel must stay within 10x of the jnp reference
+    in interpret mode at the default bench scale — the per-(bag, item) grid
+    formulation it replaced was ~10000x off, so this guards the bag loop
+    staying vectorized. An absolute floor absorbs CI timer noise on runs
+    where the reference is unusually fast."""
+    import time
+
+    rng = np.random.default_rng(0)
+    v, d, b, l = 65536, 64, 256, 8
+    table = jnp.asarray(rng.standard_normal((v, d)).astype(np.float32))
+    bag = jnp.asarray(rng.integers(0, v, (b, l)).astype(np.int32))
+
+    def timed(impl):
+        jax.block_until_ready(embedding_bag(table, bag, impl=impl))  # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(embedding_bag(table, bag, impl=impl))
+        return (time.perf_counter() - t0) / 5 * 1e6
+
+    ref_us = timed("ref")
+    pallas_us = timed("pallas")
+    assert pallas_us <= max(10 * ref_us, 20_000), (
+        f"pallas embedding_bag {pallas_us:.0f}us vs ref {ref_us:.0f}us "
+        f"(> 10x): bag loop de-vectorized?")
+
+
 if HAVE_HYP:
 
     @settings(max_examples=20, deadline=None)
