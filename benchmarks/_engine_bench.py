@@ -8,6 +8,7 @@ import sys
 ndev = int(os.environ.get("BENCH_DEVICES", "8"))
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
 
+import dataclasses
 import time
 
 import numpy as np
@@ -41,6 +42,11 @@ def timed(fn, *args, reps=5):
     return best * 1e6, out
 
 
+def gteps_of(edges: float, us: float) -> float:
+    """Giga-edges-relaxed per second from an edge count and microseconds."""
+    return edges / max(us, 1e-9) / 1e3
+
+
 def cfg_for(mode, region=("model",), cascade=("data",), C=8, sync=False):
     return TascadeConfig(region_axes=region, cascade_axes=cascade,
                          capacity_ratio=C, mode=mode, sync_merge=sync,
@@ -58,6 +64,9 @@ def main():
     e = g.num_edges
 
     # ---- Fig. 4: accumulative feature ablation (per app) ----
+    # Every row with a nonzero edges_relaxed also reports throughput
+    # (GTEPS = edges relaxed / wall-clock / 1e9) — the paper's headline
+    # metric, persisted into BENCH_engine.json.
     for app_name, runner in (
         ("sssp", lambda c: apps.run_sssp(mesh, sg, root, c)),
         ("bfs", lambda c: apps.run_bfs(mesh, sg, root, c)),
@@ -73,11 +82,65 @@ def main():
                         else m["hop_bytes"])
             sent = int(m.sent_total if hasattr(m, "sent_total")
                        else m["sent_total"])
+            er = float(m.edges_relaxed) if hasattr(m, "edges_relaxed") else 0.0
             if base_hop is None:
                 base_hop = max(hop, 1.0)
+            gteps = f";edges_relaxed={er:.0f};gteps={gteps_of(er, us):.6f}" \
+                if er > 0 else ""
             row(f"fig4/{app_name}/{mode.value}", us,
                 f"hop_bytes={hop:.0f};traffic_x={base_hop / max(hop, 1):.2f};"
-                f"msgs={sent}")
+                f"msgs={sent}{gteps}")
+
+    # ---- GTEPS protocol: batched K-lane multi-source sweeps ----
+    # The paper's headline number is throughput at scale (edges/second over
+    # many concurrent traversals), not single-query latency. K roots run as
+    # K lanes of ONE engine — one executable, one counting-rank pass, one
+    # all_to_all per level-round across all lanes — vs K sequential
+    # single-source runs (which pay every per-round fixed cost K times).
+    # The batched configuration shares single-query-scale silicon across
+    # the batch (lane_capacity_share = 1/4, worklist 3*emax/16): lanes
+    # fill the per-round slots the sequential protocol leaves mostly
+    # empty. Per-lane results are verified BIT-equal to the sequential
+    # runs (lanes_bitequal must be 1; bit-equality is the correctness
+    # gate). NOTE wall-clock caveat: on a 2-core CI/container substrate
+    # the 8 fake devices serialize, so per-element work cannot
+    # parallelize and only per-round bookkeeping amortizes (~2.2x
+    # measured); on real parallel hardware the fixed per-round costs
+    # (collective latency, dispatch) amortize on top of that.
+    K = 8
+    roots_k = [int(r) for r in np.argsort(-g.degrees)[:K]]
+    batched_cfg = dataclasses.replace(
+        cfg_for(CascadeMode.TASCADE), lane_capacity_share=0.25)
+    for app_name, multi, single in (
+        ("sssp", apps.run_sssp_multi, apps.run_sssp),
+        ("bfs", apps.run_bfs_multi, apps.run_bfs),
+    ):
+        us_b, (dist_b, mb) = timed(
+            lambda c: multi(mesh, sg, roots_k, c,
+                            worklist_cap=max(3 * sg.emax // 16, 8)),
+            batched_cfg)
+        edges_b = float(mb.edges_relaxed)
+
+        def run_seq(c):
+            dists, edges = [], 0.0
+            for r in roots_k:
+                d, m = single(mesh, sg, r, c)
+                dists.append(np.asarray(d))
+                edges += float(m.edges_relaxed)
+            return np.stack(dists), edges
+
+        us_s, (dist_s, edges_s) = timed(
+            run_seq, cfg_for(CascadeMode.TASCADE), reps=3)
+        bitequal = int(all(
+            np.array_equal(np.asarray(dist_b[l]), dist_s[l])
+            for l in range(K)))
+        tput_b, tput_s = edges_b / us_b, edges_s / us_s
+        row(f"fig_gteps/{app_name}/seq_K{K}", us_s,
+            f"edges_relaxed={edges_s:.0f};gteps={gteps_of(edges_s, us_s):.6f}")
+        row(f"fig_gteps/{app_name}/batched_K{K}", us_b,
+            f"edges_relaxed={edges_b:.0f};gteps={gteps_of(edges_b, us_b):.6f};"
+            f"speedup_x={tput_b / max(tput_s, 1e-12):.2f};"
+            f"epochs={int(mb.epochs)};lanes_bitequal={bitequal}")
 
     # ---- Fig. 5: proxy region size (region axis width) ----
     for shape, axes, region in (((ndev, 1), ("data", "model"), 1),

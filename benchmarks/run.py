@@ -33,7 +33,8 @@ def _parse_derived(derived: str) -> dict:
     out = {}
     for key, alias in (("msgs", "sent"), ("hop_bytes", "hop_bytes"),
                        ("filtered", "filtered"), ("coalesced", "coalesced"),
-                       ("epochs", "epochs")):
+                       ("epochs", "epochs"), ("edges_relaxed", "edges_relaxed"),
+                       ("gteps", "gteps"), ("speedup_x", "speedup_x")):
         m = re.search(rf"{key}=(-?[\d.]+)", derived)
         if m:
             out[alias] = float(m.group(1))
@@ -165,11 +166,23 @@ def compare_snapshots(old_path: str, rows: list[dict],
         either direction — traffic counts ARE machine-independent, so any
         drift means the exchange pipeline changed behavior (intentional
         changes must regenerate the committed snapshot in the same PR).
+
+    Rows present in only one snapshot are *warned about, never gated*: a PR
+    that adds (or retires) bench rows still gets regression gating on the
+    shared rows instead of crashing or silently skipping the comparison.
     """
     wall_tol = float(os.environ.get("BENCH_WALL_TOL", wall_tol))
     old = {r["name"]: r for r in
            json.loads(Path(old_path).read_text()).get("rows", [])}
     regressions: list[str] = []
+
+    new_names = {r["name"] for r in rows}
+    for name in sorted(n for n in old if n not in new_names):
+        print(f"WARN row only in old snapshot (not gated): {name}",
+              flush=True)
+    for name in sorted(n for n in new_names if n not in old):
+        print(f"WARN row only in new snapshot (no baseline yet): {name}",
+              flush=True)
 
     def delta(new_v, old_v):
         if new_v is None or old_v is None or old_v == 0:

@@ -55,15 +55,20 @@ def tascade_scatter_reduce(
     op: ReduceOp | str,
     cfg: TascadeConfig,
     mesh,
+    lane: jnp.ndarray | None = None,
     max_sweeps: int = 64,
     return_stats: bool = False,
 ):
     """Reduce sparse (idx, val) updates into ``dest`` through the Tascade tree.
 
-    dest : [Vpad] global reduction array, Vpad divisible by mesh size.
+    dest : [Vpad] global reduction array, Vpad divisible by mesh size —
+           or, with ``cfg.n_lanes = L > 1``, [L, Vpad]: L independent
+           reduction arrays over the same element space (batched query
+           lanes sharing one engine and one collective per level-round).
     idx  : [D, U] global destination index per update (NO_IDX = padding),
            row d = updates generated on device d (in mesh linear order).
     val  : [D, U] update values.
+    lane : [D, U] destination lane per update (required iff L > 1).
 
     A single ``step(drain=True, flush=True)`` fully drains the tree (the
     engine's interleaved early-exit loop runs until every queue is globally
@@ -78,7 +83,20 @@ def tascade_scatter_reduce(
     del max_sweeps
     op = ReduceOp(op)
     ndev = mesh.devices.size
-    vpad = dest.shape[0]
+    lanes = cfg.n_lanes
+    if lanes > 1:
+        assert lane is not None, "lane ids required when cfg.n_lanes > 1"
+        assert dest.ndim == 2 and dest.shape[0] == lanes, (
+            f"dest must be [n_lanes={lanes}, Vpad], got {dest.shape}")
+        vpad = dest.shape[1]
+        # Lane-minor extended layout (see engine): element-major flatten of
+        # dest.T gives each device a contiguous [shard * L] extended shard.
+        dest_flat = dest.T.reshape(-1)
+        idx = jnp.where(idx != NO_IDX, idx * lanes + lane, NO_IDX)
+    else:
+        assert lane is None, "lane ids given but cfg.n_lanes == 1"
+        vpad = dest.shape[0]
+        dest_flat = dest
     d, u = idx.shape
     assert d == ndev, f"updates rows {d} != mesh devices {ndev}"
     assert vpad % ndev == 0, "dest must be padded to a multiple of mesh size"
@@ -111,7 +129,9 @@ def tascade_scatter_reduce(
             out_specs=(P(axes), P(), P(), _stats_vec_spec()),
             check_vma=False,
         ))
-    dest_out, overflow, residual, gstats = fn(dest, idx, val)
+    dest_out, overflow, residual, gstats = fn(dest_flat, idx, val)
+    if lanes > 1:
+        dest_out = dest_out.reshape(vpad, lanes).T
     if return_stats:
         return dest_out, {
             "overflow": overflow,

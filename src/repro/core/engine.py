@@ -15,13 +15,24 @@ Modes (paper Fig. 4):
                    claims a cache line only when it is free) — the paper's
                    opportunistic capture, decided on line occupancy.
 
-Hot-path structure: one level-round is ONE sort of the packed wire word and
-ONE collective. ``exchange.route_and_pack`` fuses enqueue-compaction,
-pre-wire duplicate coalescing (the paper's at-source coalescing), and
-bucket packing into a single sort of the bit-packed (key, value-bits) word;
+Hot-path structure: one level-round is ZERO sort primitives and ONE
+collective — O(1) work per update plus streaming O(element-table) fills
+and cumsums (see ``exchange``'s module docstring for the exact account). ``exchange.route_and_pack`` routes with the counting-rank
+scatter (per-peer histogram ranks + rank-scatter into wire slots) and
+coalesces duplicates pre-wire with one segment reduction (the
+``kernels/segment_coalesce`` op — the paper's at-source coalescing);
 ``exchange.all_to_all_wire`` ships the packed block in one ``all_to_all``;
-the P-cache merge that follows is entirely sort-free (scatter-based winner
+the P-cache merge that follows is also sort-free (scatter-based winner
 election, see ``pcache.cache_pass``).
+
+Batched query lanes (``TascadeConfig.n_lanes``): K independent reductions
+over the same element space run through ONE engine by extending the
+element space to ``num_elements * K`` (extended index = idx * K + lane,
+lane-minor). All lanes share every level-round's counting pass, wire block
+and single ``all_to_all`` — the fixed per-round costs that dominate
+single-query runs amortize across the batch (the GTEPS measurement
+protocol of multi-source BFS/SSSP sweeps). ``StepStats.lane_inflight``
+exposes per-lane queue occupancy so finished lanes stop contributing work.
 
 Geometric level-capacity plan: once updates have been exchanged along a
 level's axes, the indices a device can hold are confined to its *coverage*
@@ -101,6 +112,10 @@ class StepStats(NamedTuple):
     inflight: jnp.ndarray    # int32 updates still pending across levels
     filtered: jnp.ndarray    # int32 updates killed by P-cache filtering
     coalesced: jnp.ndarray   # int32 updates removed by coalescing
+    lane_inflight: jnp.ndarray  # int32[n_lanes] per-lane pending occupancy:
+                                # lanes whose count hits 0 (and whose app
+                                # frontier is empty) are finished and stop
+                                # contributing worklist slots
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +150,17 @@ class TascadeEngine:
         dtype=jnp.float32,
     ):
         self.cfg = cfg
+        self.lanes = cfg.n_lanes
+        if self.lanes > 1:
+            # Batched query lanes: extend the element space to
+            # num_elements * n_lanes with lane-minor order (extended index
+            # = idx * L + lane). Owner arithmetic is unchanged (a device's
+            # extended shard is its element shard x all lanes), lanes never
+            # coalesce with each other (distinct extended indices), and one
+            # wire block / one counting pass / ONE all_to_all per
+            # level-round carries every lane's traffic.
+            geom = dataclasses.replace(
+                geom, num_elements=geom.num_elements * self.lanes)
         self.geom = geom
         self.op = op
         self.dtype = dtype
@@ -174,8 +200,14 @@ class TascadeEngine:
         # With pre-wire coalescing (every mode but OWNER_DIRECT) a device
         # ships at most one message per destination element per round, so
         # coverage bounds — not raw capacity — size everything upstream.
+        # Under batched lanes, ``lane_capacity_share`` scales the coverage
+        # the plan provisions for: 1.0 isolates every lane (queues grow
+        # ~n_lanes-fold), 1/n_lanes shares single-query-scale silicon
+        # across the batch (the paper's fixed router queues / P-cache SRAM)
+        # and turns overload into audited bucket backpressure.
         coalescing = mode is not CascadeMode.OWNER_DIRECT
         slack = cfg.exchange_slack
+        share = cfg.lane_capacity_share
         vpad = geom.padded_elements
         cap = max(int(update_cap * slack), 8)
         cov = vpad  # unique-index coverage entering level 0
@@ -184,11 +216,14 @@ class TascadeEngine:
             peers = math.prod(geom.axis_size(a) for a in axes)
             cov_next = max(cov // peers, 1)  # coverage after this exchange;
                                              # also the per-peer unique bound
+            scov_next = max(int(math.ceil(cov_next * share)), 1)
             if coalescing:
-                bucket = max(min(int(math.ceil(cap * slack / peers)), cov_next), 1)
+                bucket = max(min(int(math.ceil(cap * slack / peers)),
+                                 scov_next), 1)
             else:
                 bucket = max(int(math.ceil(cap * slack / peers)), 1)
-            lines = max(int(math.ceil(cov_next / cfg.capacity_ratio)), 8) if merge else 0
+            lines = max(int(math.ceil(scov_next / cfg.capacity_ratio)), 8) \
+                if merge else 0
             hops = sum(geom.axis_size(a) / 4.0 for a in axes)
             specs.append(
                 LevelSpec(
@@ -208,6 +243,9 @@ class TascadeEngine:
                 # its re-coalesced leftover (unique => <= cov_next), plus one
                 # round of this level's merge emissions (<= received, itself
                 # <= min(peers * bucket, cov)), plus a full cache flush.
+                # Pending caps always use the TRUE coverage bounds — shared
+                # lane capacity narrows wires and caches (backpressure),
+                # never the queues that guarantee zero dropped updates.
                 cap = max(cov_next + min(peers * bucket, cov) + lines, 8)
             else:
                 cap = max(int(peers * bucket), 8)  # raw one-round inflow
@@ -254,6 +292,13 @@ class TascadeEngine:
             # coalescing — every generated update pays the wire.
             coalesce=self.cfg.mode is not CascadeMode.OWNER_DIRECT,
             fmt=spec.fmt,
+            num_elements=self.geom.padded_elements,
+            coalesce_impl="pallas" if self.cfg.use_pallas else "jnp",
+            pallas_interpret=self.cfg.pallas_interpret,
+            # Owner geometry: the joint peer of an index is a function of
+            # its owner shard, so the peer map is constant on shard-size
+            # idx blocks — unlocks the O(T) block-structured rank.
+            peer_block=self.geom.shard_size,
         )
         axis_name = spec.axes if len(spec.axes) > 1 else spec.axes[0]
         recv = ex.all_to_all_wire(rr.wire, axis_name, spec.fmt, self.dtype)
@@ -378,7 +423,8 @@ class TascadeEngine:
             zero = jnp.int32(0)
             return state, dest_shard, StepStats(
                 sent=jnp.zeros((1,), jnp.int32), hop_bytes=jnp.float32(0),
-                inflight=zero, filtered=zero, coalesced=zero)
+                inflight=zero, filtered=zero, coalesced=zero,
+                lane_inflight=jnp.zeros((self.lanes,), jnp.int32))
 
         levels = list(state.levels)
         overflow = state.overflow
@@ -447,6 +493,18 @@ class TascadeEngine:
         for lvl in levels:
             inflight = inflight + lvl.pending.count()
 
+        # Per-lane pending occupancy: one scatter-count of (extended idx
+        # mod L) per queue. With a single lane it is just the total.
+        if self.lanes == 1:
+            lane_inflight = inflight[None]
+        else:
+            lane_inflight = jnp.zeros((self.lanes + 1,), jnp.int32)
+            for lvl in levels:
+                lane = jnp.where(lvl.pending.idx != NO_IDX,
+                                 lvl.pending.idx % self.lanes, self.lanes)
+                lane_inflight = lane_inflight.at[lane].add(1)
+            lane_inflight = lane_inflight[: self.lanes]
+
         hop_bytes = jnp.float32(0)
         for li, spec in enumerate(self.levels):
             hop_bytes = hop_bytes + sent[li].astype(jnp.float32) * MSG_BYTES * spec.mean_hops
@@ -458,6 +516,7 @@ class TascadeEngine:
             inflight=inflight,
             filtered=filtered,
             coalesced=coalesced,
+            lane_inflight=lane_inflight,
         )
         return new_state, dest_shard, stats
 

@@ -1,4 +1,4 @@
-"""Fused bucketed sparse exchange: the SPMD stand-in for task routing.
+"""Bucketed sparse exchange: the SPMD stand-in for task routing.
 
 The paper routes each (index, value) update message through the NoC toward
 the owner tile, dimension by dimension. An SPMD program cannot route per
@@ -8,27 +8,48 @@ per-peer buckets keyed by the owner's coordinate on that axis, exchanges,
 and merges what it receives. Entries that do not fit a bucket stay pending
 (backpressure — the analogue of the paper's finite router/IQ queues).
 
-``route_and_pack`` is the whole per-round shuffle in ONE sort, and with the
-packed wire format (``types.WireFormat``) the sort runs on ONE operand and
-the exchange is ONE collective:
+``route_and_pack`` is the whole per-round shuffle with ZERO sort primitives
+— a **counting-rank router** with O(1) work per update (the analogue of the
+paper's per-message hardware routing, where Dalorex showed per-update cost
+must be O(1) for task parallelism to scale) plus O(T) streaming table work
+(T = the static element-index bound, ``Vpad * n_lanes``): dense fills,
+one flat cumsum and gathers over the idx table — no comparisons, no log
+factors. At bench scales the table term is free next to the scatters; a
+future refinement for huge Vpad is compacting the table to each level's
+entering coverage via owner-digit removal. The pipeline:
 
-  * the routing key ``(peer << idx_bits) | idx`` and the value's raw bits
-    are bit-packed into a single 64-bit wire word (one u64 when jax x64 is
-    live, else a key lane + value-bits lane of one i32 block) — as narrow as
-    the paper's hardware message,
-  * ONE stable sort of the packed words simultaneously groups entries by
-    destination bucket, makes duplicates adjacent so they coalesce
-    *pre-exchange* with one segment reduction (the paper's at-source
-    coalescing — duplicates never reach the wire, cutting both ``sent`` and
-    ``hop_bytes``), and yields in-bucket ranks and leftover compaction from
-    plain prefix sums,
-  * ``all_to_all_wire`` then moves the packed buckets with ONE collective
-    per level-round (enforced by a jaxpr check next to the single-sort
-    check in ``tests/helpers/engine_check.py``).
+  * each update's destination peer indexes a per-peer histogram (peers =
+    one mesh-axis size, so the histogram is tiny); because the wire is a
+    fixed ``[P, K]`` block, the exclusive prefix-sum over that histogram
+    degenerates to the static bucket bases ``peer * bucket_cap``,
+  * a per-peer running count (columnwise cumsum of the tiny peer one-hot)
+    gives every message its in-bucket *rank*, and one rank-scatter places
+    it directly into its wire slot,
+  * duplicate element indices are found with one scatter-min over an
+    idx-indexed table (the *segment head* = first update carrying that
+    element) and coalesced **pre-exchange** with one segment reduction into
+    head-position space — the ``kernels/segment_coalesce`` reduction (jnp
+    scatter-reduce by default, the Pallas TPU kernel under
+    ``use_pallas``) — so duplicates never reach the wire, cutting both
+    ``sent`` and ``hop_bytes`` (the paper's at-source coalescing),
+  * in coalescing modes the rank is taken in *element-index order* (a
+    cumsum over the idx table restricted per peer), so which messages fit
+    a full bucket — and which stay pending — matches the retired sorting
+    router bit for bit,
+  * the packed wire format (``types.WireFormat``) bit-packs the routing
+    key ``(peer << idx_bits) | idx`` and the value's raw IEEE bits into a
+    single 64-bit wire word, and ``all_to_all_wire`` moves the packed
+    buckets with ONE collective per level-round (the zero-sort and
+    single-collective invariants are enforced on the jaxpr by
+    ``tests/helpers/engine_check.py``).
 
 When the packed format cannot represent a level (value dtype not 32-bit, or
-peer+idx overflow the 31-bit key) the same pipeline runs unpacked: a
-(peer, idx, value) multi-operand sort and a two-lane wire.
+peer+idx overflow the 31-bit key) the same counting pipeline emits the
+unpacked two-lane wire instead.
+
+``impl="sort"`` retains the PR-2 single-sort router as the reference
+implementation for the equivalence property tests
+(``tests/test_counting_router.py``); the engine always routes ``"count"``.
 
 Everything else in this module (``enqueue``, ``compact``) is sort-free:
 front-compaction is a cumsum + scatter, enabled by the occupancy counters
@@ -130,8 +151,13 @@ def route_and_pack(
     op: ReduceOp,
     coalesce: bool = True,
     fmt: WireFormat | None = None,
+    impl: str = "count",
+    num_elements: int | None = None,
+    coalesce_impl: str = "jnp",
+    pallas_interpret: bool | None = None,
+    peer_block: int | None = None,
 ) -> RouteResult:
-    """One level-round shuffle — enqueue + coalesce + pack — in a single sort.
+    """One level-round shuffle — enqueue + coalesce + pack — with zero sorts.
 
     ``peer_fn`` maps a global element index to its destination bucket on this
     level (ignored for sentinel padding). With ``coalesce`` the stream is
@@ -141,10 +167,21 @@ def route_and_pack(
     as-is. Leftovers (bucket overflow) come back front-compacted — and, when
     coalescing, already merged — in a stream of ``pending``'s capacity.
 
-    With ``fmt`` the shuffle runs on the packed wire word — one sort operand
-    (u64) or key + value-bits (paired i32) — and ``wire`` is the single
-    block ``all_to_all_wire`` exchanges with ONE collective. Without it the
-    unpacked (idx lane, value lane) form is used.
+    With ``fmt`` the wire is the packed single-word block ``all_to_all_wire``
+    exchanges with ONE collective; without it the unpacked (idx lane, value
+    lane) form is used.
+
+    ``impl="count"`` (default, the engine path) routes with the O(U)
+    counting-rank scatter; ``impl="sort"`` retains the PR-2 single-sort
+    router as the property-test reference. The counting router needs the
+    static element-index bound ``num_elements`` for its idx tables when
+    coalescing (derived from ``fmt.idx_bits`` when omitted);
+    ``coalesce_impl``/``pallas_interpret`` select the segment-coalesce
+    reduction backend (``"jnp"`` scatter-reduce or the ``"pallas"`` kernel).
+    ``peer_block`` (static) declares that ``peer_fn`` is constant on
+    consecutive idx blocks of that size (true for owner-shard geometry),
+    unlocking the O(T) block-structured rank instead of the generic
+    O(T * num_peers) per-peer running count.
     """
     cap_out = pending.capacity
     if new is None:
@@ -157,14 +194,187 @@ def route_and_pack(
         fmt = None  # value bits don't fit the 32-bit word half: go unpacked
     if fmt is not None:
         assert fmt.num_peers == num_peers
-        return _route_packed(idx, val, valid, peer_fn, cap_out, bucket_cap,
-                             op=op, coalesce=coalesce, fmt=fmt)
-    return _route_unpacked(idx, val, valid, peer_fn, num_peers, cap_out,
-                           bucket_cap, op=op, coalesce=coalesce)
+    if impl == "count":
+        if num_elements is None:
+            assert fmt is not None or not coalesce, (
+                "counting router needs num_elements (or fmt) to size its "
+                "coalescing tables")
+            num_elements = (1 << fmt.idx_bits) if fmt is not None else 0
+        return _route_counting(
+            idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
+            op=op, coalesce=coalesce, fmt=fmt, table=num_elements,
+            coalesce_impl=coalesce_impl, pallas_interpret=pallas_interpret,
+            peer_block=peer_block)
+    assert impl == "sort", impl
+    if fmt is not None:
+        return _route_packed_sort(idx, val, valid, peer_fn, cap_out,
+                                  bucket_cap, op=op, coalesce=coalesce,
+                                  fmt=fmt)
+    return _route_unpacked_sort(idx, val, valid, peer_fn, num_peers, cap_out,
+                                bucket_cap, op=op, coalesce=coalesce)
 
 
-def _route_packed(idx, val, valid, peer_fn, cap_out, bucket_cap, *,
-                  op: ReduceOp, coalesce: bool, fmt: WireFormat):
+# ------------------------------------------------- the counting-rank router
+
+def _route_counting(idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
+                    *, op: ReduceOp, coalesce: bool, fmt: WireFormat | None,
+                    table: int, coalesce_impl: str,
+                    pallas_interpret: bool | None,
+                    peer_block: int | None = None):
+    """O(U) sort-free shuffle: histogram ranks + rank-scatter + one
+    segment-coalesce reduction. See the module docstring for the shape of
+    the algorithm; invariants mirrored from the sort reference:
+
+      * coalescing modes rank messages per peer in element-index order
+        (via the idx table), so bucket-overflow selection is bit-identical
+        to the sort router's (which shipped the ``bucket_cap`` smallest
+        keys per peer),
+      * the non-coalescing mode (OWNER_DIRECT) ranks in arrival order —
+        duplicates are interchangeable wire messages there, so only the
+        per-peer counts are contractual.
+    """
+    u = idx.shape[0]
+    pos = jnp.arange(u, dtype=jnp.int32)
+    peer = jnp.where(valid, peer_fn(idx), num_peers).astype(jnp.int32)
+
+    if coalesce:
+        # Segment heads: the first update carrying each element index (peer
+        # is a function of idx, so (peer, idx) groups == idx groups). One
+        # scatter-min over the idx table finds them.
+        tbl = jnp.where(valid, idx, table)
+        firstpos = jnp.full((table + 1,), u, jnp.int32).at[tbl].min(pos)
+        segpos = jnp.where(valid, firstpos[tbl], u)
+        head = valid & (segpos == pos)
+        # In-bucket coalescing: ONE segment reduction into head-position
+        # space (the kernels/segment_coalesce op — Pallas under use_pallas).
+        from repro.kernels.segment_coalesce.ops import segment_coalesce
+
+        comb = segment_coalesce(segpos, val, u, op=op.value,
+                                impl=coalesce_impl,
+                                interpret=pallas_interpret)
+        msg_val = jnp.where(head, comb[pos], val).astype(val.dtype)
+
+        # Element-index-ordered rank within each peer: a head's rank is
+        # (# heads with my peer and a smaller idx). The head mask in table
+        # order falls straight out of ``firstpos`` (slot t heads a segment
+        # iff firstpos[t] < u) — no second scatter.
+        mark = (firstpos[:table] < u).astype(jnp.int32)
+        peers_range = jnp.arange(num_peers, dtype=jnp.int32)
+        if peer_block and table % peer_block == 0:
+            # The engine's peer map is constant on owner-shard blocks of the
+            # idx table (peer = f(idx // shard)), so the per-peer running
+            # count splits into a flat within-block cumsum plus a tiny
+            # per-block prefix — O(T) instead of O(T * P).
+            nb = table // peer_block
+            wc = jnp.cumsum(mark.reshape(nb, peer_block), axis=1)
+            bt = wc[:, -1]                                       # [nb]
+            bpeer = peer_fn(
+                jnp.arange(nb, dtype=jnp.int32) * peer_block).astype(jnp.int32)
+            bh = (bpeer[:, None] == peers_range[None, :]).astype(
+                jnp.int32) * bt[:, None]                         # [nb, P]
+            csum = jnp.cumsum(bh, axis=0)
+            prior = jnp.take_along_axis(
+                csum - bh, jnp.clip(bpeer, 0, num_peers - 1)[:, None],
+                axis=1)[:, 0]                                    # [nb]
+            blk = jnp.clip(idx, 0, table - 1) // peer_block
+            off = jnp.clip(idx, 0, table - 1) % peer_block
+            rank = prior[blk] + wc[blk, off] - 1
+            hist = csum[-1]                                      # heads/peer
+        else:
+            # Generic peer maps: per-peer running count over table order.
+            tpeer = peer_fn(
+                jnp.arange(table, dtype=jnp.int32)).astype(jnp.int32)
+            onehot = (tpeer[:, None] == peers_range[None, :]).astype(
+                jnp.int32) * mark[:, None]
+            trank = jnp.cumsum(onehot, axis=0)  # inclusive per-peer count
+            rank = jnp.take_along_axis(
+                trank[jnp.clip(idx, 0, table - 1)],
+                jnp.clip(peer, 0, num_peers - 1)[:, None], axis=1)[:, 0] - 1
+            hist = trank[-1]
+    else:
+        head = valid
+        msg_val = val
+        # Arrival-order rank: columnwise running count of the peer one-hot
+        # (the per-peer histogram is its last row; the wire's fixed [P, K]
+        # layout makes the exclusive-prefix-sum bucket bases static).
+        onehot = (peer[:, None] == jnp.arange(num_peers, dtype=jnp.int32)
+                  [None, :]).astype(jnp.int32)
+        rank = jnp.take_along_axis(
+            jnp.cumsum(onehot, axis=0),
+            jnp.clip(peer, 0, num_peers - 1)[:, None], axis=1)[:, 0] - 1
+
+    fits = head & (rank < bucket_cap)
+    dest = jnp.where(fits, peer * bucket_cap + rank, num_peers * bucket_cap)
+
+    # Leftovers: messages past their bucket cap, front-compacted (already
+    # coalesced — each carries its segment's value).
+    left = head & ~fits
+    if coalesce:
+        # Histogram + exclusive prefix-sum: per-peer leftover counts give
+        # each peer's base in the compacted leftover region, so leftovers
+        # land in (peer, idx) order — the same order the sort router
+        # compacted them in, which keeps the *drop selection* under
+        # pending-queue pressure bit-identical too.
+        leftcnt = jnp.maximum(hist - bucket_cap, 0)
+        lbase = jnp.cumsum(leftcnt) - leftcnt         # exclusive prefix
+        left_pos = lbase[jnp.clip(peer, 0, num_peers - 1)] + rank - bucket_cap
+    else:
+        left_pos = jnp.cumsum(left, dtype=jnp.int32) - 1
+    ldest = jnp.where(left & (left_pos < cap_out), left_pos, cap_out)
+    left_idx = jnp.full((cap_out + 1,), NO_IDX, jnp.int32).at[ldest].set(
+        jnp.where(left, idx, NO_IDX))
+    left_val = jnp.zeros((cap_out + 1,), val.dtype).at[ldest].set(
+        jnp.where(left, msg_val, 0))
+
+    n_valid = jnp.sum(valid, dtype=jnp.int32)
+    n_msgs = jnp.sum(head, dtype=jnp.int32)
+    n_sent = jnp.sum(fits, dtype=jnp.int32)
+    n_left_raw = n_msgs - n_sent
+    dropped = jnp.maximum(n_left_raw - cap_out, 0)
+    n_left = jnp.minimum(n_left_raw, cap_out)
+    leftover = UpdateStream(left_idx[:cap_out], left_val[:cap_out], n_left)
+
+    # Rank-scatter the fitting messages straight into their wire slots.
+    if fmt is None:
+        packed_idx = jnp.full((num_peers * bucket_cap + 1,), NO_IDX,
+                              jnp.int32).at[dest].set(
+            jnp.where(fits, idx, NO_IDX))
+        packed_val = jnp.zeros((num_peers * bucket_cap + 1,),
+                               val.dtype).at[dest].set(
+            jnp.where(fits, msg_val, 0))
+        wire = (packed_idx[:-1].reshape(num_peers, bucket_cap),
+                packed_val[:-1].reshape(num_peers, bucket_cap))
+    else:
+        key = jnp.where(fits, (peer << fmt.idx_bits) | idx, fmt.invalid_key)
+        if fmt.word64:
+            inv64 = jnp.uint64(fmt.invalid_key) << 32
+            word = (key.astype(jnp.uint64) << 32) | \
+                val_bits(msg_val).astype(jnp.uint64)
+            wire = jnp.full((num_peers * bucket_cap + 1,), inv64,
+                            jnp.uint64).at[dest].set(
+                jnp.where(fits, word, inv64))
+            wire = wire[:-1].reshape(num_peers, bucket_cap)
+        else:
+            inv_key = jnp.int32(fmt.invalid_key)
+            kl = jnp.full((num_peers * bucket_cap + 1,), inv_key,
+                          jnp.int32).at[dest].set(
+                jnp.where(fits, key, inv_key))
+            vl = jnp.zeros((num_peers * bucket_cap + 1,),
+                           jnp.int32).at[dest].set(
+                jnp.where(fits, val_bits(msg_val).astype(jnp.int32), 0))
+            wire = jnp.concatenate(
+                [kl[:-1].reshape(num_peers, bucket_cap),
+                 vl[:-1].reshape(num_peers, bucket_cap)], axis=1)
+    return RouteResult(wire=wire, leftover=leftover, n_sent=n_sent,
+                       n_leftover=n_left, n_coalesced=n_valid - n_msgs,
+                       dropped=dropped)
+
+
+def _route_packed_sort(idx, val, valid, peer_fn, cap_out, bucket_cap, *,
+                       op: ReduceOp, coalesce: bool, fmt: WireFormat):
+    """PR-2 reference: the fused single-sort shuffle on the packed word.
+    Kept (with ``_route_unpacked_sort``) as the property-test oracle for
+    the counting-rank router; the engine never traces this path."""
     num_peers = fmt.num_peers
     peer = jnp.where(valid, peer_fn(idx), num_peers).astype(jnp.int32)
     # Routing key: (peer, idx) in one non-negative int32; invalids park in
@@ -220,10 +430,10 @@ def _route_packed(idx, val, valid, peer_fn, cap_out, bucket_cap, *,
                        n_leftover=n_left, n_coalesced=n_coal, dropped=dropped)
 
 
-def _route_unpacked(idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
-                    *, op: ReduceOp, coalesce: bool):
-    """Fallback shuffle for levels the packed word cannot represent: one
-    multi-operand sort by (peer, idx), two-lane wire."""
+def _route_unpacked_sort(idx, val, valid, peer_fn, num_peers, cap_out,
+                         bucket_cap, *, op: ReduceOp, coalesce: bool):
+    """PR-2 reference for levels the packed word cannot represent: one
+    multi-operand sort by (peer, idx), two-lane wire (test oracle only)."""
     pkey = jnp.where(valid, peer_fn(idx), num_peers).astype(jnp.int32)
     skey = jnp.where(valid, idx, _BIG)
     pkey_s, idx_s, val_s = jax.lax.sort((pkey, skey, val), num_keys=2)

@@ -141,7 +141,32 @@ class TascadeConfig:
                         the SPMD analogue of congestion-aware capture).
       max_exchange_rounds -- safety bound on drain rounds per level (the
                         early-exit drain loop normally stops well before it).
-      use_pallas     -- route P-cache merges through the Pallas kernel.
+      n_lanes        -- batched query lanes: K independent reductions over
+                        the same element space share one engine, one
+                        counting-rank pass, and ONE all_to_all per
+                        level-round (the GTEPS measurement protocol:
+                        multi-source BFS/SSSP sweeps). The engine extends
+                        the element space to ``num_elements * n_lanes``
+                        with lane-major minor order (extended index =
+                        ``idx * n_lanes + lane``), so lanes never coalesce
+                        with each other and owner geometry is unchanged.
+      lane_capacity_share -- fraction of the lane-extended coverage the
+                        geometric capacity plan provisions buckets, queues
+                        and caches for. 1.0 (default) sizes every lane for
+                        worst-case isolation (queues grow ~K-fold; no
+                        backpressure possible beyond the single-lane
+                        plan's). ``1/K`` models the paper's hardware: the
+                        same fixed silicon (router queues, P-cache SRAM)
+                        serves all concurrent queries, so per-epoch wire
+                        and merge sizes stay at single-query scale and
+                        fixed per-round costs genuinely amortize across
+                        the batch; overload converts into bucket
+                        backpressure (exact, audited — never silent
+                        drops that go unnoticed: pending-queue overflow
+                        is counted in ``EngineState.overflow`` and must
+                        stay 0).
+      use_pallas     -- route P-cache merges and the router's
+                        segment-coalesce reduction through Pallas kernels.
       pallas_interpret -- Pallas execution override: None auto-selects by
                         backend (compiled on TPU, interpreted elsewhere);
                         True/False force interpret/compiled mode.
@@ -156,6 +181,8 @@ class TascadeConfig:
     exchange_slack: float = 2.0
     dense_threshold: float = 0.25
     max_exchange_rounds: int = 8
+    n_lanes: int = 1  # batched query lanes sharing the tree (>= 1)
+    lane_capacity_share: float = 1.0  # coverage fraction the plan sizes for
     use_pallas: bool = False  # route P-cache merges through the Pallas kernel
     pallas_interpret: bool | None = None  # None = auto-select by backend
 
@@ -164,6 +191,12 @@ class TascadeConfig:
         object.__setattr__(self, "cascade_axes", tuple(self.cascade_axes))
         object.__setattr__(self, "policy", WritePolicy(self.policy))
         object.__setattr__(self, "mode", CascadeMode(self.mode))
+        if self.n_lanes < 1:
+            raise ValueError(f"n_lanes must be >= 1, got {self.n_lanes}")
+        if not 0.0 < self.lane_capacity_share <= 1.0:
+            raise ValueError(
+                f"lane_capacity_share must be in (0, 1], got "
+                f"{self.lane_capacity_share}")
 
     @property
     def all_axes(self) -> tuple[str, ...]:
@@ -179,8 +212,10 @@ class WireFormat:
 
     A cascaded-update message is one 64-bit word: the high 32 bits are the
     routing key ``(peer << idx_bits) | idx`` (peer = destination bucket on
-    this level, idx = global element index), the low 32 bits are the value's
-    raw IEEE-754 bits. Two physical realizations, chosen statically:
+    this level, idx = global element index — under batched query lanes the
+    *lane-extended* index ``element * n_lanes + lane``, so one wire block
+    carries every lane's traffic), the low 32 bits are the value's raw
+    IEEE-754 bits. Two physical realizations, chosen statically:
 
       word64=True  -- one ``uint64`` array (requires jax x64); the level-round
                       sort runs on a SINGLE operand and the wire is a single

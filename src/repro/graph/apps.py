@@ -42,6 +42,10 @@ class RunMetrics(NamedTuple):
     coalesced: jnp.ndarray    # int32 coalesced updates
     overflow: jnp.ndarray     # int32 MUST be 0
     edges_relaxed: jnp.ndarray  # int64-ish f32 count of generated updates
+                                # (summed over lanes — the GTEPS numerator)
+    lane_epochs: jnp.ndarray  # int32[n_lanes] epoch at which each query
+                              # lane went globally inactive (== epochs while
+                              # a lane is still running at cutoff)
 
 
 # Compiled-app cache: the static plan (mesh, config, shard shapes, app tag)
@@ -77,7 +81,9 @@ def _wt_cfg(cfg: TascadeConfig) -> TascadeConfig:
 
 
 def _wb_cfg(cfg: TascadeConfig) -> TascadeConfig:
-    return dataclasses.replace(cfg, policy=WritePolicy.WRITE_BACK)
+    # The add apps are single-query: lanes only batch the label-correcting
+    # sweeps (their update streams carry lane-extended indices).
+    return dataclasses.replace(cfg, policy=WritePolicy.WRITE_BACK, n_lanes=1)
 
 
 # ----------------------------------------------------- label-correcting apps
@@ -101,6 +107,16 @@ def _label_correcting(mesh, sg: ShardedGraph, cfg: TascadeConfig, *,
     cursor for a full re-relax). Truncation therefore only stretches the
     epoch schedule, never loses edges — even for vertices whose out-degree
     exceeds the whole worklist.
+
+    Batched query lanes (``cfg.n_lanes = L``): labels, frontiers and
+    cursors carry a trailing lane axis ``[shard, L]``; the worklist gather
+    runs over the flattened (vertex, lane) rows so every lane's frontier
+    edges share one stream, one counting-rank pass and one ``all_to_all``
+    per level-round (update index = ``dst * L + lane``). A finished lane
+    (empty frontier, zero lane inflight) simply contributes no rows — the
+    per-lane occupancy counters make that test exact — and the per-query
+    results are bit-equal to L independent single-lane runs (min labels
+    converge to the schedule-independent fixed point).
     """
     cfg = _wt_cfg(cfg)
     wcap = sg.emax if worklist_cap is None else min(worklist_cap, sg.emax)
@@ -120,69 +136,84 @@ def _label_correcting(mesh, sg: ShardedGraph, cfg: TascadeConfig, *,
 def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
                             wcap):
     geom = MeshGeom.from_mesh(mesh, sg.vpad)
-    engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=wcap)
+    lanes = cfg.n_lanes
+    engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=wcap * lanes)
     axes = _axes(mesh)
     sync = cfg.sync_merge
     # Close over shape scalars only: capturing ``sg`` itself would pin the
     # full numpy edge arrays inside the long-lived _JIT_CACHE entry.
     n_shard, n_emax = sg.shard, sg.emax
+    wtot = wcap * lanes
 
-    def shard_fn(row_ptr, dst, weight, seed):
-        # ``seed`` (the root/source vertex) is a traced scalar, not a trace
-        # constant: one compiled executable serves every source vertex, so
-        # root sweeps don't recompile per root.
+    def shard_fn(row_ptr, dst, weight, seeds):
+        # ``seeds`` (one root/source vertex per lane) is a traced vector,
+        # not a trace constant: ONE compiled executable serves every batch
+        # of source vertices, so root sweeps never recompile.
         row_ptr = row_ptr.reshape(-1)
         dst = dst.reshape(-1)
         weight = weight.reshape(-1)
         deg_v = row_ptr[1:] - row_ptr[:-1]  # int32[shard] local out-degrees
-        slots = jnp.arange(wcap, dtype=jnp.int32)
+        slots = jnp.arange(wtot, dtype=jnp.int32)
         base = geom.my_base()
-        dist0, frontier0 = init_fn(base, n_shard, seed)
+        dist0, frontier0 = init_fn(base, n_shard, seeds)  # [shard, L]
         state0 = engine.init_state()
 
         def cond(c):
-            _, _, _, _, active, epoch, _ = c
+            _, _, _, _, active, epoch, _, _ = c
             return (active > 0) & (epoch < max_epochs)
 
         def body(c):
-            state, dist, frontier, skip, _, epoch, acc = c
-            # CSR-driven active-edge gather: prefix-sum the frontier
-            # vertices' REMAINING degrees (the cursor ``skip`` marks edges
-            # already relaxed on carried vertices), then map each worklist
-            # slot back to its (vertex, edge) pair — O(wcap log shard),
-            # not O(E).
-            adeg = jnp.where(frontier, deg_v - skip, 0)
-            cum = jnp.cumsum(adeg)               # inclusive; cum[-1] = total
+            state, dist, frontier, skip, _, epoch, lane_ep, acc = c
+            # CSR-driven active-edge gather over the flattened
+            # (vertex, lane) rows: prefix-sum the frontier rows' REMAINING
+            # degrees (the cursor ``skip`` marks edges already relaxed on
+            # carried rows), then map each worklist slot back to its
+            # (vertex, lane, edge) triple — O(wtot log(shard*L)), not O(E*L).
+            adeg = jnp.where(frontier, deg_v[:, None] - skip, 0)
+            flat = adeg.reshape(-1)              # row r = vertex * L + lane
+            cum = jnp.cumsum(flat)               # inclusive; cum[-1] = total
             total = cum[-1]
-            start = cum - adeg                   # worklist offset per vertex
-            u = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32)
-            uc = jnp.clip(u, 0, n_shard - 1)
-            e = jnp.clip(row_ptr[uc] + skip[uc] + (slots - start[uc]),
+            start = cum - flat                   # worklist offset per row
+            r = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32)
+            rc = jnp.clip(r, 0, n_shard * lanes - 1)
+            uc = rc // lanes
+            ln = rc % lanes
+            skip_flat = skip.reshape(-1)
+            e = jnp.clip(row_ptr[uc] + skip_flat[rc] + (slots - start[rc]),
                          0, n_emax - 1)
             ok = slots < total
-            cand = cand_fn(dist, uc, weight[e])
+            cand = cand_fn(dist, uc, ln, weight[e])
             new = UpdateStream(
-                jnp.where(ok, dst[e], NO_IDX),
+                jnp.where(ok, dst[e] * lanes + ln, NO_IDX),
                 jnp.where(ok, cand, 0.0),
             )
-            # Vertices whose edge range spilled past the worklist stay in
-            # the frontier and resume at their cursor next epoch.
-            carried = frontier & (cum > wcap)
-            processed = jnp.clip(jnp.minimum(cum, wcap) - start, 0, None)
+            # Rows whose edge range spilled past the worklist stay in the
+            # frontier and resume at their cursor next epoch.
+            cum2 = cum.reshape(n_shard, lanes)
+            carried = frontier & (cum2 > wtot)
+            processed = jnp.clip(jnp.minimum(cum, wtot) - start,
+                                 0, None).reshape(n_shard, lanes)
             old = dist
-            state, dist, stats = engine.step(
-                state, dist, new, drain=sync, flush=False
+            dist_flat, = (dist.reshape(-1),)
+            state, dist_flat, stats = engine.step(
+                state, dist_flat, new, drain=sync, flush=False
             )
+            dist = dist_flat.reshape(n_shard, lanes)
             improved = dist < old
-            # An improved vertex must re-relax ALL its edges with the new
-            # label, so its cursor resets; an untouched carried vertex
+            # An improved row must re-relax ALL its edges with the new
+            # label, so its cursor resets; an untouched carried row
             # advances past what this epoch covered.
             skip = jnp.where(carried & ~improved, skip + processed, 0)
             frontier = improved | carried
-            n_relaxed = jnp.minimum(total, wcap)
-            active = jax.lax.psum(
-                jnp.sum(frontier, dtype=jnp.int32) + stats.inflight, axes
-            )
+            n_relaxed = jnp.minimum(total, wtot)
+            # Per-lane liveness: frontier rows still to relax + updates
+            # pending inside the tree (the engine's per-lane occupancy
+            # counters). A finished lane stops contributing worklist rows.
+            lane_active = jax.lax.psum(
+                jnp.sum(frontier, axis=0, dtype=jnp.int32)
+                + stats.lane_inflight, axes)
+            active = jnp.sum(lane_active, dtype=jnp.int32)
+            lane_ep = jnp.where(lane_active > 0, epoch + 1, lane_ep)
             acc = (
                 acc[0] + jnp.sum(stats.sent, dtype=jnp.int32),
                 acc[1] + stats.hop_bytes,
@@ -190,14 +221,17 @@ def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
                 acc[3] + stats.coalesced,
                 acc[4] + n_relaxed.astype(jnp.float32),
             )
-            return state, dist, frontier, skip, active, epoch + 1, acc
+            return (state, dist, frontier, skip, active, epoch + 1,
+                    lane_ep, acc)
 
         acc0 = (jnp.int32(0), jnp.float32(0), jnp.int32(0), jnp.int32(0),
                 jnp.float32(0))
-        skip0 = jnp.zeros((n_shard,), jnp.int32)
-        state, dist, _, _, active, epoch, acc = jax.lax.while_loop(
+        skip0 = jnp.zeros((n_shard, lanes), jnp.int32)
+        lane_ep0 = jnp.zeros((lanes,), jnp.int32)
+        state, dist, _, _, active, epoch, lane_ep, acc = jax.lax.while_loop(
             cond, body,
-            (state0, dist0, frontier0, skip0, jnp.int32(1), jnp.int32(0), acc0)
+            (state0, dist0, frontier0, skip0, jnp.int32(1), jnp.int32(0),
+             lane_ep0, acc0)
         )
         m = RunMetrics(
             epochs=epoch,
@@ -207,34 +241,60 @@ def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
             coalesced=jax.lax.psum(acc[3], axes),
             overflow=jax.lax.psum(state.overflow, axes),
             edges_relaxed=jax.lax.psum(acc[4], axes),
+            lane_epochs=lane_ep,  # psummed lane_active => replicated
         )
-        return dist, m
+        # Single-lane callers keep the historical [shard] result shape.
+        return (dist[:, 0] if lanes == 1 else dist), m
 
     a = _axes(mesh)
     return jax.jit(compat.shard_map(
         shard_fn, mesh=mesh,
-        in_specs=_graph_specs(mesh) + (P(),),  # replicated root scalar
-        out_specs=(P(a), RunMetrics(*([P()] * 7))),
+        in_specs=_graph_specs(mesh) + (P(),),  # replicated seed vector
+        out_specs=(P(a) if lanes == 1 else P(a, None),
+                   RunMetrics(*([P()] * 8))),
         check_vma=False,
     ))
 
 
+def _sssp_init(base, shard, seeds):
+    local = jnp.arange(shard) + base                  # [shard]
+    hit = local[:, None] == seeds[None, :]            # [shard, L]
+    dist = jnp.where(hit, 0.0, jnp.inf).astype(jnp.float32)
+    return dist, hit
+
+
+def _sssp_cand(dist, src_local, lane, w):
+    return dist[jnp.clip(src_local, 0, dist.shape[0] - 1), lane] + w
+
+
 def run_sssp(mesh, sg: ShardedGraph, root: int, cfg: TascadeConfig,
              max_epochs: int = 256, worklist_cap: int | None = None):
-    def init(base, shard, seed):
-        local = jnp.arange(shard) + base
-        dist = jnp.where(local == seed, 0.0, jnp.inf).astype(jnp.float32)
-        frontier = local == seed
-        return dist, frontier
-
-    def cand(dist, src_local, w):
-        return dist[jnp.clip(src_local, 0, dist.shape[0] - 1)] + w
-
-    fn = _label_correcting(mesh, sg, cfg, init_fn=init, cand_fn=cand,
-                           max_epochs=max_epochs, worklist_cap=worklist_cap,
-                           cache_key="sssp")
+    cfg = dataclasses.replace(cfg, n_lanes=1)
+    fn = _label_correcting(mesh, sg, cfg, init_fn=_sssp_init,
+                           cand_fn=_sssp_cand, max_epochs=max_epochs,
+                           worklist_cap=worklist_cap, cache_key="sssp")
     return fn(jnp.asarray(sg.row_ptr), jnp.asarray(sg.dst),
-              jnp.asarray(sg.weight), jnp.int32(root))
+              jnp.asarray(sg.weight), jnp.full((1,), root, jnp.int32))
+
+
+def run_sssp_multi(mesh, sg: ShardedGraph, roots, cfg: TascadeConfig,
+                   max_epochs: int = 256, worklist_cap: int | None = None):
+    """Batched multi-source SSSP: one lane per root, ONE engine and ONE
+    ``all_to_all`` per level-round shared by the whole sweep (the GTEPS
+    measurement protocol). Returns (dist [L, Vpad], RunMetrics); lane l is
+    bit-equal to ``run_sssp(..., roots[l], ...)``.
+
+    The compiled executable is keyed on the lane COUNT, not the root
+    values — every K-root sweep reuses one program.
+    """
+    roots = np.asarray(roots, np.int32)
+    cfg = dataclasses.replace(cfg, n_lanes=int(roots.shape[0]))
+    fn = _label_correcting(mesh, sg, cfg, init_fn=_sssp_init,
+                           cand_fn=_sssp_cand, max_epochs=max_epochs,
+                           worklist_cap=worklist_cap, cache_key="sssp")
+    dist, m = fn(jnp.asarray(sg.row_ptr), jnp.asarray(sg.dst),
+                 jnp.asarray(sg.weight), jnp.asarray(roots))
+    return dist.T, m
 
 
 def run_bfs(mesh, sg: ShardedGraph, root: int, cfg: TascadeConfig,
@@ -243,24 +303,34 @@ def run_bfs(mesh, sg: ShardedGraph, root: int, cfg: TascadeConfig,
     return run_sssp(mesh, sg_unit, root, cfg, max_epochs, worklist_cap)
 
 
+def run_bfs_multi(mesh, sg: ShardedGraph, roots, cfg: TascadeConfig,
+                  max_epochs: int = 256, worklist_cap: int | None = None):
+    """Batched multi-source BFS (unit weights; shares SSSP's executable)."""
+    sg_unit = dataclasses.replace(sg, weight=np.ones_like(sg.weight))
+    return run_sssp_multi(mesh, sg_unit, roots, cfg, max_epochs,
+                          worklist_cap)
+
+
 def run_wcc(mesh, sg: ShardedGraph, cfg: TascadeConfig, max_epochs: int = 256,
             worklist_cap: int | None = None):
     """Graph must be symmetrized (edges both ways)."""
-    def init(base, shard, seed):
-        del seed  # label propagation has no source vertex
+    cfg = dataclasses.replace(cfg, n_lanes=1)
+
+    def init(base, shard, seeds):
+        del seeds  # label propagation has no source vertex
         local = (jnp.arange(shard) + base).astype(jnp.float32)
         # padding vertices (>= true V) keep their own id and never propagate
-        return local, jnp.ones((shard,), bool)
+        return local[:, None], jnp.ones((shard, 1), bool)
 
-    def cand(dist, src_local, w):
+    def cand(dist, src_local, lane, w):
         del w
-        return dist[jnp.clip(src_local, 0, dist.shape[0] - 1)]
+        return dist[jnp.clip(src_local, 0, dist.shape[0] - 1), lane]
 
     fn = _label_correcting(mesh, sg, cfg, init_fn=init, cand_fn=cand,
                            max_epochs=max_epochs, worklist_cap=worklist_cap,
                            cache_key="wcc")
     return fn(jnp.asarray(sg.row_ptr), jnp.asarray(sg.dst),
-              jnp.asarray(sg.weight), jnp.int32(0))
+              jnp.asarray(sg.weight), jnp.zeros((1,), jnp.int32))
 
 
 # --------------------------------------------------------------- add apps
@@ -346,6 +416,7 @@ def _build_pagerank(mesh, sg, cfg, iters, d, dense):
             coalesced=jax.lax.psum(acc[3], axes),
             overflow=jax.lax.psum(acc[4], axes),
             edges_relaxed=jnp.float32(0),
+            lane_epochs=jnp.full((1,), iters, jnp.int32),
         )
         return rank, m
 
@@ -353,7 +424,7 @@ def _build_pagerank(mesh, sg, cfg, iters, d, dense):
     return jax.jit(compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=_graph_specs(mesh) + (P(a, None),),
-        out_specs=(P(a), RunMetrics(*([P()] * 7))),
+        out_specs=(P(a), RunMetrics(*([P()] * 8))),
         check_vma=False,
     ))
 
@@ -396,6 +467,7 @@ def _build_spmv(mesh, sg, cfg):
             coalesced=jax.lax.psum(stats.coalesced, axes),
             overflow=jax.lax.psum(state.overflow, axes),
             edges_relaxed=jax.lax.psum(jnp.sum(ok.astype(jnp.float32)), axes),
+            lane_epochs=jnp.ones((1,), jnp.int32),
         )
         return y, m
 
@@ -403,7 +475,7 @@ def _build_spmv(mesh, sg, cfg):
     return jax.jit(compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=_graph_specs(mesh) + (P(a),),
-        out_specs=(P(a), RunMetrics(*([P()] * 7))),
+        out_specs=(P(a), RunMetrics(*([P()] * 8))),
         check_vma=False,
     ))
 

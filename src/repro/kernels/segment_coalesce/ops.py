@@ -1,0 +1,55 @@
+"""Dispatcher for the segment-coalesce reduction.
+
+``impl="jnp"`` is the default engine path: one XLA scatter-reduce
+(``jax.ops.segment_*``) — sort-free and fused into the surrounding
+level-round program. ``impl="pallas"`` runs the block-tiled TPU kernel
+(compiled on TPU, interpreter elsewhere; ``interpret=None`` auto-selects,
+or force via ``TascadeConfig.pallas_interpret``). ``impl="ref"`` is the
+sequential numpy oracle (tests only; runs outside the trace). ``"auto"``
+picks pallas on TPU and jnp elsewhere.
+
+All impls are exact for MIN/MAX (order-independent combines); for ADD they
+agree up to summation order within a segment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_coalesce.segment_coalesce import (
+    _SEG_REDUCE,
+    segment_coalesce_pallas,
+)
+from repro.kernels.segment_coalesce.ref import segment_coalesce_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "op", "impl", "block",
+                                    "interpret"))
+def _traced(seg, val, num_segments: int, *, op: str, impl: str,
+            block: int, interpret: bool | None):
+    if impl == "pallas":
+        return segment_coalesce_pallas(seg, val, num_segments, op=op,
+                                       block=block, interpret=interpret)
+    assert impl == "jnp", impl
+    return _SEG_REDUCE[op](val, seg, num_segments=num_segments + 1)[:-1]
+
+
+def segment_coalesce(seg, val, num_segments: int, *, op: str,
+                     impl: str = "auto", block: int = 2048,
+                     interpret: bool | None = None):
+    """Combine ``val`` per segment id under ``op`` (see module docstring).
+
+    seg ids equal to ``num_segments`` park sentinel padding and are dropped;
+    empty segments come back at the op identity.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "ref":
+        return jnp.asarray(segment_coalesce_ref(
+            np.asarray(seg), np.asarray(val), num_segments, op=op))
+    return _traced(seg, val, num_segments, op=op, impl=impl, block=block,
+                   interpret=interpret)

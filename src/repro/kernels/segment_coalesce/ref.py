@@ -1,0 +1,32 @@
+"""Numpy oracle for the segment-coalesce reduction.
+
+One message per segment: every element contributes its value to its segment
+id's combined slot under the reduction op, in arrival (stream) order —
+exactly the semantics of the paper's at-source coalescing once the
+counting-rank router has assigned each duplicate the wire slot of its
+segment head. Elements whose segment id is ``num_segments`` (the park bin
+for sentinel padding) are ignored.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_IDENTITY = {"min": np.inf, "max": -np.inf, "add": 0.0}
+
+
+def segment_coalesce_ref(seg: np.ndarray, val: np.ndarray,
+                         num_segments: int, *, op: str) -> np.ndarray:
+    """Sequential per-element oracle. seg: int[U] in [0, num_segments] (the
+    last bin parks invalids); val: f32[U]. Returns f32[num_segments]."""
+    assert op in _IDENTITY
+    out = np.full((num_segments,), _IDENTITY[op], np.float32)
+    for s, v in zip(np.asarray(seg), np.asarray(val, np.float32)):
+        if s < 0 or s >= num_segments:
+            continue
+        if op == "add":
+            out[s] += v
+        elif op == "min":
+            out[s] = min(out[s], v)
+        else:
+            out[s] = max(out[s], v)
+    return out

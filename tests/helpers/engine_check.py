@@ -62,10 +62,11 @@ def count_sorts(jaxpr) -> int:
     return count_primitive(jaxpr, "sort")
 
 
-def check_single_sort_per_level_round(mesh, vpad, u):
-    """Acceptance: exactly one sort-based shuffle AND exactly one all_to_all
-    collective per level-round in engine.step (the fused route_and_pack on
-    the packed single-word wire; no enqueue/pack/coalesce sorts, no
+def check_sort_free_level_round(mesh, vpad, u):
+    """Acceptance: ZERO sort primitives AND exactly one all_to_all
+    collective per level-round in engine.step (the counting-rank
+    route_and_pack on the packed single-word wire: histogram ranks +
+    rank-scatter, no sort-based shuffle anywhere in the hot path, no
     second per-lane exchange)."""
     from jax.sharding import PartitionSpec as P
 
@@ -98,8 +99,9 @@ def check_single_sort_per_level_round(mesh, vpad, u):
         )
         n_sorts = count_sorts(jaxpr.jaxpr)
         n_a2a = count_primitive(jaxpr.jaxpr, "all_to_all")
-        assert n_sorts == nlev, (
-            f"{mode.value}: {n_sorts} sorts for {nlev} level-rounds")
+        assert n_sorts == 0, (
+            f"{mode.value}: {n_sorts} sorts in {nlev} level-rounds "
+            "(counting-rank router must be sort-free)")
         assert n_a2a == nlev, (
             f"{mode.value}: {n_a2a} all_to_all for {nlev} level-rounds")
         print(f"OK jaxpr {mode.value}: {n_sorts} sort(s), {n_a2a} "
@@ -137,7 +139,7 @@ def main():
     u = 64
     rng = np.random.default_rng(0)
 
-    check_single_sort_per_level_round(mesh, vpad, u)
+    check_sort_free_level_round(mesh, vpad, u)
     check_overflow_accounting(mesh, ndev)
 
     # Full {ADD,MIN,MAX} x {WT,WB} x mode product: the fused pipeline must be

@@ -1,0 +1,165 @@
+"""Subprocess helper: batched query lanes on a fake 8-device mesh.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8. Checks the
+GTEPS-protocol contracts of lane batching:
+
+  1. a K-lane multi-source SSSP/BFS sweep is per-lane BIT-equal to K
+     independent single-source runs,
+  2. ONE compiled executable serves every batch of roots (roots are data,
+     not trace constants) — and the K=1 path reuses the single-source one,
+  3. the jaxpr of a lane-batched engine.step still contains ZERO sort
+     primitives and exactly ONE all_to_all per level-round, regardless of K
+     (all lanes share every collective),
+  4. lane-batched scatter-reduce through the public API is per-lane
+     bit-equal to independent reductions, for MIN and ADD.
+
+Prints one line per check; exits non-zero on failure.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    CascadeMode,
+    MeshGeom,
+    ReduceOp,
+    TascadeConfig,
+    TascadeEngine,
+    WritePolicy,
+    compat,
+    tascade_scatter_reduce,
+)
+from repro.core.types import UpdateStream
+from repro.graph import apps
+from repro.graph.partition import shard_graph
+from repro.graph.rmat import rmat_graph
+
+from engine_check import count_primitive, count_sorts
+
+
+def check_multi_source_bit_equal(mesh, sg, roots, cfg):
+    dist_b, mb = apps.run_sssp_multi(mesh, sg, roots, cfg)
+    assert int(mb.overflow) == 0
+    assert mb.lane_epochs.shape == (len(roots),)
+    for l, r in enumerate(roots):
+        d, m = apps.run_sssp(mesh, sg, r, cfg)
+        np.testing.assert_array_equal(
+            np.asarray(dist_b[l]), np.asarray(d),
+            err_msg=f"lane {l} (root {r}) != single-source run")
+        assert int(mb.lane_epochs[l]) <= int(mb.epochs)
+    print(f"OK lanes: K={len(roots)} sweep per-lane bit-equal to "
+          f"{len(roots)} single-source runs "
+          f"(lane_epochs={np.asarray(mb.lane_epochs).tolist()})")
+
+
+def check_one_executable(mesh, sg, roots, cfg):
+    """Roots are call data: a second sweep with different roots must not
+    grow the compiled-program cache."""
+    apps.run_sssp_multi(mesh, sg, roots, cfg)
+    n0 = len(apps._JIT_CACHE)
+    other = list(reversed(roots))
+    apps.run_sssp_multi(mesh, sg, other, cfg)
+    assert len(apps._JIT_CACHE) == n0, (
+        "multi-source sweep recompiled for a different root set")
+    print(f"OK lanes: one executable serves any {len(roots)}-root batch")
+
+
+def check_jaxpr_lane_invariants(mesh, vpad, u):
+    """ZERO sorts, ONE all_to_all per level-round — independent of K."""
+    from jax.sharding import PartitionSpec as P
+
+    geom = MeshGeom.from_mesh(mesh, vpad)
+    for k in (1, 4, 8):
+        cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                            capacity_ratio=4, mode=CascadeMode.FULL_CASCADE,
+                            policy=WritePolicy.WRITE_THROUGH, n_lanes=k)
+        engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=u * k)
+        nlev = len(engine.levels)
+        shard = vpad // mesh.devices.size
+
+        def shard_fn(dest, idx, val):
+            state = engine.init_state()
+            new = UpdateStream(idx.reshape(-1), val.reshape(-1))
+            state, dest, stats = engine.step(state, dest.reshape(-1), new)
+            return dest
+
+        axes = tuple(mesh.axis_names)
+        fn = compat.shard_map(shard_fn, mesh=mesh,
+                              in_specs=(P(axes), P(axes), P(axes)),
+                              out_specs=P(axes), check_vma=False)
+        jaxpr = jax.make_jaxpr(fn)(
+            jnp.zeros((vpad * k,), jnp.float32),
+            jnp.zeros((8, u * k), jnp.int32),
+            jnp.zeros((8, u * k), jnp.float32),
+        )
+        n_sorts = count_sorts(jaxpr.jaxpr)
+        n_a2a = count_primitive(jaxpr.jaxpr, "all_to_all")
+        assert n_sorts == 0, f"K={k}: {n_sorts} sorts"
+        assert n_a2a == nlev, (
+            f"K={k}: {n_a2a} all_to_all for {nlev} level-rounds — lanes "
+            "must share every collective")
+        print(f"OK jaxpr lanes K={k}: 0 sorts, {n_a2a} all_to_all for "
+              f"{nlev} level(s)")
+
+
+def check_scatter_reduce_lanes(mesh, ndev):
+    vpad, u, L = 256, 64, 4
+    rng = np.random.default_rng(3)
+    idx = np.minimum(rng.zipf(1.5, size=(ndev, u)).astype(np.int64) - 1,
+                     vpad - 1).astype(np.int32)
+    idx = np.where(rng.random((ndev, u)) < 0.9, idx, -1)
+    lane = rng.integers(0, L, size=(ndev, u)).astype(np.int32)
+    val = rng.integers(-5, 6, size=(ndev, u)).astype(np.float32)
+    val = np.where(idx == -1, 0, val)
+    for op, policy in ((ReduceOp.MIN, WritePolicy.WRITE_THROUGH),
+                       (ReduceOp.ADD, WritePolicy.WRITE_BACK)):
+        cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                            capacity_ratio=4, policy=policy,
+                            mode=CascadeMode.TASCADE, n_lanes=L)
+        dest = jnp.full((L, vpad), op.identity, jnp.float32)
+        out, stats = tascade_scatter_reduce(
+            dest, jnp.asarray(idx), jnp.asarray(val), op=op, cfg=cfg,
+            mesh=mesh, lane=jnp.asarray(lane), return_stats=True)
+        assert int(stats["overflow"]) == 0 and int(stats["residual"]) == 0
+        cfg1 = dataclasses.replace(cfg, n_lanes=1)
+        for l in range(L):
+            sel = lane == l
+            ref = tascade_scatter_reduce(
+                jnp.full((vpad,), op.identity, jnp.float32),
+                jnp.asarray(np.where(sel, idx, -1)),
+                jnp.asarray(np.where(sel, val, 0)),
+                op=op, cfg=cfg1, mesh=mesh)
+            np.testing.assert_array_equal(
+                np.asarray(out[l]), np.asarray(ref),
+                err_msg=f"{op.value} lane {l}")
+        print(f"OK lanes scatter-reduce {op.value}: per-lane bit-equal")
+
+
+def main():
+    mesh = compat.make_mesh((2, 4), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
+    ndev = 8
+
+    check_jaxpr_lane_invariants(mesh, vpad=256, u=32)
+    check_scatter_reduce_lanes(mesh, ndev)
+
+    g = rmat_graph(9, edge_factor=8, seed=1, weighted=True)
+    sg = shard_graph(g, ndev)
+    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                        capacity_ratio=8, mode=CascadeMode.TASCADE,
+                        exchange_slack=2.0)
+    roots = [int(r) for r in np.argsort(-g.degrees)[:4]]
+    check_multi_source_bit_equal(mesh, sg, roots, cfg)
+    check_one_executable(mesh, sg, roots, cfg)
+
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""Equivalence property tests: counting-rank router vs the sort reference.
+
+The engine's level-round shuffle is the O(U) counting-rank router
+(``route_and_pack(impl="count")``, zero sort primitives); the PR-2
+single-sort router is retained as ``impl="sort"`` purely as the oracle for
+these tests. Contract, swept across {ADD, MIN, MAX} x all CascadeModes
+(mapped to their coalesce flag) x {packed, unpacked} wires x generous /
+overflowing bucket and pending capacities:
+
+  * all four counters (n_sent, n_leftover, n_coalesced, dropped) are
+    bit-identical — overflow accounting matches the sort router exactly,
+  * in coalescing modes the fit/leftover *selection* matches bit for bit:
+    each peer's wire bucket and the leftover stream are multiset-identical
+    (the counting router ranks messages per peer in element-index order,
+    the same order the sort derived),
+  * in the non-coalescing mode (OWNER_DIRECT) duplicates are
+    interchangeable wire messages, so per-peer bucket counts and the
+    bucket-union-leftover multiset are contractual instead,
+  * per-peer bucket well-formedness (right peer, uniqueness under
+    coalescing).
+
+Values are integer-valued floats so ADD coalescing is bit-stable under any
+summation order (MIN/MAX are order-independent by construction); with
+arbitrary floats the two routers' coalesced ADD sums may differ in the last
+ulp because XLA's scatter-add reduction order differs between programs.
+
+The engine-side invariant — ZERO sorts and ONE all_to_all per level-round
+in the jaxpr of ``engine.step`` — is checked in
+``tests/helpers/engine_check.py`` (subprocess, 8 fake devices).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import exchange as ex
+from repro.core.types import (
+    CascadeMode,
+    ReduceOp,
+    UpdateStream,
+    make_stream,
+    wire_format_for,
+)
+
+OPS = [ReduceOp.MIN, ReduceOp.MAX, ReduceOp.ADD]
+MODES = list(CascadeMode)
+
+
+def _int_stream(rng, n, u, frac_valid=0.85):
+    """Sentinel-padded stream with integer-valued f32 payloads (bit-stable
+    under any reduction order)."""
+    idx = rng.integers(0, n, size=u).astype(np.int32)
+    idx = np.where(rng.random(u) < frac_valid, idx, -1)
+    val = rng.integers(-8, 8, size=u).astype(np.float32)
+    val = np.where(idx == -1, 0, val)
+    return UpdateStream(jnp.asarray(idx), jnp.asarray(val))
+
+
+def _multiset(idx, val):
+    m = {}
+    for i, v in zip(np.asarray(idx).reshape(-1), np.asarray(val).reshape(-1)):
+        if i != -1:
+            k = (int(i), np.float32(v).tobytes())  # value BITS, not values
+            m[k] = m.get(k, 0) + 1
+    return m
+
+
+def _route_both(new, n, P, K, cap, *, op, coalesce, packed):
+    fmt = wire_format_for(P, n) if packed else None
+    if packed:
+        assert fmt is not None
+    out = {}
+    for impl in ("count", "sort"):
+        out[impl] = ex.route_and_pack(
+            make_stream(cap, counted=True), new, lambda i: i % P, P, K,
+            op=op, coalesce=coalesce, fmt=fmt, impl=impl, num_elements=n)
+    return out["count"], out["sort"], fmt
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("packed", [True, False])
+@pytest.mark.parametrize("bucket_cap", [64, 3])  # 3 forces bucket overflow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_count_bit_equal_to_sort(op, mode, packed, bucket_cap, seed):
+    rng = np.random.default_rng(1000 * seed + bucket_cap)
+    n, u, P = 97, 64, 4
+    cap = u  # pending capacity ample: leftover never drops here
+    coalesce = mode is not CascadeMode.OWNER_DIRECT
+    new = _int_stream(rng, n, u)
+    rc, rs, fmt = _route_both(new, n, P, bucket_cap, cap,
+                              op=op, coalesce=coalesce, packed=packed)
+
+    for name in ("n_sent", "n_leftover", "n_coalesced", "dropped"):
+        assert int(getattr(rc, name)) == int(getattr(rs, name)), name
+
+    pc = ex.wire_to_stream(rc.wire, fmt)
+    ps = ex.wire_to_stream(rs.wire, fmt)
+    ci = np.asarray(pc.idx).reshape(P, bucket_cap)
+    si = np.asarray(ps.idx).reshape(P, bucket_cap)
+    if coalesce:
+        # Fit selection matches the sort router bit for bit: per-peer
+        # buckets and the leftover stream are multiset-identical.
+        cv = np.asarray(pc.val).reshape(P, bucket_cap)
+        sv = np.asarray(ps.val).reshape(P, bucket_cap)
+        for p in range(P):
+            assert _multiset(ci[p], cv[p]) == _multiset(si[p], sv[p]), p
+        # Leftovers come back in (peer, idx) order on BOTH paths (the
+        # counting router compacts through the histogram prefix), so the
+        # streams are element-for-element identical, value bits included.
+        np.testing.assert_array_equal(np.asarray(rc.leftover.idx),
+                                      np.asarray(rs.leftover.idx))
+        np.testing.assert_array_equal(
+            np.asarray(rc.leftover.val).view(np.uint32),
+            np.asarray(rs.leftover.val).view(np.uint32))
+    else:
+        # Duplicates are interchangeable: counts per peer + the union
+        # multiset (conservation) are the contract.
+        np.testing.assert_array_equal((ci != -1).sum(1), (si != -1).sum(1))
+        un_c = _multiset(
+            np.concatenate([np.asarray(pc.idx), np.asarray(rc.leftover.idx)]),
+            np.concatenate([np.asarray(pc.val), np.asarray(rc.leftover.val)]))
+        un_s = _multiset(
+            np.concatenate([np.asarray(ps.idx), np.asarray(rs.leftover.idx)]),
+            np.concatenate([np.asarray(ps.val), np.asarray(rs.leftover.val)]))
+        assert un_c == un_s
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("coalesce", [True, False])
+@pytest.mark.parametrize("seed", range(3))
+def test_count_overflow_accounting_bit_equal(op, coalesce, seed):
+    """Severe bucket AND pending pressure: dropped/leftover accounting must
+    stay bit-identical to the sort reference (audited, never clamped)."""
+    rng = np.random.default_rng(seed)
+    n, u, P, K, cap = 24, 48, 4, 2, 6
+    new = _int_stream(rng, n, u)
+    rc, rs, _ = _route_both(new, n, P, K, cap,
+                            op=op, coalesce=coalesce, packed=True)
+    assert int(rc.dropped) > 0  # the pressure must actually drop entries
+    for name in ("n_sent", "n_leftover", "n_coalesced", "dropped"):
+        assert int(getattr(rc, name)) == int(getattr(rs, name)), name
+    if coalesce:
+        # Even WHICH messages survive the pending-queue drop matches: both
+        # paths compact leftovers in (peer, idx) order.
+        np.testing.assert_array_equal(np.asarray(rc.leftover.idx),
+                                      np.asarray(rs.leftover.idx))
+        np.testing.assert_array_equal(
+            np.asarray(rc.leftover.val).view(np.uint32),
+            np.asarray(rs.leftover.val).view(np.uint32))
+
+
+@pytest.mark.parametrize("coalesce", [True, False])
+def test_count_bucket_structure(coalesce):
+    rng = np.random.default_rng(7)
+    n, u, P, K = 64, 40, 4, 4
+    new = _int_stream(rng, n, u)
+    rc, _, fmt = _route_both(new, n, P, K, u,
+                             op=ReduceOp.ADD, coalesce=coalesce, packed=True)
+    packed = np.asarray(ex.wire_to_stream(rc.wire, fmt).idx).reshape(P, K)
+    for p in range(P):
+        bucket = packed[p][packed[p] != -1]
+        assert np.all(bucket % P == p), f"foreign entry in bucket {p}"
+        if coalesce:
+            assert len(np.unique(bucket)) == len(bucket)
+    left = np.asarray(rc.leftover.idx)
+    nleft = int(rc.n_leftover)
+    assert np.all(left[:nleft] != -1) and np.all(left[nleft:] == -1)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("coalesce_impl", ["pallas", "ref"])
+def test_count_router_coalesce_backends_agree(op, coalesce_impl):
+    """The router's segment-coalesce reduction through the Pallas kernel
+    (interpret mode off-TPU) and the numpy oracle must match the default
+    jnp scatter-reduce bit for bit on integer-valued payloads."""
+    rng = np.random.default_rng(11)
+    n, u, P, K = 50, 96, 4, 16  # small n => heavy duplication
+    new = _int_stream(rng, n, u)
+    fmt = wire_format_for(P, n)
+    outs = {}
+    for impl in ("jnp", coalesce_impl):
+        rr = ex.route_and_pack(
+            make_stream(u, counted=True), new, lambda i: i % P, P, K,
+            op=op, coalesce=True, fmt=fmt, num_elements=n,
+            coalesce_impl=impl)
+        s = ex.wire_to_stream(rr.wire, fmt)
+        outs[impl] = (np.asarray(s.idx), np.asarray(s.val),
+                      int(rr.n_sent), int(rr.n_coalesced))
+    a, b = outs["jnp"], outs[coalesce_impl]
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    assert a[2:] == b[2:]
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("bucket_cap", [64, 3])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_block_rank_matches_generic_and_sort(op, bucket_cap, seed):
+    """The engine's block-structured rank (peer constant on owner-shard idx
+    blocks) must match both the generic table rank and the sort reference
+    bit for bit."""
+    rng = np.random.default_rng(seed + 17)
+    n, u, P, shard = 96, 64, 4, 24  # peer = idx // shard: block-constant
+    fmt = wire_format_for(P, n)
+    new = _int_stream(rng, n, u)
+    outs = {}
+    for pb in (None, shard):
+        outs[pb] = ex.route_and_pack(
+            make_stream(u, counted=True), new, lambda i: i // shard, P,
+            bucket_cap, op=op, coalesce=True, fmt=fmt, num_elements=n,
+            peer_block=pb)
+    rsort = ex.route_and_pack(
+        make_stream(u, counted=True), new, lambda i: i // shard, P,
+        bucket_cap, op=op, coalesce=True, fmt=fmt, num_elements=n,
+        impl="sort")
+    for other in (outs[None], rsort):
+        for name in ("n_sent", "n_leftover", "n_coalesced", "dropped"):
+            assert int(getattr(outs[shard], name)) == \
+                int(getattr(other, name)), name
+        np.testing.assert_array_equal(np.asarray(outs[shard].leftover.idx),
+                                      np.asarray(other.leftover.idx))
+        a = ex.wire_to_stream(outs[shard].wire, fmt)
+        b = ex.wire_to_stream(other.wire, fmt)
+        assert _multiset(a.idx, a.val) == _multiset(b.idx, b.val)
+    # block path orders buckets identically to the generic table rank
+    np.testing.assert_array_equal(
+        np.asarray(ex.wire_to_stream(outs[shard].wire, fmt).idx),
+        np.asarray(ex.wire_to_stream(outs[None].wire, fmt).idx))

@@ -12,6 +12,8 @@ Deterministic sweeps always run; hypothesis widens the sweep when available
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # interpret-mode Pallas parity / property cross-products (CI slow tier)
+
 import jax.numpy as jnp
 
 from repro.core import exchange as ex
@@ -112,7 +114,8 @@ def test_route_and_pack_dropped_exact(seed, coalesce, packed):
     pending = make_stream(cap, counted=True)
     new = _stream(rng, n, u)
     rr = ex.route_and_pack(pending, new, lambda i: i % P, P, K,
-                           op=ReduceOp.ADD, coalesce=coalesce, fmt=fmt)
+                           op=ReduceOp.ADD, coalesce=coalesce, fmt=fmt,
+                           num_elements=n)
     idx = np.asarray(new.idx)
     want_sent, want_left, want_drop = _route_drop_oracle(
         idx, lambda v: v % P, P, K, cap, coalesce)
@@ -143,7 +146,8 @@ def test_wire_roundtrip_bit_exact(packed):
     pending = make_stream(8, counted=True)
     new = UpdateStream(jnp.asarray(idx), jnp.asarray(specials))
     rr = ex.route_and_pack(pending, new, lambda i: i % P, P, K,
-                           op=ReduceOp.MIN, coalesce=False, fmt=fmt)
+                           op=ReduceOp.MIN, coalesce=False, fmt=fmt,
+                           num_elements=16)
     assert int(rr.dropped) == 0 and int(rr.n_leftover) == 0
     stream = ex.wire_to_stream(rr.wire, fmt)
     got = {int(i): np.asarray(stream.val)[k]
@@ -174,7 +178,8 @@ if HAVE_HYP:
         pending = make_stream(cap, counted=True)
         new = _stream(rng, n, u)
         rr = ex.route_and_pack(pending, new, lambda i: i % P, P, K,
-                               op=ReduceOp.MIN, coalesce=coalesce, fmt=fmt)
+                               op=ReduceOp.MIN, coalesce=coalesce, fmt=fmt,
+                               num_elements=n)
         want_sent, want_left, want_drop = _route_drop_oracle(
             np.asarray(new.idx), lambda v: v % P, P, K, cap, coalesce)
         assert int(rr.n_sent) == want_sent

@@ -20,6 +20,8 @@ runs in the subprocess helper ``tests/helpers/engine_check.py``.
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # interpret-mode Pallas parity / property cross-products (CI slow tier)
+
 import jax.numpy as jnp
 
 from repro.core import exchange as ex
@@ -87,7 +89,7 @@ def test_route_and_pack_conserves_reduction(op, mode, wire, seed):
     pending = make_stream(u, counted=True)
     new = _rand_stream(rng, n, u)
     rr = ex.route_and_pack(pending, new, lambda i: i % P, P, K,
-                           op=op, coalesce=coalesce, fmt=fmt)
+                           op=op, coalesce=coalesce, fmt=fmt, num_elements=n)
     assert int(rr.dropped) == 0
     packed = ex.wire_to_stream(rr.wire, fmt)
     all_idx = np.concatenate([np.asarray(packed.idx),
@@ -112,7 +114,8 @@ def test_route_and_pack_bucket_structure(coalesce, wire):
     pending = make_stream(u, counted=True)
     new = _rand_stream(rng, n, u)
     rr = ex.route_and_pack(pending, new, lambda i: i % P, P, K,
-                           op=ReduceOp.ADD, coalesce=coalesce, fmt=fmt)
+                           op=ReduceOp.ADD, coalesce=coalesce, fmt=fmt,
+                           num_elements=n)
     packed = np.asarray(ex.wire_to_stream(rr.wire, fmt).idx).reshape(P, K)
     for p in range(P):
         bucket = packed[p][packed[p] != -1]
@@ -138,7 +141,7 @@ def test_coalescing_never_increases_sent(op, seed):
     for coalesce in (False, True):
         rr = ex.route_and_pack(pending, new, lambda i: i % P, P, K,
                                op=op, coalesce=coalesce,
-                               fmt=wire_format_for(P, n))
+                               fmt=wire_format_for(P, n), num_elements=n)
         sent[coalesce] = int(rr.n_sent) + int(rr.n_leftover)
     assert sent[True] <= sent[False]
 
@@ -154,7 +157,8 @@ def test_route_and_pack_fuses_pending_and_new():
                      jnp.array([8.0, 16.0], jnp.float32))
     fmt = wire_format_for(2, 8)
     rr = ex.route_and_pack(pend, b, lambda i: i % 2, 2, 4,
-                           op=ReduceOp.ADD, coalesce=True, fmt=fmt)
+                           op=ReduceOp.ADD, coalesce=True, fmt=fmt,
+                           num_elements=8)
     stream = ex.wire_to_stream(rr.wire, fmt)
     packed = {int(i): float(v) for i, v in
               zip(np.asarray(stream.idx), np.asarray(stream.val))

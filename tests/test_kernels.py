@@ -11,6 +11,8 @@ line differs from one-message-at-a-time processing. Per block it matches
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # interpret-mode Pallas parity / property cross-products (CI slow tier)
+
 import jax
 import jax.numpy as jnp
 
@@ -228,3 +230,35 @@ if HAVE_HYP:
         m = np.isfinite(w)
         np.testing.assert_array_equal(np.isfinite(g), m)
         np.testing.assert_allclose(g[m], w[m], rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- segment-coalesce
+
+from repro.kernels.segment_coalesce.ops import segment_coalesce
+from repro.kernels.segment_coalesce.ref import segment_coalesce_ref
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("op", ["min", "max", "add"])
+@pytest.mark.parametrize("u,s,block", [(64, 16, 16), (1000, 300, 256),
+                                       (4096, 4096, 1024)])
+def test_segment_coalesce_matches_ref(op, u, s, block):
+    """Pallas (interpret) and jnp scatter-reduce vs the numpy oracle, on
+    integer-valued payloads (bit-stable under any reduction order)."""
+    rng = np.random.default_rng(u + s)
+    seg = rng.integers(0, s + 1, u).astype(np.int32)  # id == s parks padding
+    val = rng.integers(-9, 9, u).astype(np.float32)
+    want = segment_coalesce_ref(seg, val, s, op=op)
+    for impl in ("jnp", "pallas"):
+        got = np.asarray(segment_coalesce(
+            jnp.asarray(seg), jnp.asarray(val), s, op=op, impl=impl,
+            block=block))
+        np.testing.assert_array_equal(got, want, err_msg=f"{op}/{impl}")
+
+
+def test_segment_coalesce_empty_segments_identity():
+    seg = jnp.array([5, 5, 5], jnp.int32)  # everything parks (s == 5)
+    val = jnp.array([1.0, 2.0, 3.0], jnp.float32)
+    for op, ident in (("min", np.inf), ("max", -np.inf), ("add", 0.0)):
+        out = np.asarray(segment_coalesce(seg, val, 5, op=op, impl="jnp"))
+        np.testing.assert_array_equal(out, np.full((5,), ident, np.float32))

@@ -1,0 +1,76 @@
+"""Batched query lanes: single-device fast checks inline, the real
+multi-device lane contracts (per-lane bit-equality vs independent runs,
+one executable + one all_to_all per level-round regardless of K) in a
+subprocess with 8 fake host devices (XLA locks the device count at first
+init, so the main test process keeps 1 device)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    CascadeMode,
+    ReduceOp,
+    TascadeConfig,
+    WritePolicy,
+    compat,
+    tascade_scatter_reduce,
+)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_n_lanes_validation():
+    with pytest.raises(ValueError):
+        TascadeConfig(n_lanes=0)
+
+
+def test_single_device_lanes_degenerate():
+    """One device, L lanes: the extended tree still collapses to a root
+    apply and lanes stay independent."""
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
+    vpad, L = 32, 3
+    idx = jnp.array([[3, 3, 5, -1, 31, 0, 3, -1]], jnp.int32)
+    lane = jnp.array([[0, 1, 2, 0, 1, 2, 0, 0]], jnp.int32)
+    val = jnp.array([[1.0, 2.0, 7.0, 0.0, 4.0, 9.0, 0.5, 0.0]], jnp.float32)
+    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                        policy=WritePolicy.WRITE_THROUGH,
+                        mode=CascadeMode.TASCADE, n_lanes=L)
+    dest = jnp.full((L, vpad), jnp.inf, jnp.float32)
+    out = np.asarray(tascade_scatter_reduce(
+        dest, idx, val, op="min", cfg=cfg, mesh=mesh, lane=lane))
+    assert out.shape == (L, vpad)
+    assert out[0, 3] == 0.5 and out[1, 3] == 2.0 and out[2, 5] == 7.0
+    assert out[1, 31] == 4.0 and out[2, 0] == 9.0
+    assert np.isinf(out[0, 5]) and np.isinf(out[2, 3])  # lanes isolated
+
+
+def test_lane_arg_contract():
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
+    cfg = TascadeConfig(n_lanes=2)
+    with pytest.raises(AssertionError):
+        tascade_scatter_reduce(jnp.zeros((2, 8)), jnp.zeros((1, 4), jnp.int32),
+                               jnp.zeros((1, 4)), op="add", cfg=cfg, mesh=mesh)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("devices,script", [
+    (8, "lanes_check.py"),
+])
+def test_distributed_lanes(devices, script):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "helpers" / script)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL_OK" in proc.stdout
