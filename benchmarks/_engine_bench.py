@@ -13,7 +13,8 @@ import time
 
 import numpy as np
 import jax
-from repro.core import CascadeMode, TascadeConfig, compat
+from repro.core import (CascadeMode, MeshGeom, ReduceOp, TascadeConfig,
+                        TascadeEngine, compat)
 from repro.graph import apps
 from repro.graph.partition import shard_graph
 from repro.graph.rmat import rmat_graph
@@ -53,6 +54,15 @@ def cfg_for(mode, region=("model",), cascade=("data",), C=8, sync=False):
                          exchange_slack=2.0, max_exchange_rounds=8)
 
 
+def table_elems_for(mesh, vpad, cfg):
+    """Per-round idx-table work of the config's engine plan (static; the
+    coverage compaction is what shrinks it — tracked per snapshot so a
+    regression back to Vpad-sized tables shows up in ``--compare``).
+    Independent of op/update_cap: tables are sized by coverage alone."""
+    geom = MeshGeom.from_mesh(mesh, vpad)
+    return TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=8).table_elems
+
+
 def main():
     scale = int(os.environ.get("BENCH_SCALE", "10"))
     g = rmat_graph(scale, edge_factor=8, seed=1, weighted=True)
@@ -66,7 +76,10 @@ def main():
     # ---- Fig. 4: accumulative feature ablation (per app) ----
     # Every row with a nonzero edges_relaxed also reports throughput
     # (GTEPS = edges relaxed / wall-clock / 1e9) — the paper's headline
-    # metric, persisted into BENCH_engine.json.
+    # metric, persisted into BENCH_engine.json. table_elems depends only
+    # on (mesh, vpad, mode), so compute it once per mode, not per app.
+    tbl_for_mode = {mode: table_elems_for(mesh, sg.vpad, cfg_for(mode))
+                    for mode in CascadeMode}
     for app_name, runner in (
         ("sssp", lambda c: apps.run_sssp(mesh, sg, root, c)),
         ("bfs", lambda c: apps.run_bfs(mesh, sg, root, c)),
@@ -87,9 +100,10 @@ def main():
                 base_hop = max(hop, 1.0)
             gteps = f";edges_relaxed={er:.0f};gteps={gteps_of(er, us):.6f}" \
                 if er > 0 else ""
+            tbl = tbl_for_mode[mode]
             row(f"fig4/{app_name}/{mode.value}", us,
                 f"hop_bytes={hop:.0f};traffic_x={base_hop / max(hop, 1):.2f};"
-                f"msgs={sent}{gteps}")
+                f"msgs={sent};table_elems={tbl}{gteps}")
 
     # ---- GTEPS protocol: batched K-lane multi-source sweeps ----
     # The paper's headline number is throughput at scale (edges/second over

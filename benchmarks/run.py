@@ -8,8 +8,10 @@ in-process (1 device).
   PYTHONPATH=src python -m benchmarks.run [--json [PATH]]
 
 ``--json`` additionally writes a machine-readable perf snapshot
-(default ``BENCH_engine.json``: us_per_call + sent/hop_bytes per row) so
-the perf trajectory is tracked across PRs (see DESIGN.md §5).
+(default ``BENCH_engine.json``: us_per_call + sent/hop_bytes per row, plus
+``table_elems`` — the engine plan's per-round idx-table work, which the
+coverage compaction shrinks) so the perf trajectory is tracked across PRs
+(see DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -34,7 +36,8 @@ def _parse_derived(derived: str) -> dict:
     for key, alias in (("msgs", "sent"), ("hop_bytes", "hop_bytes"),
                        ("filtered", "filtered"), ("coalesced", "coalesced"),
                        ("epochs", "epochs"), ("edges_relaxed", "edges_relaxed"),
-                       ("gteps", "gteps"), ("speedup_x", "speedup_x")):
+                       ("gteps", "gteps"), ("speedup_x", "speedup_x"),
+                       ("table_elems", "table_elems")):
         m = re.search(rf"{key}=(-?[\d.]+)", derived)
         if m:
             out[alias] = float(m.group(1))
@@ -193,8 +196,9 @@ def compare_snapshots(old_path: str, rows: list[dict],
         return "     n/a" if d is None else f"{d * 100:+7.1f}%"
 
     print(f"\n-- compare vs {old_path} "
-          "(us_per_call / sent / hop_bytes deltas) --")
-    print(f"{'name':44s} {'us_delta':>8s} {'sent_d':>8s} {'hopB_d':>8s}")
+          "(us_per_call / sent / hop_bytes / table_elems deltas) --")
+    print(f"{'name':44s} {'us_delta':>8s} {'sent_d':>8s} {'hopB_d':>8s} "
+          f"{'tbl_d':>8s}")
     for r in rows:
         o = old.get(r["name"])
         if o is None or r["us_per_call"] == 0:
@@ -202,6 +206,10 @@ def compare_snapshots(old_path: str, rows: list[dict],
         dus = delta(r["us_per_call"], o.get("us_per_call"))
         dsent = delta(r.get("sent"), o.get("sent"))
         dhop = delta(r.get("hop_bytes"), o.get("hop_bytes"))
+        # table_elems tracks the router's per-round idx-table work (the
+        # coverage compaction); informational, never gated — growth here
+        # is a deliberate plan change, visible but not a CI failure.
+        dtbl = delta(r.get("table_elems"), o.get("table_elems"))
         flag = ""
         if r["name"].startswith("fig4/"):
             if dus is not None and dus > wall_tol:
@@ -214,8 +222,8 @@ def compare_snapshots(old_path: str, rows: list[dict],
                     flag = "  << REGRESSION"
                     regressions.append(
                         f"{r['name']}: {label} drifted {dt * 100:+.2f}%")
-        print(f"{r['name']:44s} {fmt(dus)} {fmt(dsent)} {fmt(dhop)}{flag}",
-              flush=True)
+        print(f"{r['name']:44s} {fmt(dus)} {fmt(dsent)} {fmt(dhop)} "
+              f"{fmt(dtbl)}{flag}", flush=True)
     for line in regressions:
         print(f"REGRESSION {line}", flush=True)
     return regressions

@@ -9,11 +9,13 @@ from repro.core.api import (
     WritePolicy,
     tascade_scatter_reduce,
 )
+from repro.core.geom import CompactPlan
 from repro.core.types import NO_IDX, PCacheState, UpdateStream
 
 __all__ = [
     "CascadeMode",
     "compat",
+    "CompactPlan",
     "MeshGeom",
     "NO_IDX",
     "PCacheState",

@@ -16,8 +16,11 @@ Modes (paper Fig. 4):
                    opportunistic capture, decided on line occupancy.
 
 Hot-path structure: one level-round is ZERO sort primitives and ONE
-collective — O(1) work per update plus streaming O(element-table) fills
-and cumsums (see ``exchange``'s module docstring for the exact account). ``exchange.route_and_pack`` routes with the counting-rank
+collective — O(1) work per update plus streaming table fills and cumsums
+over the level's *entering coverage* (owner-digit-compacted idx tables,
+``coverage(l) * n_lanes`` elements instead of ``Vpad * n_lanes``; see
+``exchange``'s module docstring and ``geom.CompactPlan`` for the exact
+account). ``exchange.route_and_pack`` routes with the counting-rank
 scatter (per-peer histogram ranks + rank-scatter into wire slots) and
 coalesces duplicates pre-wire with one segment reduction (the
 ``kernels/segment_coalesce`` op — the paper's at-source coalescing);
@@ -67,7 +70,7 @@ import jax.numpy as jnp
 
 from repro.core import exchange as ex
 from repro.core import pcache
-from repro.core.geom import MeshGeom
+from repro.core.geom import CompactPlan, MeshGeom
 from repro.core.types import (
     NO_IDX,
     CascadeMode,
@@ -132,6 +135,11 @@ class LevelSpec:
     coverage: int             # unique indices a device can hold AFTER this
                               # level's exchange (vpad / prod exchanged sizes)
     fmt: WireFormat | None    # packed wire layout (None -> unpacked fallback)
+    plan: CompactPlan | None = None  # owner-digit table compaction for this
+                              # level (None: level 0 / compact_tables off);
+                              # plan.coverage == the ENTERING coverage, the
+                              # router's idx-table extent and the packed
+                              # wire's key space
 
 
 class TascadeEngine:
@@ -211,6 +219,7 @@ class TascadeEngine:
         vpad = geom.padded_elements
         cap = max(int(update_cap * slack), 8)
         cov = vpad  # unique-index coverage entering level 0
+        exchanged: list[str] = []  # axes already exchanged by earlier levels
         specs = []
         for axes, merge in zip(groups, merge_flags):
             peers = math.prod(geom.axis_size(a) for a in axes)
@@ -225,6 +234,13 @@ class TascadeEngine:
             lines = max(int(math.ceil(scov_next / cfg.capacity_ratio)), 8) \
                 if merge else 0
             hops = sum(geom.axis_size(a) / 4.0 for a in axes)
+            # Owner-digit table compaction: entering this level, owner
+            # coordinates on already-exchanged axes are pinned to the
+            # device's own, so idx tables and the packed wire key live in
+            # the entering-coverage space, not the full element space.
+            plan = geom.compact_plan(exchanged) if cfg.compact_tables \
+                else None
+            assert plan is None or plan.coverage == cov, (plan, cov)
             specs.append(
                 LevelSpec(
                     axes=axes,
@@ -235,9 +251,13 @@ class TascadeEngine:
                     cache_lines=lines,
                     mean_hops=hops,
                     coverage=cov_next,
-                    fmt=wire_format_for(peers, vpad, dtype),
+                    fmt=wire_format_for(peers,
+                                        cov if plan is not None else vpad,
+                                        dtype),
+                    plan=plan,
                 )
             )
+            exchanged.extend(axes)
             if coalescing:
                 # Next queue's worst-case occupancy between its own rounds:
                 # its re-coalesced leftover (unique => <= cov_next), plus one
@@ -251,6 +271,18 @@ class TascadeEngine:
                 cap = max(int(peers * bucket), 8)  # raw one-round inflow
             cov = cov_next
         self.levels = tuple(specs)
+
+    @property
+    def table_elems(self) -> int:
+        """Total idx-table elements streamed per round across all levels —
+        the O(T) table term the coverage compaction shrinks (benchmarks
+        report it as the ``table_elems`` column). OWNER_DIRECT builds no
+        tables (no coalescing)."""
+        if self.cfg.mode is CascadeMode.OWNER_DIRECT:
+            return 0
+        vpad = self.geom.padded_elements
+        return sum(s.plan.coverage if s.plan is not None else vpad
+                   for s in self.levels)
 
     # ------------------------------------------------------------------ state
 
@@ -299,9 +331,22 @@ class TascadeEngine:
             # its owner shard, so the peer map is constant on shard-size
             # idx blocks — unlocks the O(T) block-structured rank.
             peer_block=self.geom.shard_size,
+            plan=spec.plan,
         )
         axis_name = spec.axes if len(spec.axes) > 1 else spec.axes[0]
         recv = ex.all_to_all_wire(rr.wire, axis_name, spec.fmt, self.dtype)
+        if spec.plan is not None:
+            # The wire carried owner-digit-compacted keys; re-insert the
+            # pinned digits with THIS device's coordinates (sender and
+            # receiver agree on every already-exchanged axis — the
+            # all_to_all moved along this level's axes only).
+            exch_lin = jnp.int32(0)
+            for a in spec.plan.exch_names:
+                exch_lin = exch_lin + jax.lax.axis_index(a).astype(
+                    jnp.int32) * self.geom.axis_stride(a)
+            gidx = spec.plan.expand(jnp.maximum(recv.idx, 0), exch_lin)
+            recv = UpdateStream(jnp.where(recv.idx != NO_IDX, gidx, NO_IDX),
+                                recv.val)
         if spec.merge:
             if self.cfg.use_pallas:
                 # Route the cache pass through the block-vectorized Pallas

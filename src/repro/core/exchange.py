@@ -11,12 +11,20 @@ and merges what it receives. Entries that do not fit a bucket stay pending
 ``route_and_pack`` is the whole per-round shuffle with ZERO sort primitives
 — a **counting-rank router** with O(1) work per update (the analogue of the
 paper's per-message hardware routing, where Dalorex showed per-update cost
-must be O(1) for task parallelism to scale) plus O(T) streaming table work
-(T = the static element-index bound, ``Vpad * n_lanes``): dense fills,
-one flat cumsum and gathers over the idx table — no comparisons, no log
-factors. At bench scales the table term is free next to the scatters; a
-future refinement for huge Vpad is compacting the table to each level's
-entering coverage via owner-digit removal. The pipeline:
+must be O(1) for task parallelism to scale) plus O(T) streaming table work:
+dense fills, one flat cumsum and gathers over the idx table — no
+comparisons, no log factors. T is the level's routing-key-space size: with
+a ``geom.CompactPlan`` the tables are **coverage-compacted** via
+owner-digit removal — at level ℓ the owner coordinates on
+already-exchanged axes are pinned to the device's own, so the compact key
+drops those digits and T shrinks from the static element bound
+``Vpad * n_lanes`` to the level's *entering coverage*
+``coverage(ℓ) * n_lanes = vpad * n_lanes / prod(exchanged axis sizes)``;
+without a plan (level 0, or ``TascadeConfig.compact_tables=False``) T is
+the full bound. Compaction preserves element-index order within every
+destination peer (the free digits keep their significance order), so the
+fit/leftover/drop selection below is bit-identical with and without it.
+The pipeline:
 
   * each update's destination peer indexes a per-peer histogram (peers =
     one mesh-axis size, so the histogram is tiny); because the wire is a
@@ -37,11 +45,18 @@ entering coverage via owner-digit removal. The pipeline:
     a full bucket — and which stay pending — matches the retired sorting
     router bit for bit,
   * the packed wire format (``types.WireFormat``) bit-packs the routing
-    key ``(peer << idx_bits) | idx`` and the value's raw IEEE bits into a
-    single 64-bit wire word, and ``all_to_all_wire`` moves the packed
+    key ``(peer << idx_bits) | key`` — ``key`` the compact key under a
+    plan, the global index otherwise — and the value's raw IEEE bits into
+    a single 64-bit wire word, and ``all_to_all_wire`` moves the packed
     buckets with ONE collective per level-round (the zero-sort and
-    single-collective invariants are enforced on the jaxpr by
-    ``tests/helpers/engine_check.py``).
+    single-collective invariants, plus the per-level table-extent bound,
+    are enforced on the jaxpr by ``tests/helpers/engine_check.py``).
+    Compacted wires carry compact keys (the unpacked fallback's idx lane
+    too); the *receiver* re-expands them to global indices with
+    ``CompactPlan.expand`` and its own pinned coordinates — sender and
+    receiver agree on all exchanged axes, since ``all_to_all`` moves along
+    this level's axes only. Leftovers stay in global-index form, so no
+    un-compaction is needed on the backpressure path.
 
 When the packed format cannot represent a level (value dtype not 32-bit, or
 peer+idx overflow the 31-bit key) the same counting pipeline emits the
@@ -62,6 +77,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.geom import CompactPlan
 from repro.core.types import (
     NO_IDX,
     ReduceOp,
@@ -156,6 +172,7 @@ def route_and_pack(
     coalesce_impl: str = "jnp",
     pallas_interpret: bool | None = None,
     peer_block: int | None = None,
+    plan: CompactPlan | None = None,
 ) -> RouteResult:
     """One level-round shuffle — enqueue + coalesce + pack — with zero sorts.
 
@@ -182,6 +199,15 @@ def route_and_pack(
     consecutive idx blocks of that size (true for owner-shard geometry),
     unlocking the O(T) block-structured rank instead of the generic
     O(T * num_peers) per-peer running count.
+
+    ``plan`` (a ``geom.CompactPlan``) coverage-compacts the level: idx
+    tables are keyed — and the wire's routing key is packed — in the
+    owner-digit-removed compact key space of size ``plan.coverage``
+    instead of ``num_elements``. Every input index must then satisfy the
+    plan's invariant (owner coordinates on the exchanged axes equal the
+    device's own); the engine's leaf→root level order guarantees it.
+    Leftovers still come back in global-index form; wire keys are compact
+    and the receiver expands them (``engine._level_round``).
     """
     cap_out = pending.capacity
     if new is None:
@@ -194,8 +220,13 @@ def route_and_pack(
         fmt = None  # value bits don't fit the 32-bit word half: go unpacked
     if fmt is not None:
         assert fmt.num_peers == num_peers
+        if plan is not None:
+            assert plan.coverage <= (1 << fmt.idx_bits), (
+                "wire format too narrow for the compact key space")
     if impl == "count":
-        if num_elements is None:
+        if plan is not None:
+            num_elements = plan.coverage
+        elif num_elements is None:
             assert fmt is not None or not coalesce, (
                 "counting router needs num_elements (or fmt) to size its "
                 "coalescing tables")
@@ -204,14 +235,15 @@ def route_and_pack(
             idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
             op=op, coalesce=coalesce, fmt=fmt, table=num_elements,
             coalesce_impl=coalesce_impl, pallas_interpret=pallas_interpret,
-            peer_block=peer_block)
+            peer_block=peer_block, plan=plan)
     assert impl == "sort", impl
     if fmt is not None:
         return _route_packed_sort(idx, val, valid, peer_fn, cap_out,
                                   bucket_cap, op=op, coalesce=coalesce,
-                                  fmt=fmt)
+                                  fmt=fmt, plan=plan)
     return _route_unpacked_sort(idx, val, valid, peer_fn, num_peers, cap_out,
-                                bucket_cap, op=op, coalesce=coalesce)
+                                bucket_cap, op=op, coalesce=coalesce,
+                                plan=plan)
 
 
 # ------------------------------------------------- the counting-rank router
@@ -220,7 +252,8 @@ def _route_counting(idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
                     *, op: ReduceOp, coalesce: bool, fmt: WireFormat | None,
                     table: int, coalesce_impl: str,
                     pallas_interpret: bool | None,
-                    peer_block: int | None = None):
+                    peer_block: int | None = None,
+                    plan: CompactPlan | None = None):
     """O(U) sort-free shuffle: histogram ranks + rank-scatter + one
     segment-coalesce reduction. See the module docstring for the shape of
     the algorithm; invariants mirrored from the sort reference:
@@ -232,63 +265,89 @@ def _route_counting(idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
       * the non-coalescing mode (OWNER_DIRECT) ranks in arrival order —
         duplicates are interchangeable wire messages there, so only the
         per-peer counts are contractual.
+
+    With ``plan`` every table is keyed by the owner-digit-removed compact
+    key (``table == plan.coverage``) and the wire carries compact keys;
+    compact order equals element-index order within each peer, so all of
+    the above holds verbatim. Leftovers keep the original global indices.
     """
     u = idx.shape[0]
     pos = jnp.arange(u, dtype=jnp.int32)
     peer = jnp.where(valid, peer_fn(idx), num_peers).astype(jnp.int32)
+    # Routing-key-space index: compact key under a plan, global idx
+    # otherwise. Invalid slots are masked at every use site.
+    ck = plan.compact(jnp.maximum(idx, 0)) if plan is not None else idx
 
     if coalesce:
         # Segment heads: the first update carrying each element index (peer
-        # is a function of idx, so (peer, idx) groups == idx groups). One
-        # scatter-min over the idx table finds them.
-        tbl = jnp.where(valid, idx, table)
+        # is a function of idx, so (peer, idx) groups == idx groups and the
+        # compact key is a bijection on the held set). One scatter-min over
+        # the table finds them.
+        tbl = jnp.where(valid, ck, table)
         firstpos = jnp.full((table + 1,), u, jnp.int32).at[tbl].min(pos)
         segpos = jnp.where(valid, firstpos[tbl], u)
         head = valid & (segpos == pos)
-        # In-bucket coalescing: ONE segment reduction into head-position
-        # space (the kernels/segment_coalesce op — Pallas under use_pallas).
+        # In-bucket coalescing: ONE segment reduction (the
+        # kernels/segment_coalesce op — Pallas under use_pallas). With a
+        # plan the accumulator lives in compact-table space (coverage-sized
+        # — smaller than the stream, and it shrinks the Pallas kernel's
+        # resident block); otherwise in head-position space (stream-sized —
+        # smaller than the full element table).
         from repro.kernels.segment_coalesce.ops import segment_coalesce
 
-        comb = segment_coalesce(segpos, val, u, op=op.value,
-                                impl=coalesce_impl,
-                                interpret=pallas_interpret)
-        msg_val = jnp.where(head, comb[pos], val).astype(val.dtype)
+        if plan is not None:
+            comb = segment_coalesce(tbl, val, table, op=op.value,
+                                    impl=coalesce_impl,
+                                    interpret=pallas_interpret)
+            msg_val = jnp.where(
+                head, comb[jnp.clip(ck, 0, table - 1)], val).astype(val.dtype)
+        else:
+            comb = segment_coalesce(segpos, val, u, op=op.value,
+                                    impl=coalesce_impl,
+                                    interpret=pallas_interpret)
+            msg_val = jnp.where(head, comb[pos], val).astype(val.dtype)
 
         # Element-index-ordered rank within each peer: a head's rank is
-        # (# heads with my peer and a smaller idx). The head mask in table
+        # (# heads with my peer and a smaller key). The head mask in table
         # order falls straight out of ``firstpos`` (slot t heads a segment
         # iff firstpos[t] < u) — no second scatter.
         mark = (firstpos[:table] < u).astype(jnp.int32)
         peers_range = jnp.arange(num_peers, dtype=jnp.int32)
         if peer_block and table % peer_block == 0:
-            # The engine's peer map is constant on owner-shard blocks of the
-            # idx table (peer = f(idx // shard)), so the per-peer running
-            # count splits into a flat within-block cumsum plus a tiny
-            # per-block prefix — O(T) instead of O(T * P).
+            # The engine's peer map is constant on owner-shard blocks of
+            # the table (peer = f(idx // shard); compaction keeps the block
+            # structure — the shard offset stays the key's minor digit), so
+            # the per-peer running count splits into a flat within-block
+            # cumsum plus a tiny per-block prefix — O(T) instead of
+            # O(T * P).
             nb = table // peer_block
             wc = jnp.cumsum(mark.reshape(nb, peer_block), axis=1)
             bt = wc[:, -1]                                       # [nb]
-            bpeer = peer_fn(
-                jnp.arange(nb, dtype=jnp.int32) * peer_block).astype(jnp.int32)
+            bstart = jnp.arange(nb, dtype=jnp.int32) * peer_block
+            if plan is not None:
+                bstart = plan.expand(bstart)  # peer digits are free digits
+            bpeer = peer_fn(bstart).astype(jnp.int32)
             bh = (bpeer[:, None] == peers_range[None, :]).astype(
                 jnp.int32) * bt[:, None]                         # [nb, P]
             csum = jnp.cumsum(bh, axis=0)
             prior = jnp.take_along_axis(
                 csum - bh, jnp.clip(bpeer, 0, num_peers - 1)[:, None],
                 axis=1)[:, 0]                                    # [nb]
-            blk = jnp.clip(idx, 0, table - 1) // peer_block
-            off = jnp.clip(idx, 0, table - 1) % peer_block
+            blk = jnp.clip(ck, 0, table - 1) // peer_block
+            off = jnp.clip(ck, 0, table - 1) % peer_block
             rank = prior[blk] + wc[blk, off] - 1
             hist = csum[-1]                                      # heads/peer
         else:
             # Generic peer maps: per-peer running count over table order.
-            tpeer = peer_fn(
-                jnp.arange(table, dtype=jnp.int32)).astype(jnp.int32)
+            tidx = jnp.arange(table, dtype=jnp.int32)
+            if plan is not None:
+                tidx = plan.expand(tidx)
+            tpeer = peer_fn(tidx).astype(jnp.int32)
             onehot = (tpeer[:, None] == peers_range[None, :]).astype(
                 jnp.int32) * mark[:, None]
             trank = jnp.cumsum(onehot, axis=0)  # inclusive per-peer count
             rank = jnp.take_along_axis(
-                trank[jnp.clip(idx, 0, table - 1)],
+                trank[jnp.clip(ck, 0, table - 1)],
                 jnp.clip(peer, 0, num_peers - 1)[:, None], axis=1)[:, 0] - 1
             hist = trank[-1]
     else:
@@ -334,18 +393,19 @@ def _route_counting(idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
     n_left = jnp.minimum(n_left_raw, cap_out)
     leftover = UpdateStream(left_idx[:cap_out], left_val[:cap_out], n_left)
 
-    # Rank-scatter the fitting messages straight into their wire slots.
+    # Rank-scatter the fitting messages straight into their wire slots
+    # (compact keys when a plan is active — the receiver expands them).
     if fmt is None:
         packed_idx = jnp.full((num_peers * bucket_cap + 1,), NO_IDX,
                               jnp.int32).at[dest].set(
-            jnp.where(fits, idx, NO_IDX))
+            jnp.where(fits, ck, NO_IDX))
         packed_val = jnp.zeros((num_peers * bucket_cap + 1,),
                                val.dtype).at[dest].set(
             jnp.where(fits, msg_val, 0))
         wire = (packed_idx[:-1].reshape(num_peers, bucket_cap),
                 packed_val[:-1].reshape(num_peers, bucket_cap))
     else:
-        key = jnp.where(fits, (peer << fmt.idx_bits) | idx, fmt.invalid_key)
+        key = jnp.where(fits, (peer << fmt.idx_bits) | ck, fmt.invalid_key)
         if fmt.word64:
             inv64 = jnp.uint64(fmt.invalid_key) << 32
             word = (key.astype(jnp.uint64) << 32) | \
@@ -371,27 +431,40 @@ def _route_counting(idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
 
 
 def _route_packed_sort(idx, val, valid, peer_fn, cap_out, bucket_cap, *,
-                       op: ReduceOp, coalesce: bool, fmt: WireFormat):
+                       op: ReduceOp, coalesce: bool, fmt: WireFormat,
+                       plan: CompactPlan | None = None):
     """PR-2 reference: the fused single-sort shuffle on the packed word.
     Kept (with ``_route_unpacked_sort``) as the property-test oracle for
-    the counting-rank router; the engine never traces this path."""
+    the counting-rank router; the engine never traces this path. With a
+    ``plan`` the sorted key embeds the compact key (same within-peer order
+    — compaction is monotone per peer) and the global index rides along as
+    a second sort operand so leftovers keep global-index form."""
     num_peers = fmt.num_peers
     peer = jnp.where(valid, peer_fn(idx), num_peers).astype(jnp.int32)
-    # Routing key: (peer, idx) in one non-negative int32; invalids park in
+    ck = plan.compact(jnp.maximum(idx, 0)) if plan is not None else idx
+    # Routing key: (peer, key) in one non-negative int32; invalids park in
     # peer-bin P so they sort last.
-    key = jnp.where(valid, (peer << fmt.idx_bits) | idx, fmt.invalid_key)
+    key = jnp.where(valid, (peer << fmt.idx_bits) | ck, fmt.invalid_key)
     if fmt.word64:
         # ONE sort of ONE operand: the full 64-bit wire word. Value bits ride
         # in the low half as payload; (peer, idx) order comes from the high
         # half, so duplicates stay adjacent regardless of their values.
         word = (key.astype(jnp.uint64) << 32) | val_bits(val).astype(jnp.uint64)
-        (word_s,) = jax.lax.sort((word,), num_keys=1)
+        if plan is None:
+            (word_s,) = jax.lax.sort((word,), num_keys=1)
+            gidx_s = None
+        else:
+            word_s, gidx_s = jax.lax.sort((word, idx), num_keys=1)
         key_s = (word_s >> 32).astype(jnp.int32)
         val_s = bits_val(word_s.astype(jnp.uint32), val.dtype)
     else:
         # Same word split into two i32 lanes; still ONE sort primitive.
         bits = val_bits(val).astype(jnp.int32)
-        key_s, bits_s = jax.lax.sort((key, bits), num_keys=1)
+        if plan is None:
+            key_s, bits_s = jax.lax.sort((key, bits), num_keys=1)
+            gidx_s = None
+        else:
+            key_s, bits_s, gidx_s = jax.lax.sort((key, bits, idx), num_keys=1)
         val_s = bits_val(bits_s, val.dtype)
     valid_s = key_s < fmt.invalid_key
     idx_s = key_s & fmt.idx_mask
@@ -405,7 +478,8 @@ def _route_packed_sort(idx, val, valid, peer_fn, cap_out, bucket_cap, *,
 
     (msg_val, fits, dest, leftover,
      n_sent, n_left, n_coal, dropped) = _segments_to_buckets(
-        idx_s, val_s, valid_s, pkey_s, head, cap_out, num_peers, bucket_cap,
+        idx_s if gidx_s is None else gidx_s, val_s, valid_s, pkey_s, head,
+        cap_out, num_peers, bucket_cap,
         op=op, coalesce=coalesce, val_dtype=val.dtype)
 
     inv_key = jnp.int32(fmt.invalid_key)
@@ -431,17 +505,27 @@ def _route_packed_sort(idx, val, valid, peer_fn, cap_out, bucket_cap, *,
 
 
 def _route_unpacked_sort(idx, val, valid, peer_fn, num_peers, cap_out,
-                         bucket_cap, *, op: ReduceOp, coalesce: bool):
+                         bucket_cap, *, op: ReduceOp, coalesce: bool,
+                         plan: CompactPlan | None = None):
     """PR-2 reference for levels the packed word cannot represent: one
-    multi-operand sort by (peer, idx), two-lane wire (test oracle only)."""
+    multi-operand sort by (peer, key), two-lane wire (test oracle only).
+    With a ``plan`` the sort key is the compact key (same per-peer order),
+    the wire's idx lane carries compact keys like the counting router's,
+    and the global index rides along for the leftover stream."""
     pkey = jnp.where(valid, peer_fn(idx), num_peers).astype(jnp.int32)
-    skey = jnp.where(valid, idx, _BIG)
-    pkey_s, idx_s, val_s = jax.lax.sort((pkey, skey, val), num_keys=2)
+    ck = plan.compact(jnp.maximum(idx, 0)) if plan is not None else idx
+    skey = jnp.where(valid, ck, _BIG)
+    if plan is None:
+        pkey_s, idx_s, val_s = jax.lax.sort((pkey, skey, val), num_keys=2)
+        ck_s = idx_s
+    else:
+        pkey_s, ck_s, idx_s, val_s = jax.lax.sort((pkey, skey, idx, val),
+                                                  num_keys=2)
     valid_s = pkey_s < num_peers
     prev_p = jnp.concatenate([jnp.full((1,), -1, pkey_s.dtype), pkey_s[:-1]])
-    prev_i = jnp.concatenate([jnp.full((1,), -2, idx_s.dtype), idx_s[:-1]])
+    prev_i = jnp.concatenate([jnp.full((1,), -2, ck_s.dtype), ck_s[:-1]])
     if coalesce:
-        head = valid_s & ((pkey_s != prev_p) | (idx_s != prev_i))
+        head = valid_s & ((pkey_s != prev_p) | (ck_s != prev_i))
     else:
         head = valid_s
 
@@ -452,7 +536,7 @@ def _route_unpacked_sort(idx, val, valid, peer_fn, num_peers, cap_out,
 
     packed_idx = jnp.full((num_peers * bucket_cap + 1,), NO_IDX, jnp.int32)
     packed_val = jnp.zeros((num_peers * bucket_cap + 1,), val.dtype)
-    packed_idx = packed_idx.at[dest].set(jnp.where(fits, idx_s, NO_IDX))
+    packed_idx = packed_idx.at[dest].set(jnp.where(fits, ck_s, NO_IDX))
     packed_val = packed_val.at[dest].set(jnp.where(fits, msg_val, 0))
     wire = (packed_idx[:-1].reshape(num_peers, bucket_cap),
             packed_val[:-1].reshape(num_peers, bucket_cap))

@@ -7,6 +7,12 @@ order, so the owner of element ``v`` and its coordinate along every mesh axis
 are pure integer arithmetic — exactly like the paper's bit-mask proxy logic
 (Listing 1), which this module replaces.
 
+``CompactPlan`` is the same arithmetic run backwards: once a tree level has
+exchanged updates along some axes, the owner coordinates of every index a
+device still holds are *pinned* on those axes, so the routing key can drop
+those digits — the coverage compaction of the counting-rank router's idx
+tables (DESIGN §2.1).
+
 All methods are usable inside ``shard_map`` (they only touch static python
 ints and traced index arrays + ``lax.axis_index``).
 """
@@ -14,9 +20,74 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactPlan:
+    """Owner-digit removal for one tree level's routing tables.
+
+    A global element index decomposes as ``idx = lin * shard + off`` with
+    ``lin`` the owner's linear device id — itself a row-major digit string
+    of per-axis owner coordinates. Entering tree level ℓ, every update a
+    device holds has already been exchanged along the axes of levels < ℓ,
+    so its owner coordinates on those *exchanged* axes equal the device's
+    own coordinates: those digits carry zero information locally. The
+    compact key keeps only the free digits —
+
+        ckey = (free-axis owner digits, row-major in mesh layout order)
+               * shard + off      ∈ [0, coverage)
+        coverage = shard * prod(free axis sizes)
+                 = padded_elements / prod(exchanged axis sizes)
+
+    — a bijection between the indices this device can legally hold at the
+    level and ``[0, coverage)``. Because the free digits keep their
+    original significance order, ``ckey`` is *monotone in idx* within any
+    fixed destination peer (the peer pins this level's digits, which are
+    among the free ones), so element-index-ordered ranking — and with it
+    the router's bucket-overflow fit/leftover/drop selection — is
+    unchanged by compaction, bit for bit.
+
+    ``compact`` is pure static arithmetic; ``expand`` additionally needs
+    the exchanged axes' pinned linear contribution ``exch_lin``
+    (``sum(my_coord(a) * stride(a))`` — a traced ``lax.axis_index`` sum
+    inside ``shard_map``, a plain int in tests; 0 recovers the owner-digit
+    pattern with exchanged coordinates zeroed, which is enough wherever
+    only free digits are read back, e.g. table-order peer lookups).
+    """
+
+    shard: int                       # elements per device (lane-extended)
+    free_sizes: tuple[int, ...]      # unexchanged axes' sizes, layout order
+    free_strides: tuple[int, ...]    # their strides in the linear device id
+    exch_names: tuple[str, ...]      # exchanged axes (for computing exch_lin)
+
+    @property
+    def coverage(self) -> int:
+        """Table size: distinct indices a device can hold at this level."""
+        return self.shard * math.prod(self.free_sizes)
+
+    def compact(self, idx):
+        """Global index -> compact key (drop the exchanged owner digits)."""
+        lin = idx // self.shard
+        off = idx - lin * self.shard
+        rem = idx * 0
+        for size, stride in zip(self.free_sizes, self.free_strides):
+            rem = rem * size + (lin // stride) % size
+        return rem * self.shard + off
+
+    def expand(self, ckey, exch_lin=0):
+        """Compact key -> global index, re-inserting the pinned digits."""
+        rem = ckey // self.shard
+        off = ckey - rem * self.shard
+        lin = ckey * 0 + exch_lin
+        for size, stride in zip(reversed(self.free_sizes),
+                                reversed(self.free_strides)):
+            lin = lin + (rem % size) * stride
+            rem = rem // size
+        return lin * self.shard + off
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +126,22 @@ class MeshGeom:
         """Stride of ``axis`` in the row-major linear device id."""
         i = self.axis_names.index(axis)
         return math.prod(self.axis_sizes[i + 1:])
+
+    def compact_plan(self, exchanged: Sequence[str]) -> CompactPlan | None:
+        """Coverage compaction for a level entered after exchanging
+        ``exchanged`` axes, or None when nothing is pinned yet (level 0, or
+        all exchanged axes have size 1) and the identity map would be used.
+        """
+        exch = set(exchanged)
+        if math.prod(self.axis_size(a) for a in exch) == 1:
+            return None
+        free = [a for a in self.axis_names if a not in exch]
+        return CompactPlan(
+            shard=self.shard_size,
+            free_sizes=tuple(self.axis_size(a) for a in free),
+            free_strides=tuple(self.axis_stride(a) for a in free),
+            exch_names=tuple(a for a in self.axis_names if a in exch),
+        )
 
     # ---- traced helpers (shard_map only) ----
 

@@ -124,9 +124,10 @@ def cache_pass(
 
     Winner election among entries contending for one line is a scatter-max
     over element indices (largest contending element id claims the line)
-    instead of a sort: entirely gather/compare/scatter, so a level-round's
-    only sort stays in ``exchange.route_and_pack``. Duplicate entries of the
-    winning element combine into the line with one more reduction scatter.
+    instead of a sort: entirely gather/compare/scatter, keeping the whole
+    level-round sort-free (``exchange.route_and_pack`` is the zero-sort
+    counting-rank router). Duplicate entries of the winning element combine
+    into the line with one more reduction scatter.
 
     Emissions are positional ([U], slot j belongs to input entry j): an
     entry's own pass-through/improving write, or — write-back — the occupant

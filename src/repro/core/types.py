@@ -165,6 +165,19 @@ class TascadeConfig:
                         drops that go unnoticed: pending-queue overflow
                         is counted in ``EngineState.overflow`` and must
                         stay 0).
+      compact_tables -- coverage-compact the counting router's per-round
+                        idx tables (and the packed wire's routing key) via
+                        owner-digit removal: at level ℓ the owner
+                        coordinates on already-exchanged axes are pinned to
+                        the device's own, so the scatter-min head table,
+                        per-peer element-order cumsum and segment-coalesce
+                        accumulator shrink from ``Vpad * n_lanes`` to the
+                        level's *entering coverage*
+                        (``vpad / prod(exchanged axis sizes)``, the same
+                        quantity the geometric capacity plan tracks).
+                        Fit/leftover/drop selection is bit-identical either
+                        way (``tests/test_coverage_router.py``); False
+                        retains the full-table router for A/B checks.
       use_pallas     -- route P-cache merges and the router's
                         segment-coalesce reduction through Pallas kernels.
       pallas_interpret -- Pallas execution override: None auto-selects by
@@ -183,6 +196,7 @@ class TascadeConfig:
     max_exchange_rounds: int = 8
     n_lanes: int = 1  # batched query lanes sharing the tree (>= 1)
     lane_capacity_share: float = 1.0  # coverage fraction the plan sizes for
+    compact_tables: bool = True  # owner-digit coverage compaction (§2.1)
     use_pallas: bool = False  # route P-cache merges through the Pallas kernel
     pallas_interpret: bool | None = None  # None = auto-select by backend
 
@@ -212,10 +226,16 @@ class WireFormat:
 
     A cascaded-update message is one 64-bit word: the high 32 bits are the
     routing key ``(peer << idx_bits) | idx`` (peer = destination bucket on
-    this level, idx = global element index — under batched query lanes the
-    *lane-extended* index ``element * n_lanes + lane``, so one wire block
-    carries every lane's traffic), the low 32 bits are the value's raw
-    IEEE-754 bits. Two physical realizations, chosen statically:
+    this level; idx = the element index in the level's *routing key space*
+    — under batched query lanes the lane-extended index
+    ``element * n_lanes + lane`` so one wire block carries every lane's
+    traffic, and at coverage-compacted levels the owner-digit-removed
+    compact key ``geom.CompactPlan.compact(idx)``, which the receiver
+    re-expands after the exchange; ``idx_bits`` then counts compact-key
+    bits, so deep levels keep the packed format at element counts whose
+    global indices would overflow the 31-bit key), the low 32 bits are the
+    value's raw IEEE-754 bits. Two physical realizations, chosen
+    statically:
 
       word64=True  -- one ``uint64`` array (requires jax x64); the level-round
                       sort runs on a SINGLE operand and the wire is a single

@@ -10,6 +10,13 @@ picks pallas on TPU and jnp elsewhere.
 
 All impls are exact for MIN/MAX (order-independent combines); for ADD they
 agree up to summation order within a segment.
+
+Callers choose the segment space: the counting-rank router passes compact
+keys with ``num_segments = coverage(l) * n_lanes`` at coverage-compacted
+levels (the accumulator tracks the level's entering coverage) and head
+positions with ``num_segments = stream length`` at un-compacted levels —
+selection follows the compaction plan, which in the engine also picks the
+smaller space (see ``exchange._route_counting``).
 """
 from __future__ import annotations
 

@@ -16,9 +16,16 @@ segment reduction (TPU grid steps run sequentially, so revisiting the
 accumulator block is a legal reduction pattern). Segment id
 ``num_segments`` is the park bin for sentinel padding and is dropped.
 
-VMEM budget: accumulator S*4 bytes + one (seg, val) stream block; S tracks
-the level-round stream length (tens of KiB), well under the ~16 MiB/core
-budget.
+VMEM budget: accumulator S*4 bytes + one (seg, val) stream block. The
+router's segment space follows its compaction plan (DESIGN §2.1): at
+coverage-compacted levels S = the entering coverage
+``coverage(l) * n_lanes`` (segment id = compact key — the accumulator
+block shrinks with the level's coverage, like the paper's per-region
+SRAM; in the engine the stream is always at least coverage-sized there,
+so this is also the smaller space), at un-compacted levels S = the
+level-round stream length (segment id = head position). Both are tens of
+KiB at bench scale, well under the ~16 MiB/core budget; the grid itself
+tiles the stream and is unchanged by the accumulator space.
 """
 from __future__ import annotations
 

@@ -1,0 +1,218 @@
+"""Subprocess helper: randomized end-to-end oracle fuzz for all six apps.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8; seeds come in
+on argv (default "0"). For every seed a fresh small RMAT graph is drawn and
+every application — run_sssp / run_bfs / run_wcc / run_pagerank / run_spmv
+/ run_histogram, plus the batched ``_multi`` lanes — is checked against an
+*independent* reference: ``scipy.sparse.csgraph`` (Dijkstra / unweighted
+hop counts / connected components) and scipy sparse matvecs, falling back
+to the numpy oracles in ``repro.graph.csr`` only if scipy is unavailable.
+The repo's own csr oracles share no code with the engine either, but scipy
+is a third implementation entirely outside this tree.
+
+Edge weights (and the SPMV input vector) are small integers stored as f32,
+so every reduction the engine performs is exact in float32 and label/dist
+results are compared BIT-exactly against the float64 references; only
+PageRank (genuinely fractional values) uses a tolerance.
+
+Each seed also A/B-runs the label-correcting apps with
+``compact_tables=False`` and asserts the dist outputs are bit-equal to the
+default coverage-compacted run — the end-to-end "dist outputs" arm of the
+coverage-compaction equivalence suite (tests/test_coverage_router.py).
+
+Prints one line per check; exits non-zero on failure.
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import CascadeMode, TascadeConfig, compat
+from repro.graph import apps
+from repro.graph.csr import CSRGraph
+from repro.graph.partition import shard_graph
+from repro.graph.rmat import rmat_edges
+
+try:
+    import scipy.sparse as sp
+    import scipy.sparse.csgraph as csgraph
+    HAVE_SCIPY = True
+except ImportError:  # pragma: no cover - CI images ship scipy
+    from repro.graph import csr as _csr
+    HAVE_SCIPY = False
+
+
+def int_weighted_rmat(scale, edge_factor, seed, symmetrize=False):
+    """RMAT graph with small-integer f32 weights: every SSSP path sum and
+    SPMV dot product is exact in float32, enabling bit-exact comparison
+    with float64 references."""
+    src, dst = rmat_edges(scale, edge_factor, seed)
+    n = 1 << scale
+    rng = np.random.default_rng(seed + 977)
+    w = rng.integers(1, 9, size=src.shape[0]).astype(np.float32)
+    return CSRGraph.from_edges(src, dst, n, weights=w, dedup=True,
+                               symmetrize=symmetrize)
+
+
+def adjacency(g):
+    """scipy CSR M[i, j] = weight of edge i -> j."""
+    return sp.csr_matrix(
+        (g.weights.astype(np.float64), g.indices, g.indptr),
+        shape=(g.num_vertices, g.num_vertices))
+
+
+def ref_sssp(g, root):
+    if HAVE_SCIPY:
+        return csgraph.dijkstra(adjacency(g), directed=True, indices=root)
+    return _csr.sssp_reference(g, root)
+
+
+def ref_bfs(g, root):
+    if HAVE_SCIPY:
+        return csgraph.dijkstra(adjacency(g), directed=True, indices=root,
+                                unweighted=True)
+    return _csr.bfs_reference(g, root)
+
+
+def ref_wcc(g):
+    """Min-vertex-id label per weakly-connected component."""
+    if HAVE_SCIPY:
+        _, comp = csgraph.connected_components(adjacency(g), directed=False)
+        label = np.full(g.num_vertices, np.inf)
+        for c in range(comp.max() + 1):
+            ids = np.nonzero(comp == c)[0]
+            label[ids] = ids.min()
+        return label
+    return _csr.wcc_reference(g)
+
+
+def ref_pagerank(g, iters, d=0.85):
+    n = g.num_vertices
+    deg = np.maximum(np.diff(g.indptr), 1).astype(np.float64)
+    if HAVE_SCIPY:
+        a = adjacency(g)
+        a = sp.csr_matrix((np.ones_like(a.data), a.indices, a.indptr),
+                          shape=a.shape)  # unweighted contributions
+        rank = np.full(n, 1.0 / n)
+        for _ in range(iters):
+            rank = (1 - d) / n + d * (a.T @ (rank / deg))
+        return rank
+    return _csr.pagerank_reference(g, iters=iters, d=d)
+
+
+def ref_spmv(g, x):
+    if HAVE_SCIPY:
+        src = g.src_per_edge
+        a = sp.coo_matrix(
+            (g.weights.astype(np.float64), (g.indices, src)),
+            shape=(g.num_vertices, g.num_vertices)).tocsr()
+        return a @ x.astype(np.float64)
+    return _csr.spmv_reference(g, x)
+
+
+def fuzz_seed(mesh, seed):
+    ndev, scale = 8, 5
+    g = int_weighted_rmat(scale, 4, seed)
+    gsym = int_weighted_rmat(scale, 4, seed, symmetrize=True)
+    sg = shard_graph(g, ndev)
+    sgsym = shard_graph(gsym, ndev)
+    v = g.num_vertices
+    rng = np.random.default_rng(seed)
+    mode = [CascadeMode.TASCADE, CascadeMode.FULL_CASCADE,
+            CascadeMode.PROXY_MERGE][seed % 3]
+    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                        capacity_ratio=4, mode=mode, exchange_slack=2.0)
+    cfg_off = dataclasses.replace(cfg, compact_tables=False)
+    roots = sorted(set(
+        [int(np.argmax(g.degrees))]
+        + [int(r) for r in rng.integers(0, v, size=3)]))
+
+    # ---- SSSP / BFS: bit-exact vs scipy Dijkstra / hop counts, per root;
+    # compact_tables on/off bit-equal ----
+    for app, runner, ref in (("sssp", apps.run_sssp, ref_sssp),
+                             ("bfs", apps.run_bfs, ref_bfs)):
+        for root in roots:
+            dist, m = runner(mesh, sg, root, cfg)
+            got = np.asarray(dist)[:v].astype(np.float64)
+            assert int(m.overflow) == 0
+            np.testing.assert_array_equal(got, ref(g, root),
+                                          err_msg=f"{app} root={root}")
+            d_off, _ = runner(mesh, sg, root, cfg_off)
+            np.testing.assert_array_equal(
+                np.asarray(dist), np.asarray(d_off),
+                err_msg=f"{app} compact on/off root={root}")
+        print(f"OK fuzz[{seed}] {app} x{len(roots)} roots "
+              f"(bit-exact vs {'scipy' if HAVE_SCIPY else 'numpy'}; "
+              "compact on/off bit-equal)")
+
+    # ---- batched lanes: one K-root sweep, per-lane bit-equal to the
+    # reference AND to the solo runs ----
+    for app, multi, solo in (("sssp", apps.run_sssp_multi, apps.run_sssp),
+                             ("bfs", apps.run_bfs_multi, apps.run_bfs)):
+        share = dataclasses.replace(cfg, lane_capacity_share=0.5)
+        dist_b, mb = multi(mesh, sg, roots, share)
+        assert int(mb.overflow) == 0
+        for l, root in enumerate(roots):
+            ref_fn = ref_sssp if app == "sssp" else ref_bfs
+            np.testing.assert_array_equal(
+                np.asarray(dist_b[l])[:v].astype(np.float64), ref_fn(g, root),
+                err_msg=f"{app}_multi lane {l}")
+            d_solo, _ = solo(mesh, sg, root, cfg)
+            np.testing.assert_array_equal(
+                np.asarray(dist_b[l]), np.asarray(d_solo),
+                err_msg=f"{app}_multi lane {l} vs solo")
+        print(f"OK fuzz[{seed}] {app}_multi K={len(roots)} per-lane "
+              "bit-equal (reference + solo)")
+
+    # ---- WCC on the symmetrized graph: exact component labels ----
+    lab, m = apps.run_wcc(mesh, sgsym, cfg)
+    assert int(m.overflow) == 0
+    np.testing.assert_array_equal(
+        np.asarray(lab)[:v].astype(np.float64), ref_wcc(gsym))
+    print(f"OK fuzz[{seed}] wcc exact labels")
+
+    # ---- PageRank: fractional values, tolerance comparison ----
+    iters = 8
+    rank, m = apps.run_pagerank(mesh, sg, cfg, iters=iters)
+    assert int(m.overflow) == 0
+    np.testing.assert_allclose(np.asarray(rank)[:v],
+                               ref_pagerank(g, iters), rtol=2e-4, atol=1e-7)
+    r_off, _ = apps.run_pagerank(mesh, sg, cfg_off, iters=iters)
+    np.testing.assert_allclose(np.asarray(rank), np.asarray(r_off),
+                               rtol=1e-6, atol=1e-9)
+    print(f"OK fuzz[{seed}] pagerank iters={iters}")
+
+    # ---- SPMV: integer x -> exact sums in f32, bit-exact vs scipy ----
+    x = rng.integers(0, 5, size=v).astype(np.float32)
+    y, m = apps.run_spmv(mesh, sg, x, cfg)
+    assert int(m.overflow) == 0
+    np.testing.assert_array_equal(np.asarray(y)[:v].astype(np.float64),
+                                  ref_spmv(g, x))
+    print(f"OK fuzz[{seed}] spmv bit-exact")
+
+    # ---- Histogram: power-law keys, exact counts ----
+    keys = np.minimum(rng.zipf(1.3, size=(ndev, 256)) - 1, 127).astype(
+        np.int32)
+    h, stats = apps.run_histogram(mesh, keys, 128, cfg)
+    assert int(stats["overflow"]) == 0
+    np.testing.assert_array_equal(np.asarray(h).astype(np.int64),
+                                  np.bincount(keys.reshape(-1), minlength=128))
+    print(f"OK fuzz[{seed}] histogram exact")
+
+
+def main():
+    seeds = [int(s) for s in sys.argv[1:]] or [0]
+    mesh = compat.make_mesh((2, 4), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
+    for seed in seeds:
+        fuzz_seed(mesh, seed)
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -62,6 +62,106 @@ def count_sorts(jaxpr) -> int:
     return count_primitive(jaxpr, "sort")
 
 
+def iter_jaxprs(jaxpr):
+    """Yield a jaxpr and every jaxpr nested in its eqn params."""
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else [v]
+            for w in vs:
+                if hasattr(w, "eqns"):            # inner Jaxpr
+                    yield from iter_jaxprs(w)
+                elif hasattr(w, "jaxpr"):         # ClosedJaxpr
+                    yield from iter_jaxprs(w.jaxpr)
+
+
+def max_array_extent(jaxpr) -> int:
+    """Largest single array dimension appearing anywhere in the program."""
+    m = 0
+    for jp in iter_jaxprs(jaxpr):
+        for eqn in jp.eqns:
+            for var in list(eqn.invars) + list(eqn.outvars):
+                shape = getattr(getattr(var, "aval", None), "shape", ())
+                for d in shape:
+                    if isinstance(d, int):
+                        m = max(m, d)
+    return m
+
+
+def has_extent(jaxpr, extent: int) -> bool:
+    for jp in iter_jaxprs(jaxpr):
+        for eqn in jp.eqns:
+            for var in list(eqn.invars) + list(eqn.outvars):
+                shape = getattr(getattr(var, "aval", None), "shape", ())
+                if extent in shape:
+                    return True
+    return False
+
+
+def check_idx_table_extents(mesh, vpad, u):
+    """Coverage-compaction acceptance: in the lowered level-round of every
+    level l >= 1, every idx-table-shaped operand has extent bounded by the
+    level's ENTERING coverage ``coverage(l) * n_lanes`` — never by the
+    padded element space ``Vpad * n_lanes`` — and the head table with
+    extent exactly ``coverage(l) * n_lanes (+1)`` is present. Sizes are
+    chosen so the coverage bound is far below Vpad: any silent regression
+    to full-size tables trips the bound."""
+    from repro.core import exchange as ex
+    from repro.core.types import UpdateStream as US
+
+    geom = MeshGeom.from_mesh(mesh, vpad)
+    for n_lanes in (1, 2):
+        for mode in (CascadeMode.PROXY_MERGE, CascadeMode.FULL_CASCADE,
+                     CascadeMode.TASCADE):
+            cfg = TascadeConfig(region_axes=("model",),
+                                cascade_axes=("data",), capacity_ratio=4,
+                                mode=mode, n_lanes=n_lanes)
+            engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=u)
+            vext = engine.geom.padded_elements
+            for li, spec in enumerate(engine.levels):
+                table = spec.plan.coverage if spec.plan is not None else vext
+                coalesce = mode is not CascadeMode.OWNER_DIRECT
+                utot = spec.pending_cap + (u * n_lanes if li == 0 else 0)
+
+                def level_fn(pidx, pval, nidx, nval, _spec=spec, _li=li,
+                             _coal=coalesce):
+                    pending = US(pidx, pval, jnp.int32(0))
+                    new = US(nidx, nval) if _li == 0 else None
+                    rr = ex.route_and_pack(
+                        pending, new,
+                        lambda i: engine._peer_of(i, _spec.axes),
+                        _spec.num_peers, _spec.bucket_cap,
+                        op=ReduceOp.MIN, coalesce=_coal, fmt=_spec.fmt,
+                        num_elements=vext,
+                        peer_block=engine.geom.shard_size,
+                        plan=_spec.plan)
+                    return rr.wire, rr.leftover.idx, rr.n_sent
+
+                jaxpr = jax.make_jaxpr(level_fn)(
+                    jnp.zeros((spec.pending_cap,), jnp.int32),
+                    jnp.zeros((spec.pending_cap,), jnp.float32),
+                    jnp.zeros((u * n_lanes,), jnp.int32),
+                    jnp.zeros((u * n_lanes,), jnp.float32),
+                ).jaxpr
+                bound = max(table + 2, utot + 2,
+                            spec.num_peers * spec.bucket_cap * 2 + 2)
+                got = max_array_extent(jaxpr)
+                assert got <= bound, (
+                    f"{mode.value} L={n_lanes} level {li}: extent {got} "
+                    f"exceeds the coverage bound {bound} (table={table})")
+                if coalesce:
+                    assert has_extent(jaxpr, table + 1), (
+                        f"{mode.value} L={n_lanes} level {li}: head table "
+                        f"of extent {table + 1} not found")
+                if spec.plan is not None:
+                    assert bound < vext, (
+                        f"level {li}: bound {bound} not below Vpad*L "
+                        f"{vext} — test sizes prove nothing")
+                print(f"OK extents {mode.value} L={n_lanes} level {li}: "
+                      f"max {got} <= {bound} "
+                      f"(table {table}, Vpad*L {vext})")
+
+
 def check_sort_free_level_round(mesh, vpad, u):
     """Acceptance: ZERO sort primitives AND exactly one all_to_all
     collective per level-round in engine.step (the counting-rank
@@ -140,6 +240,7 @@ def main():
     rng = np.random.default_rng(0)
 
     check_sort_free_level_round(mesh, vpad, u)
+    check_idx_table_extents(mesh, vpad=2048, u=16)
     check_overflow_accounting(mesh, ndev)
 
     # Full {ADD,MIN,MAX} x {WT,WB} x mode product: the fused pipeline must be

@@ -1,0 +1,332 @@
+"""Coverage-compaction equivalence properties (DESIGN §2.1).
+
+The engine's counting-rank router now keys its per-round idx tables — and
+the packed wire — in each level's *entering coverage* space via owner-digit
+removal (``geom.CompactPlan``): at level ℓ the owner coordinates on
+already-exchanged axes are pinned to the device's own, so the compact key
+drops those digits and every table shrinks from ``Vpad * n_lanes`` to
+``coverage(ℓ) * n_lanes``. Contract, swept across a randomized
+cross-product of seeds × {ADD, MIN, MAX} × coalescing/OWNER_DIRECT ×
+{packed, unpacked} wires × lanes × overflow pressure × mesh shapes (single
+and joint level axes, one and two exchanged axes):
+
+  * all four counters (n_sent, n_leftover, n_coalesced, dropped) are
+    bit-identical across {compacted count, compacted sort oracle,
+    uncompacted count, uncompacted sort oracle},
+  * leftover streams stay in GLOBAL index form and — in coalescing modes —
+    are element-for-element identical (value bits included) across all
+    four routers: compaction preserves element-index order within every
+    peer, so fit/leftover/drop selection cannot move,
+  * the compacted wire, once its compact keys are re-expanded through the
+    plan, is element-for-element identical to the uncompacted counting
+    wire (same ranks ⇒ same slots), and per-peer multiset-identical to
+    the sort oracle's,
+  * in the non-coalescing mode duplicates are interchangeable, so the two
+    counting routers still match element-for-element (arrival-order ranks)
+    while sort comparisons use per-peer counts + conservation multisets.
+
+Values are integer-valued floats so ADD coalescing is bit-stable under any
+summation order (the table-space segment reduction used under a plan may
+order a segment's adds differently from the head-position-space one).
+
+The engine-side structure — per-level plans, entering-coverage wire
+formats, `table_elems` — is asserted in-process (``TascadeEngine`` needs
+no devices); the jaxpr extent bound and end-to-end dist bit-equality run
+in the subprocess helpers (``tests/helpers/engine_check.py``,
+``tests/helpers/apps_fuzz_check.py``).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import exchange as ex
+from repro.core.geom import CompactPlan, MeshGeom
+from repro.core.types import (
+    CascadeMode,
+    ReduceOp,
+    TascadeConfig,
+    UpdateStream,
+    make_stream,
+    wire_format_for,
+)
+
+OPS = [ReduceOp.MIN, ReduceOp.MAX, ReduceOp.ADD]
+
+# (axis_sizes, exchanged axes, this level's axes): one- and two-axis
+# exchanged prefixes, single and joint level-axis groups — the shapes the
+# engine's PROXY_MERGE / FULL_CASCADE / TASCADE plans produce.
+CONFIGS = [
+    ((2, 4), ("ax1",), ("ax0",)),
+    ((4, 2), ("ax0",), ("ax1",)),
+    ((2, 2, 2), ("ax0", "ax1"), ("ax2",)),
+    ((2, 2, 2), ("ax0",), ("ax1", "ax2")),
+]
+
+
+def _geom(axis_sizes, num_elements):
+    names = tuple(f"ax{i}" for i in range(len(axis_sizes)))
+    return MeshGeom(axis_names=names, axis_sizes=tuple(axis_sizes),
+                    num_elements=num_elements)
+
+
+def _peer_fn(geom, axes):
+    """Engine-style joint peer (row-major over ``axes``) of idx's owner."""
+    def fn(idx):
+        peer = idx * 0
+        for a in axes:
+            peer = peer * geom.axis_size(a) + geom.owner_coord(idx, a)
+        return peer
+    return fn
+
+
+def _exch_lin(geom, exch_coords):
+    return sum(c * geom.axis_stride(a) for a, c in exch_coords.items())
+
+
+def _held_stream(rng, plan, exch_lin, u, frac_valid=0.85):
+    """Sentinel-padded stream whose global indices satisfy the level
+    invariant (exchanged owner digits pinned to ``exch_coords``), with
+    integer-valued f32 payloads (bit-stable under any reduction order)."""
+    ck = rng.integers(0, plan.coverage, size=u).astype(np.int32)
+    idx = np.asarray(plan.expand(jnp.asarray(ck), exch_lin)).astype(np.int32)
+    idx = np.where(rng.random(u) < frac_valid, idx, -1)
+    val = rng.integers(-8, 8, size=u).astype(np.float32)
+    val = np.where(idx == -1, 0, val)
+    return UpdateStream(jnp.asarray(idx), jnp.asarray(val))
+
+
+def _multiset(idx, val):
+    m = {}
+    for i, v in zip(np.asarray(idx).reshape(-1), np.asarray(val).reshape(-1)):
+        if i != -1:
+            k = (int(i), np.float32(v).tobytes())  # value BITS, not values
+            m[k] = m.get(k, 0) + 1
+    return m
+
+
+def _route_four_ways(new, geom, plan, level_axes, P, K, cap, *, op, coalesce,
+                     packed, peer_block):
+    """(compact count, compact sort, full-table count, full-table sort)."""
+    vpad = geom.padded_elements
+    peer_fn = _peer_fn(geom, level_axes)
+    fmt_c = wire_format_for(P, plan.coverage) if packed else None
+    fmt_g = wire_format_for(P, vpad) if packed else None
+    if packed:
+        assert fmt_c is not None and fmt_g is not None
+        assert fmt_c.idx_bits <= fmt_g.idx_bits
+    common = dict(op=op, coalesce=coalesce, num_elements=vpad)
+    out = {}
+    out["cp"] = ex.route_and_pack(
+        make_stream(cap, counted=True), new, peer_fn, P, K, fmt=fmt_c,
+        plan=plan, peer_block=peer_block, **common)
+    out["sp"] = ex.route_and_pack(
+        make_stream(cap, counted=True), new, peer_fn, P, K, fmt=fmt_c,
+        plan=plan, impl="sort", **common)
+    out["c0"] = ex.route_and_pack(
+        make_stream(cap, counted=True), new, peer_fn, P, K, fmt=fmt_g,
+        peer_block=peer_block, **common)
+    out["s0"] = ex.route_and_pack(
+        make_stream(cap, counted=True), new, peer_fn, P, K, fmt=fmt_g,
+        impl="sort", **common)
+    return out, fmt_c, fmt_g
+
+
+def _wire_global(rr, fmt, plan, exch_lin):
+    """Wire block -> [P*K] global-idx stream (expanding compact keys)."""
+    s = ex.wire_to_stream(rr.wire, fmt)
+    idx = np.asarray(s.idx)
+    if plan is not None:
+        exp = np.asarray(plan.expand(jnp.maximum(s.idx, 0), exch_lin))
+        idx = np.where(idx != -1, exp, -1)
+    return idx, np.asarray(s.val)
+
+
+def _check_case(rng, sizes, exch_axes, level_axes, *, op, coalesce, packed,
+                K, cap, lanes, peer_block_on):
+    geom = _geom(sizes, 96 * lanes)  # shard 12*lanes: heavy duplication
+    plan = geom.compact_plan(exch_axes)
+    assert plan is not None
+    assert plan.coverage == geom.padded_elements // math.prod(
+        geom.axis_size(a) for a in exch_axes)
+    coords = {a: int(rng.integers(0, geom.axis_size(a))) for a in exch_axes}
+    exch_lin = _exch_lin(geom, coords)
+    P = math.prod(geom.axis_size(a) for a in level_axes)
+    u = 64
+    new = _held_stream(rng, plan, exch_lin, u)
+    peer_block = geom.shard_size if peer_block_on else None
+    outs, fmt_c, fmt_g = _route_four_ways(
+        new, geom, plan, level_axes, P, K, cap, op=op, coalesce=coalesce,
+        packed=packed, peer_block=peer_block)
+
+    ref = outs["cp"]
+    for name in ("n_sent", "n_leftover", "n_coalesced", "dropped"):
+        vals = {k: int(getattr(r, name)) for k, r in outs.items()}
+        assert len(set(vals.values())) == 1, (name, vals)
+
+    wires = {
+        "cp": _wire_global(outs["cp"], fmt_c, plan, exch_lin),
+        "sp": _wire_global(outs["sp"], fmt_c, plan, exch_lin),
+        "c0": _wire_global(outs["c0"], fmt_g, None, 0),
+        "s0": _wire_global(outs["s0"], fmt_g, None, 0),
+    }
+    if coalesce:
+        # Selection AND placement: the two counting routers agree
+        # element-for-element; leftovers are identical on all four paths.
+        for k in ("sp", "c0", "s0"):
+            np.testing.assert_array_equal(
+                np.asarray(ref.leftover.idx), np.asarray(outs[k].leftover.idx),
+                err_msg=f"leftover idx cp vs {k}")
+            np.testing.assert_array_equal(
+                np.asarray(ref.leftover.val).view(np.uint32),
+                np.asarray(outs[k].leftover.val).view(np.uint32),
+                err_msg=f"leftover val bits cp vs {k}")
+        np.testing.assert_array_equal(wires["cp"][0], wires["c0"][0])
+        np.testing.assert_array_equal(wires["cp"][1].view(np.uint32),
+                                      wires["c0"][1].view(np.uint32))
+        for k in ("sp", "s0"):
+            ci = wires["cp"][0].reshape(P, K)
+            cv = wires["cp"][1].reshape(P, K)
+            si = wires[k][0].reshape(P, K)
+            sv = wires[k][1].reshape(P, K)
+            for p in range(P):
+                assert _multiset(ci[p], cv[p]) == _multiset(si[p], sv[p]), \
+                    (k, p)
+    else:
+        # Duplicates are interchangeable: the counting routers still agree
+        # element-for-element (arrival-order ranks); sort comparisons use
+        # per-peer counts + the conservation multiset.
+        np.testing.assert_array_equal(np.asarray(ref.leftover.idx),
+                                      np.asarray(outs["c0"].leftover.idx))
+        np.testing.assert_array_equal(wires["cp"][0], wires["c0"][0])
+        np.testing.assert_array_equal(wires["cp"][1].view(np.uint32),
+                                      wires["c0"][1].view(np.uint32))
+        ci = wires["cp"][0].reshape(P, K)
+        si = wires["s0"][0].reshape(P, K)
+        np.testing.assert_array_equal((ci != -1).sum(1), (si != -1).sum(1))
+        if int(ref.dropped) == 0:
+            # Conservation multiset (wire ∪ leftover) — only meaningful
+            # drop-free: without coalescing, WHICH interchangeable
+            # duplicate gets dropped under pending-queue pressure is
+            # schedule-dependent (arrival vs sorted order); the counters
+            # above already pin the drop COUNT bit-exactly.
+            un_c = _multiset(
+                np.concatenate([wires["cp"][0],
+                                np.asarray(ref.leftover.idx)]),
+                np.concatenate([wires["cp"][1],
+                                np.asarray(ref.leftover.val)]))
+            un_s = _multiset(
+                np.concatenate([wires["s0"][0],
+                                np.asarray(outs["s0"].leftover.idx)]),
+                np.concatenate([wires["s0"][1],
+                                np.asarray(outs["s0"].leftover.val)]))
+            assert un_c == un_s
+    return int(ref.dropped)
+
+
+def test_compact_plan_roundtrip():
+    """compact/expand are inverse bijections on every device's held set,
+    and the compact key is monotone in idx within each destination peer."""
+    rng = np.random.default_rng(0)
+    for sizes, exch_axes, level_axes in CONFIGS:
+        geom = _geom(sizes, 96)
+        plan = geom.compact_plan(exch_axes)
+        cov = plan.coverage
+        ck = jnp.arange(cov, dtype=jnp.int32)
+        for _ in range(3):
+            coords = {a: int(rng.integers(0, geom.axis_size(a)))
+                      for a in exch_axes}
+            lin = _exch_lin(geom, coords)
+            idx = plan.expand(ck, lin)
+            # bijection onto the held set
+            np.testing.assert_array_equal(np.asarray(plan.compact(idx)),
+                                          np.asarray(ck))
+            idx = np.asarray(idx)
+            assert len(set(idx.tolist())) == cov
+            for a, c in coords.items():  # exchanged digits pinned
+                np.testing.assert_array_equal(
+                    np.asarray(geom.owner_coord(jnp.asarray(idx), a)), c)
+            # monotone within each peer of this level
+            peer = np.asarray(_peer_fn(geom, level_axes)(jnp.asarray(idx)))
+            order = np.argsort(idx, kind="stable")
+            for p in np.unique(peer):
+                sel = np.asarray(ck)[order][peer[order] == p]
+                assert (np.diff(sel) > 0).all(), (sizes, exch_axes, p)
+
+
+def test_engine_plan_structure():
+    """The engine threads entering-coverage plans and coverage-sized wire
+    formats through every level past the first; compact_tables=False
+    retains the full-table router."""
+    from repro.core import CascadeMode, ReduceOp, TascadeEngine
+
+    geom = _geom((2, 4), 1024)
+    vpad = geom.padded_elements
+    for lanes in (1, 2):
+        cfg = TascadeConfig(region_axes=("ax1",), cascade_axes=("ax0",),
+                            mode=CascadeMode.FULL_CASCADE, n_lanes=lanes)
+        eng = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=64)
+        vext = vpad * lanes
+        cov = vext
+        for li, spec in enumerate(eng.levels):
+            if li == 0:
+                assert spec.plan is None
+            else:
+                assert spec.plan is not None
+                assert spec.plan.coverage == cov
+                assert spec.fmt.idx_bits == max(1, (cov - 1).bit_length())
+            cov //= spec.num_peers
+        assert eng.table_elems == sum(
+            (s.plan.coverage if s.plan else vext) for s in eng.levels)
+        off = TascadeEngine(
+            dataclasses.replace(cfg, compact_tables=False), geom,
+            ReduceOp.MIN, update_cap=64)
+        assert all(s.plan is None for s in off.levels)
+        assert off.table_elems == vext * len(off.levels)
+        assert off.table_elems > eng.table_elems
+    # OWNER_DIRECT: single joint level, no tables at all
+    cfg = TascadeConfig(region_axes=("ax1",), cascade_axes=("ax0",),
+                        mode=CascadeMode.OWNER_DIRECT)
+    assert TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=64).table_elems \
+        == 0
+
+
+def test_compacted_router_smoke():
+    """Fast single sweep of the four-way equivalence (one combo per mesh)."""
+    rng = np.random.default_rng(3)
+    for sizes, exch_axes, level_axes in CONFIGS:
+        _check_case(rng, sizes, exch_axes, level_axes, op=ReduceOp.MIN,
+                    coalesce=True, packed=True, K=64, cap=64, lanes=1,
+                    peer_block_on=True)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("coalesce", [True, False])
+@pytest.mark.parametrize("packed", [True, False])
+@pytest.mark.parametrize("pressure", ["ample", "overflow"])
+def test_compacted_router_cross_product(op, coalesce, packed, pressure):
+    """The randomized cross-product: seeds × lanes × mesh shapes × rank
+    paths inside, (op × mode × wire × pressure) as the parametrized axes.
+    Under overflow pressure the pending queue must actually drop entries in
+    at least one swept case (the drop-selection arm is exercised)."""
+    K, cap = (64, 64) if pressure == "ample" else (2, 6)
+    dropped_any = 0
+    for seed in range(2):
+        for lanes in (1, 2):
+            for ci, (sizes, exch_axes, level_axes) in enumerate(CONFIGS):
+                for peer_block_on in (True, False):
+                    rng = np.random.default_rng(
+                        100000 * seed + 1000 * ci + 10 * lanes
+                        + peer_block_on)
+                    dropped_any += _check_case(
+                        rng, sizes, exch_axes, level_axes, op=op,
+                        coalesce=coalesce, packed=packed, K=K, cap=cap,
+                        lanes=lanes, peer_block_on=peer_block_on)
+    if pressure == "overflow":
+        assert dropped_any > 0, "overflow sweep never dropped an entry"
+    else:
+        assert dropped_any == 0, "ample sweep must not drop entries"
