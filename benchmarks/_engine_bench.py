@@ -13,8 +13,13 @@ import time
 
 import numpy as np
 import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
 from repro.core import (CascadeMode, MeshGeom, ReduceOp, TascadeConfig,
                         TascadeEngine, compat)
+from repro.core.introspect import count_scatters
+from repro.core.types import UpdateStream
 from repro.graph import apps
 from repro.graph.partition import shard_graph
 from repro.graph.rmat import rmat_graph
@@ -63,6 +68,35 @@ def table_elems_for(mesh, vpad, cfg):
     return TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=8).table_elems
 
 
+def scatter_ops_for(mesh, vpad, cfg):
+    """XLA scatter-family primitives in one lowered ``engine.step`` (one
+    round per level) — the static count the fused route-pack epilogue
+    shrank, tracked per fig4 row so an accidental de-fusion (any epilogue
+    lane regrowing its own scatter) is visible in ``--compare`` exactly
+    like a table_elems regression. Counted on the traced jaxpr, so it is
+    machine-independent; ops inside Pallas kernel bodies do not count
+    (they run fused in one launch)."""
+    geom = MeshGeom.from_mesh(mesh, vpad)
+    engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=8)
+    axes = tuple(mesh.axis_names)
+
+    def shard_fn(dest, idx, val):
+        state = engine.init_state()
+        new = UpdateStream(idx.reshape(-1), val.reshape(-1))
+        state, dest, _ = engine.step(state, dest.reshape(-1), new)
+        return dest
+
+    fn = compat.shard_map(shard_fn, mesh=mesh,
+                          in_specs=(P(axes), P(axes), P(axes)),
+                          out_specs=P(axes), check_vma=False)
+    jaxpr = jax.make_jaxpr(fn)(
+        jnp.zeros((vpad,), jnp.float32),
+        jnp.zeros((ndev, 8), jnp.int32),
+        jnp.zeros((ndev, 8), jnp.float32),
+    )
+    return count_scatters(jaxpr.jaxpr)
+
+
 def main():
     scale = int(os.environ.get("BENCH_SCALE", "10"))
     g = rmat_graph(scale, edge_factor=8, seed=1, weighted=True)
@@ -80,6 +114,8 @@ def main():
     # on (mesh, vpad, mode), so compute it once per mode, not per app.
     tbl_for_mode = {mode: table_elems_for(mesh, sg.vpad, cfg_for(mode))
                     for mode in CascadeMode}
+    scat_for_mode = {mode: scatter_ops_for(mesh, sg.vpad, cfg_for(mode))
+                     for mode in CascadeMode}
     for app_name, runner in (
         ("sssp", lambda c: apps.run_sssp(mesh, sg, root, c)),
         ("bfs", lambda c: apps.run_bfs(mesh, sg, root, c)),
@@ -103,7 +139,8 @@ def main():
             tbl = tbl_for_mode[mode]
             row(f"fig4/{app_name}/{mode.value}", us,
                 f"hop_bytes={hop:.0f};traffic_x={base_hop / max(hop, 1):.2f};"
-                f"msgs={sent};table_elems={tbl}{gteps}")
+                f"msgs={sent};table_elems={tbl};"
+                f"scatter_ops={scat_for_mode[mode]}{gteps}")
 
     # ---- GTEPS protocol: batched K-lane multi-source sweeps ----
     # The paper's headline number is throughput at scale (edges/second over
@@ -191,6 +228,19 @@ def main():
         row(f"fig7/sssp/{'sync' if sync else 'async'}", us,
             f"epochs={int(met.epochs)};msgs={int(met.sent_total)};"
             f"hop_bytes={float(met.hop_bytes):.0f}")
+
+    # ---- Staged drain A/B: one batched cache pass per drain iteration ----
+    # (TascadeConfig.batch_cache_passes; the schedule changes, so traffic
+    # counters are reported but only correctness is contractual — the
+    # interleaved drain stays the default and keeps fig4 byte-stable.)
+    for label, batched in (("interleaved", False), ("batched_cache", True)):
+        cfgb = dataclasses.replace(cfg_for(CascadeMode.FULL_CASCADE),
+                                   batch_cache_passes=batched)
+        us, (res, met) = timed(
+            lambda c: apps.run_pagerank(mesh, sg, c, iters=5), cfgb)
+        row(f"drain/pagerank/{label}", us,
+            f"hop_bytes={float(met.hop_bytes):.0f};"
+            f"msgs={int(met.sent_total)}")
 
     # ---- Fig. 3: scaling (Dalorex vs Tascade traffic) on WCC ----
     for mode in (CascadeMode.OWNER_DIRECT, CascadeMode.TASCADE):

@@ -37,7 +37,8 @@ def _parse_derived(derived: str) -> dict:
                        ("filtered", "filtered"), ("coalesced", "coalesced"),
                        ("epochs", "epochs"), ("edges_relaxed", "edges_relaxed"),
                        ("gteps", "gteps"), ("speedup_x", "speedup_x"),
-                       ("table_elems", "table_elems")):
+                       ("table_elems", "table_elems"),
+                       ("scatter_ops", "scatter_ops")):
         m = re.search(rf"{key}=(-?[\d.]+)", derived)
         if m:
             out[alias] = float(m.group(1))
@@ -102,6 +103,30 @@ def kernel_benchmarks():
         us = timed(lambda: pcache_merge(idx, val, tags, vals, op="min",
                                         policy="write_through", impl=impl))
         row(f"kernel/pcache_merge/{impl}", us, f"u={u};lines={s}")
+
+    # Fused route-pack epilogue: wire + leftover fill in one launch vs the
+    # unfused per-lane scatters (jnp) at a typical level-round scale.
+    from repro.kernels.route_pack.ops import route_pack
+
+    ru, rp, rk, rc = 4096, 8, 256, 1024
+    nw = rp * rk
+    wd = np.full((ru,), nw, np.int32)
+    ld = np.full((ru,), rc, np.int32)
+    order = rng.permutation(ru)
+    wd[order[:nw // 2]] = rng.permutation(nw)[:nw // 2]
+    ld[order[nw // 2:nw // 2 + rc // 2]] = rng.permutation(rc)[:rc // 2]
+    rkey = jnp.asarray(rng.integers(0, rp << 12, ru).astype(np.int32))
+    rbits = jnp.asarray(rng.integers(-2**31, 2**31, ru,
+                                     dtype=np.int64).astype(np.int32))
+    rlidx = jnp.asarray(rng.integers(0, 2**20, ru).astype(np.int32))
+    rlval = jnp.asarray(rng.standard_normal(ru).astype(np.float32))
+    wd, ld = jnp.asarray(wd), jnp.asarray(ld)
+    for impl in ("jnp", "pallas"):
+        us = timed(lambda: route_pack(
+            wd, ld, (rkey, rbits), rlidx, rlval,
+            wire_inits=(rp << 12, 0), wire_kinds=("min", "bits"),
+            num_wire=nw, num_left=rc, impl=impl))
+        row(f"kernel/route_pack/{impl}", us, f"u={ru};wire={nw};left={rc}")
 
     e, n, d = 8192, 1024, 64
     seg = jnp.asarray(np.sort(rng.integers(0, n, e)).astype(np.int32))
@@ -168,7 +193,14 @@ def compare_snapshots(old_path: str, rows: list[dict],
       * ``sent``/``hop_bytes`` drifted more than ``traffic_tol`` (1%) in
         either direction — traffic counts ARE machine-independent, so any
         drift means the exchange pipeline changed behavior (intentional
-        changes must regenerate the committed snapshot in the same PR).
+        changes must regenerate the committed snapshot in the same PR),
+      * ``table_elems`` GREW at all (>0%) — the static per-round idx-table
+        work is machine-independent and only ever shrinks by design
+        (coverage compaction); any growth is a plan regression. Shrinkage
+        is reported but allowed. ``scatter_ops`` (static per-step scatter
+        count, the fused-epilogue metric) is printed alongside;
+        machine-independent too, so drifts are obvious in review even
+        before a gate is added.
 
     Rows present in only one snapshot are *warned about, never gated*: a PR
     that adds (or retires) bench rows still gets regression gating on the
@@ -195,10 +227,10 @@ def compare_snapshots(old_path: str, rows: list[dict],
     def fmt(d):
         return "     n/a" if d is None else f"{d * 100:+7.1f}%"
 
-    print(f"\n-- compare vs {old_path} "
-          "(us_per_call / sent / hop_bytes / table_elems deltas) --")
+    print(f"\n-- compare vs {old_path} (us_per_call / sent / hop_bytes / "
+          "table_elems / scatter_ops deltas) --")
     print(f"{'name':44s} {'us_delta':>8s} {'sent_d':>8s} {'hopB_d':>8s} "
-          f"{'tbl_d':>8s}")
+          f"{'tbl_d':>8s} {'scat_d':>8s}")
     for r in rows:
         o = old.get(r["name"])
         if o is None or r["us_per_call"] == 0:
@@ -207,9 +239,12 @@ def compare_snapshots(old_path: str, rows: list[dict],
         dsent = delta(r.get("sent"), o.get("sent"))
         dhop = delta(r.get("hop_bytes"), o.get("hop_bytes"))
         # table_elems tracks the router's per-round idx-table work (the
-        # coverage compaction); informational, never gated — growth here
-        # is a deliberate plan change, visible but not a CI failure.
+        # coverage compaction): machine-independent and shrink-only by
+        # design, so ANY growth on a fig4 row is gated as a regression.
         dtbl = delta(r.get("table_elems"), o.get("table_elems"))
+        # scatter_ops tracks the fused route-pack epilogue (static per-step
+        # scatter count); printed for review, gated in engine_check.
+        dscat = delta(r.get("scatter_ops"), o.get("scatter_ops"))
         flag = ""
         if r["name"].startswith("fig4/"):
             if dus is not None and dus > wall_tol:
@@ -222,8 +257,23 @@ def compare_snapshots(old_path: str, rows: list[dict],
                     flag = "  << REGRESSION"
                     regressions.append(
                         f"{r['name']}: {label} drifted {dt * 100:+.2f}%")
+            # Gate on the raw values, not the percentage delta: delta()
+            # returns None when the old value is 0 (OWNER_DIRECT builds no
+            # tables), and growth FROM zero — or the field disappearing —
+            # is exactly the kind of plan regression this gate exists for.
+            o_tbl, n_tbl = o.get("table_elems"), r.get("table_elems")
+            if o_tbl is not None and n_tbl is not None and n_tbl > o_tbl:
+                flag = "  << REGRESSION"
+                regressions.append(
+                    f"{r['name']}: table_elems grew "
+                    f"{o_tbl:.0f} -> {n_tbl:.0f}")
+            elif o_tbl is not None and n_tbl is None:
+                flag = "  << REGRESSION"
+                regressions.append(
+                    f"{r['name']}: table_elems column disappeared "
+                    f"(was {o_tbl:.0f})")
         print(f"{r['name']:44s} {fmt(dus)} {fmt(dsent)} {fmt(dhop)} "
-              f"{fmt(dtbl)}{flag}", flush=True)
+              f"{fmt(dtbl)} {fmt(dscat)}{flag}", flush=True)
     for line in regressions:
         print(f"REGRESSION {line}", flush=True)
     return regressions

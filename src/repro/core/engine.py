@@ -309,12 +309,14 @@ class TascadeEngine:
             peer = peer * self.geom.axis_size(a) + self.geom.owner_coord(idx, a)
         return peer
 
-    def _level_round(self, spec: LevelSpec, lvl: LevelState,
-                     new: UpdateStream | None):
-        """One exchange+merge round at a level: the fused single-sort
-        shuffle, ONE collective on the packed wire word, and a sort-free
-        cache merge. Returns (new level state, emissions for the next level,
-        sent count, filtered count, coalesced count, dropped count)."""
+    def _exchange_round(self, spec: LevelSpec, lvl: LevelState,
+                        new: UpdateStream | None):
+        """The exchange half of a level-round: the counting-rank shuffle
+        with its fused route-pack epilogue, ONE collective on the packed
+        wire word, and compact-key re-expansion on the receive side.
+        Returns (leftover stream, received stream, sent, coalesced,
+        dropped) — no cache interaction, so the staged drain can run every
+        level's exchange before ONE batched cache pass."""
         rr = ex.route_and_pack(
             lvl.pending, new,
             lambda i: self._peer_of(i, spec.axes),
@@ -326,6 +328,7 @@ class TascadeEngine:
             fmt=spec.fmt,
             num_elements=self.geom.padded_elements,
             coalesce_impl="pallas" if self.cfg.use_pallas else "jnp",
+            pack_impl="pallas" if self.cfg.use_pallas else "jnp",
             pallas_interpret=self.cfg.pallas_interpret,
             # Owner geometry: the joint peer of an index is a function of
             # its owner shard, so the peer map is constant on shard-size
@@ -347,6 +350,16 @@ class TascadeEngine:
             gidx = spec.plan.expand(jnp.maximum(recv.idx, 0), exch_lin)
             recv = UpdateStream(jnp.where(recv.idx != NO_IDX, gidx, NO_IDX),
                                 recv.val)
+        return rr.leftover, recv, rr.n_sent, rr.n_coalesced, rr.dropped
+
+    def _level_round(self, spec: LevelSpec, lvl: LevelState,
+                     new: UpdateStream | None):
+        """One full exchange+merge round at a level: ``_exchange_round``
+        followed by a sort-free cache merge. Returns (new level state,
+        emissions for the next level, sent count, filtered count, coalesced
+        count, dropped count)."""
+        leftover, recv, n_sent, n_coal, dropped = self._exchange_round(
+            spec, lvl, new)
         if spec.merge:
             if self.cfg.use_pallas:
                 # Route the cache pass through the block-vectorized Pallas
@@ -378,25 +391,21 @@ class TascadeEngine:
         else:
             cache, out = lvl.cache, recv
             filtered = jnp.int32(0)
-        new_lvl = LevelState(cache=cache, pending=rr.leftover)
-        return new_lvl, out, rr.n_sent, filtered, rr.n_coalesced, rr.dropped
+        new_lvl = LevelState(cache=cache, pending=leftover)
+        return new_lvl, out, n_sent, filtered, n_coal, dropped
 
     # --------------------------------------------------- interleaved drain
 
-    def _drain_all(self, levels, dest_shard, overflow, sent, filtered,
-                   coalesced):
-        """Early-exit drain advancing ALL levels per iteration (leaf→root,
-        so an update can traverse the whole tree in one iteration). Stops
-        the moment every queue on the mesh is empty — the check is one psum
-        of the summed occupancy counters."""
+    def _run_drain(self, levels, dest_shard, overflow, sent, filtered,
+                   coalesced, round_fn, limit: int):
+        """Shared early-exit drain shell: iterate ``round_fn`` (one drain
+        iteration over the level list) until every queue on the mesh is
+        empty — the check is one psum of the summed occupancy counters —
+        or the progress ``limit`` trips. Both drain schedules (interleaved
+        and staged) supply only their iteration body, so the termination
+        machinery cannot fork between them."""
         all_axes = tuple(self.geom.axis_names)
-        nlev = len(self.levels)
-        # Progress bound: each round ships >= 1 message per nonempty bucket,
-        # so a full queue drains in <= ceil(cap/bucket) of its own rounds;
-        # x2 + slack per level guards a pathological all-one-peer skew.
-        limit = jnp.int32(sum(
-            2 * math.ceil(s.pending_cap / s.bucket_cap) + 4 for s in self.levels
-        ) + 2 * nlev)
+        limit = jnp.int32(limit)
 
         def occupancy(lvls):
             t = jnp.int32(0)
@@ -410,23 +419,8 @@ class TascadeEngine:
 
         def body(carry):
             r, _, lvls, dest, ovf, s_vec, filt, coal = carry
-            lvls = list(lvls)
-            for li, spec in enumerate(self.levels):
-                lvl, out, n_sent, f, c, d = self._level_round(
-                    spec, lvls[li], None)
-                lvls[li] = lvl
-                ovf = ovf + d
-                if li + 1 == nlev:
-                    dest = pcache.apply_to_owner(
-                        dest, out, op=self.op, base=self.geom.my_base())
-                else:
-                    pend, dq = ex.enqueue(lvls[li + 1].pending, out)
-                    lvls[li + 1] = LevelState(cache=lvls[li + 1].cache,
-                                              pending=pend)
-                    ovf = ovf + dq
-                s_vec = s_vec.at[li].add(n_sent)
-                filt = filt + f
-                coal = coal + c
+            lvls, dest, ovf, s_vec, filt, coal = round_fn(
+                list(lvls), dest, ovf, s_vec, filt, coal)
             g = jax.lax.psum(occupancy(lvls), all_axes)
             return (r + 1, g, tuple(lvls), dest, ovf, s_vec, filt, coal)
 
@@ -436,6 +430,147 @@ class TascadeEngine:
         (_, _, lvls, dest_shard, overflow,
          sent, filtered, coalesced) = jax.lax.while_loop(cond, body, carry)
         return list(lvls), dest_shard, overflow, sent, filtered, coalesced
+
+    def _drain_all(self, levels, dest_shard, overflow, sent, filtered,
+                   coalesced):
+        """Early-exit drain advancing ALL levels per iteration (leaf→root,
+        so an update can traverse the whole tree in one iteration). With
+        ``TascadeConfig.batch_cache_passes`` the staged round body runs
+        instead (``_staged_round``: all exchanges first, then ONE batched
+        cache pass per iteration); both share the ``_run_drain`` shell."""
+        # Progress bound: each round ships >= 1 message per nonempty bucket,
+        # so a full queue drains in <= ceil(cap/bucket) of its own rounds;
+        # x2 + slack per level guards a pathological all-one-peer skew.
+        limit = sum(2 * math.ceil(s.pending_cap / s.bucket_cap) + 4
+                    for s in self.levels) + 2 * len(self.levels)
+        if self.cfg.batch_cache_passes:
+            # Staged pipeline: an update advances one level per iteration,
+            # so the bound stretches by the tree depth.
+            round_fn = self._staged_round
+            limit = (len(self.levels) + 1) * limit
+        else:
+            round_fn = self._interleaved_round
+        return self._run_drain(levels, dest_shard, overflow, sent, filtered,
+                               coalesced, round_fn, limit)
+
+    def _interleaved_round(self, lvls, dest, ovf, s_vec, filt, coal):
+        """One interleaved drain iteration: a full exchange+merge round at
+        every level leaf→root, emissions flowing downstream within the
+        SAME iteration."""
+        nlev = len(self.levels)
+        for li, spec in enumerate(self.levels):
+            lvl, out, n_sent, f, c, d = self._level_round(spec, lvls[li],
+                                                          None)
+            lvls[li] = lvl
+            ovf = ovf + d
+            if li + 1 == nlev:
+                dest = pcache.apply_to_owner(
+                    dest, out, op=self.op, base=self.geom.my_base())
+            else:
+                pend, dq = ex.enqueue(lvls[li + 1].pending, out)
+                lvls[li + 1] = LevelState(cache=lvls[li + 1].cache,
+                                          pending=pend)
+                ovf = ovf + dq
+            s_vec = s_vec.at[li].add(n_sent)
+            filt = filt + f
+            coal = coal + c
+        return lvls, dest, ovf, s_vec, filt, coal
+
+    # --------------------------------------------- staged round (batched)
+
+    def _staged_round(self, lvls, dest, ovf, s_vec, filt, coal):
+        """One staged drain iteration: every level's exchange on its
+        iteration-start queue, then ONE batched cache pass over all
+        merging levels (level caches stacked on a leading axis —
+        ``pcache.cache_pass_batched``, or the grid-batched Pallas kernel
+        under ``use_pallas``), then emissions forward to the next level's
+        queue for the NEXT iteration.
+
+        Per-iteration launch count stops scaling with tree depth. Root
+        results are identical to the interleaved schedule (the reduction
+        is associative/commutative and nothing is dropped — overflow stays
+        audited), but an update traverses ONE level per iteration, so
+        per-round coalescing groups and the ``sent``/``filtered`` traffic
+        counters may differ.
+        """
+        nlev = len(self.levels)
+        merge_lis = [li for li, s in enumerate(self.levels) if s.merge]
+        smax = max((self.levels[li].cache_lines for li in merge_lis),
+                   default=1)
+        umax = max((self.levels[li].num_peers * self.levels[li].bucket_cap
+                    for li in merge_lis), default=1)
+        sizes = tuple(self.levels[li].cache_lines for li in merge_lis)
+        identity = jnp.asarray(self.op.identity, self.dtype)
+
+        def _pad(x, n, fill):
+            if x.shape[0] == n:
+                return x
+            return jnp.concatenate(
+                [x, jnp.full((n - x.shape[0],), fill, x.dtype)])
+
+        outs = []
+        # Stage 1: every level's exchange, on iteration-start queues.
+        for li, spec in enumerate(self.levels):
+            leftover, recv, n_sent, c, d = self._exchange_round(
+                spec, lvls[li], None)
+            lvls[li] = LevelState(cache=lvls[li].cache, pending=leftover)
+            outs.append(recv)
+            s_vec = s_vec.at[li].add(n_sent)
+            coal = coal + c
+            ovf = ovf + d
+        # Stage 2: ONE batched cache pass over all merging levels.
+        if merge_lis:
+            idx_stack = jnp.stack(
+                [_pad(outs[li].idx, umax, NO_IDX) for li in merge_lis])
+            val_stack = jnp.stack(
+                [_pad(outs[li].val, umax, 0) for li in merge_lis])
+            tags_stack = jnp.stack(
+                [_pad(lvls[li].cache.tags, smax, NO_IDX)
+                 for li in merge_lis])
+            vals_stack = jnp.stack(
+                [_pad(lvls[li].cache.vals, smax, identity)
+                 for li in merge_lis])
+            if self.cfg.use_pallas:
+                from repro.kernels.pcache.ops import pcache_merge_batched
+
+                tags_n, vals_n, eidx, eval_ = pcache_merge_batched(
+                    idx_stack, val_stack, tags_stack, vals_stack,
+                    op=self.op.value, policy=self.cfg.policy.value,
+                    sizes=sizes, impl="pallas",
+                    interpret=self.cfg.pallas_interpret)
+                f_vec = None
+            else:
+                tags_n, vals_n, eidx, eval_, f_vec = \
+                    pcache.cache_pass_batched(
+                        tags_stack, vals_stack, idx_stack, val_stack,
+                        op=self.op, policy=self.cfg.policy,
+                        selective=self.cfg.mode is CascadeMode.TASCADE,
+                        sizes=sizes)
+            for k, li in enumerate(merge_lis):
+                lines = self.levels[li].cache_lines
+                ul = self.levels[li].num_peers * self.levels[li].bucket_cap
+                lvls[li] = LevelState(
+                    cache=PCacheState(tags_n[k, :lines], vals_n[k, :lines]),
+                    pending=lvls[li].pending)
+                out = UpdateStream(eidx[k, :ul], eval_[k, :ul])
+                if f_vec is None:
+                    n_in = jnp.sum(outs[li].idx != NO_IDX, dtype=jnp.int32)
+                    n_out = jnp.sum(out.idx != NO_IDX, dtype=jnp.int32)
+                    filt = filt + jnp.maximum(n_in - n_out, 0)
+                else:
+                    filt = filt + f_vec[k]
+                outs[li] = out
+        # Stage 3: forward emissions — next iteration's inflow.
+        for li in range(nlev):
+            if li + 1 == nlev:
+                dest = pcache.apply_to_owner(
+                    dest, outs[li], op=self.op, base=self.geom.my_base())
+            else:
+                pend, dq = ex.enqueue(lvls[li + 1].pending, outs[li])
+                lvls[li + 1] = LevelState(cache=lvls[li + 1].cache,
+                                          pending=pend)
+                ovf = ovf + dq
+        return lvls, dest, ovf, s_vec, filt, coal
 
     # ------------------------------------------------------------------ step
 

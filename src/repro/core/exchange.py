@@ -31,8 +31,11 @@ The pipeline:
     fixed ``[P, K]`` block, the exclusive prefix-sum over that histogram
     degenerates to the static bucket bases ``peer * bucket_cap``,
   * a per-peer running count (columnwise cumsum of the tiny peer one-hot)
-    gives every message its in-bucket *rank*, and one rank-scatter places
-    it directly into its wire slot,
+    gives every message its in-bucket *rank*; the **fused route-pack
+    epilogue** (``kernels/route_pack`` — numpy oracle, jnp unfused
+    scatters, one block-tiled Pallas kernel under ``use_pallas``) then
+    places every message directly into its wire slot and every overflow
+    into the front-compacted leftover stream in ONE pass,
   * duplicate element indices are found with one scatter-min over an
     idx-indexed table (the *segment head* = first update carrying that
     element) and coalesced **pre-exchange** with one segment reduction into
@@ -170,6 +173,7 @@ def route_and_pack(
     impl: str = "count",
     num_elements: int | None = None,
     coalesce_impl: str = "jnp",
+    pack_impl: str = "jnp",
     pallas_interpret: bool | None = None,
     peer_block: int | None = None,
     plan: CompactPlan | None = None,
@@ -194,7 +198,11 @@ def route_and_pack(
     static element-index bound ``num_elements`` for its idx tables when
     coalescing (derived from ``fmt.idx_bits`` when omitted);
     ``coalesce_impl``/``pallas_interpret`` select the segment-coalesce
-    reduction backend (``"jnp"`` scatter-reduce or the ``"pallas"`` kernel).
+    reduction backend (``"jnp"`` scatter-reduce or the ``"pallas"`` kernel);
+    ``pack_impl`` selects the route-pack epilogue backend the same way
+    (``kernels/route_pack``: ``"jnp"`` = the unfused per-lane scatters,
+    ``"pallas"`` = ONE fused kernel filling wire block and leftover stream
+    in a single pass over the stream — bit-exact either way).
     ``peer_block`` (static) declares that ``peer_fn`` is constant on
     consecutive idx blocks of that size (true for owner-shard geometry),
     unlocking the O(T) block-structured rank instead of the generic
@@ -234,7 +242,8 @@ def route_and_pack(
         return _route_counting(
             idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
             op=op, coalesce=coalesce, fmt=fmt, table=num_elements,
-            coalesce_impl=coalesce_impl, pallas_interpret=pallas_interpret,
+            coalesce_impl=coalesce_impl, pack_impl=pack_impl,
+            pallas_interpret=pallas_interpret,
             peer_block=peer_block, plan=plan)
     assert impl == "sort", impl
     if fmt is not None:
@@ -250,8 +259,8 @@ def route_and_pack(
 
 def _route_counting(idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
                     *, op: ReduceOp, coalesce: bool, fmt: WireFormat | None,
-                    table: int, coalesce_impl: str,
-                    pallas_interpret: bool | None,
+                    table: int, coalesce_impl: str, pack_impl: str = "jnp",
+                    pallas_interpret: bool | None = None,
                     peer_block: int | None = None,
                     plan: CompactPlan | None = None):
     """O(U) sort-free shuffle: histogram ranks + rank-scatter + one
@@ -380,10 +389,6 @@ def _route_counting(idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
     else:
         left_pos = jnp.cumsum(left, dtype=jnp.int32) - 1
     ldest = jnp.where(left & (left_pos < cap_out), left_pos, cap_out)
-    left_idx = jnp.full((cap_out + 1,), NO_IDX, jnp.int32).at[ldest].set(
-        jnp.where(left, idx, NO_IDX))
-    left_val = jnp.zeros((cap_out + 1,), val.dtype).at[ldest].set(
-        jnp.where(left, msg_val, 0))
 
     n_valid = jnp.sum(valid, dtype=jnp.int32)
     n_msgs = jnp.sum(head, dtype=jnp.int32)
@@ -391,40 +396,44 @@ def _route_counting(idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
     n_left_raw = n_msgs - n_sent
     dropped = jnp.maximum(n_left_raw - cap_out, 0)
     n_left = jnp.minimum(n_left_raw, cap_out)
-    leftover = UpdateStream(left_idx[:cap_out], left_val[:cap_out], n_left)
 
-    # Rank-scatter the fitting messages straight into their wire slots
-    # (compact keys when a plan is active — the receiver expands them).
+    # Fused route-pack epilogue (kernels/route_pack): the fitting messages
+    # rank-scatter straight into their wire slots (compact keys when a plan
+    # is active — the receiver expands them) and the overflowing ones into
+    # the front-compacted leftover stream. Parking via dest: every non-fit
+    # entry carries the discard slot, so lanes go in unmasked.
+    from repro.kernels.route_pack.ops import route_pack
+
     if fmt is None:
-        packed_idx = jnp.full((num_peers * bucket_cap + 1,), NO_IDX,
-                              jnp.int32).at[dest].set(
-            jnp.where(fits, ck, NO_IDX))
-        packed_val = jnp.zeros((num_peers * bucket_cap + 1,),
-                               val.dtype).at[dest].set(
-            jnp.where(fits, msg_val, 0))
-        wire = (packed_idx[:-1].reshape(num_peers, bucket_cap),
-                packed_val[:-1].reshape(num_peers, bucket_cap))
+        lanes = (ck, msg_val)
+        inits = (-1, 0)
+        kinds = ("max", "bits")
     else:
         key = jnp.where(fits, (peer << fmt.idx_bits) | ck, fmt.invalid_key)
         if fmt.word64:
-            inv64 = jnp.uint64(fmt.invalid_key) << 32
             word = (key.astype(jnp.uint64) << 32) | \
                 val_bits(msg_val).astype(jnp.uint64)
-            wire = jnp.full((num_peers * bucket_cap + 1,), inv64,
-                            jnp.uint64).at[dest].set(
-                jnp.where(fits, word, inv64))
-            wire = wire[:-1].reshape(num_peers, bucket_cap)
+            lanes = (word,)
+            inits = (int(fmt.invalid_key) << 32,)
+            kinds = ("min",)
         else:
-            inv_key = jnp.int32(fmt.invalid_key)
-            kl = jnp.full((num_peers * bucket_cap + 1,), inv_key,
-                          jnp.int32).at[dest].set(
-                jnp.where(fits, key, inv_key))
-            vl = jnp.zeros((num_peers * bucket_cap + 1,),
-                           jnp.int32).at[dest].set(
-                jnp.where(fits, val_bits(msg_val).astype(jnp.int32), 0))
-            wire = jnp.concatenate(
-                [kl[:-1].reshape(num_peers, bucket_cap),
-                 vl[:-1].reshape(num_peers, bucket_cap)], axis=1)
+            lanes = (key, val_bits(msg_val).astype(jnp.int32))
+            inits = (int(fmt.invalid_key), 0)
+            kinds = ("min", "bits")
+    wire_lanes, left_idx, left_val = route_pack(
+        dest, ldest, lanes, idx, msg_val, wire_inits=inits, wire_kinds=kinds,
+        num_wire=num_peers * bucket_cap, num_left=cap_out, impl=pack_impl,
+        interpret=pallas_interpret)
+    leftover = UpdateStream(left_idx, left_val, n_left)
+    if fmt is None:
+        wire = (wire_lanes[0].reshape(num_peers, bucket_cap),
+                wire_lanes[1].reshape(num_peers, bucket_cap))
+    elif fmt.word64:
+        wire = wire_lanes[0].reshape(num_peers, bucket_cap)
+    else:
+        wire = jnp.concatenate(
+            [wire_lanes[0].reshape(num_peers, bucket_cap),
+             wire_lanes[1].reshape(num_peers, bucket_cap)], axis=1)
     return RouteResult(wire=wire, leftover=leftover, n_sent=n_sent,
                        n_leftover=n_left, n_coalesced=n_valid - n_msgs,
                        dropped=dropped)

@@ -1,0 +1,100 @@
+"""Jaxpr introspection helpers for the repo's static program gates.
+
+The engine's hot-path contracts are enforced on the *lowered program*, not
+on timings: zero sorts and one collective per level-round, idx-table
+extents bounded by coverage, exactly one fused route-pack kernel and a
+bounded scatter count per level-round. These walkers are shared by the CI
+gate helpers (``tests/helpers/engine_check.py``, ``lanes_check.py``) and
+by ``benchmarks/_engine_bench.py`` (the ``scatter_ops`` column).
+"""
+from __future__ import annotations
+
+
+def iter_jaxprs(jaxpr, *, into_pallas: bool = True):
+    """Yield a jaxpr and every jaxpr nested in its eqn params.
+
+    ``into_pallas=False`` skips kernel-body jaxprs nested under
+    ``pallas_call`` eqns: a kernel's internal ops execute fused on-chip,
+    so XLA-launch-count gates must not see them.
+    """
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        if not into_pallas and eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else [v]
+            for w in vs:
+                if hasattr(w, "eqns"):            # inner Jaxpr
+                    yield from iter_jaxprs(w, into_pallas=into_pallas)
+                elif hasattr(w, "jaxpr"):         # ClosedJaxpr
+                    yield from iter_jaxprs(w.jaxpr, into_pallas=into_pallas)
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    """Occurrences of a primitive (exact name) anywhere in the program."""
+    return sum(1 for jp in iter_jaxprs(jaxpr) for eqn in jp.eqns
+               if eqn.primitive.name == name)
+
+
+def count_primitive_prefix(jaxpr, prefix: str, *,
+                           into_pallas: bool = True) -> int:
+    """Occurrences of any primitive whose name starts with ``prefix`` —
+    e.g. ``"scatter"`` counts scatter / scatter-add / scatter-min /
+    scatter-max / scatter-mul alike."""
+    return sum(1 for jp in iter_jaxprs(jaxpr, into_pallas=into_pallas)
+               for eqn in jp.eqns if eqn.primitive.name.startswith(prefix))
+
+
+def count_scatters(jaxpr) -> int:
+    """XLA-level scatter-family primitives in the program (the fused
+    route-pack epilogue's acceptance metric: the per-level-round count
+    must stay at the head-table + segment-coalesce floor). Ops inside
+    Pallas kernel bodies are excluded — they run fused in one launch,
+    which is exactly what the fusion buys."""
+    return count_primitive_prefix(jaxpr, "scatter", into_pallas=False)
+
+
+def count_sorts(jaxpr) -> int:
+    return count_primitive(jaxpr, "sort")
+
+
+def count_pallas_calls(jaxpr, name_contains: str | None = None) -> int:
+    """Pallas kernel launches in the program; ``name_contains`` filters on
+    the kernel's registered name when the installed jax records one in the
+    eqn params (it falls back to counting every launch otherwise, so gates
+    should arrange for a unique kernel in the traced region)."""
+    n = 0
+    for jp in iter_jaxprs(jaxpr):
+        for eqn in jp.eqns:
+            if eqn.primitive.name != "pallas_call":
+                continue
+            if name_contains is not None:
+                label = str(eqn.params.get(
+                    "name_and_src_info", eqn.params.get("name", "")))
+                if label and name_contains not in label:
+                    continue
+            n += 1
+    return n
+
+
+def max_array_extent(jaxpr) -> int:
+    """Largest single array dimension appearing anywhere in the program."""
+    m = 0
+    for jp in iter_jaxprs(jaxpr):
+        for eqn in jp.eqns:
+            for var in list(eqn.invars) + list(eqn.outvars):
+                shape = getattr(getattr(var, "aval", None), "shape", ())
+                for d in shape:
+                    if isinstance(d, int):
+                        m = max(m, d)
+    return m
+
+
+def has_extent(jaxpr, extent: int) -> bool:
+    for jp in iter_jaxprs(jaxpr):
+        for eqn in jp.eqns:
+            for var in list(eqn.invars) + list(eqn.outvars):
+                shape = getattr(getattr(var, "aval", None), "shape", ())
+                if extent in shape:
+                    return True
+    return False

@@ -23,12 +23,22 @@ Two implementations with identical *root semantics* (the multiset of
                     ops, not a message loop. Which contender wins a line
                     differs from ``merge_seq``; reduction results do not.
 
-Within-batch coalescing happens pre-exchange in the fused
+Within-batch coalescing happens pre-exchange in the counting-rank
 ``exchange.route_and_pack`` shuffle on the engine path (the paper's
 at-source coalescing); ``merge(coalesce=True)`` keeps a standalone
-sort-based front-end for direct callers. The vectorized cache pass is also
-available as a block-vectorized Pallas TPU kernel (``repro.kernels.pcache``);
-``cache_pass`` is its reference implementation.
+sort-based front-end for direct callers.
+
+One conflict-resolution core, three entry points: ``_conflict_core`` holds
+the scatter math; ``cache_pass`` runs it against one cache;
+``cache_pass_batched`` runs ONE launch against a whole stack of level
+caches (rows flattened onto disjoint slot ranges — bit-equal per level to
+the ``cache_pass`` loop, proven in ``tests/test_batched_cache.py``), which
+the engine's staged drain (``TascadeConfig.batch_cache_passes``, DESIGN
+§2.4) uses to stop per-iteration launch count scaling with tree depth.
+Both shapes are also available as block-vectorized Pallas TPU kernels
+(``repro.kernels.pcache``: ``pcache_merge`` / ``pcache_merge_batched``);
+the jnp passes here are their reference implementations and trace inside
+the kernels as the single source of truth.
 """
 from __future__ import annotations
 
@@ -110,38 +120,23 @@ def _scatter_combine(arr: jnp.ndarray, slot: jnp.ndarray, val: jnp.ndarray,
     return padded[:s]
 
 
-def cache_pass(
-    tags: jnp.ndarray,
-    vals: jnp.ndarray,
-    idx: jnp.ndarray,
-    val: jnp.ndarray,
-    *,
-    op: ReduceOp,
-    policy: WritePolicy,
-    selective: bool = False,
-):
-    """Sort-free vectorized conflict resolution against a direct-mapped cache.
-
-    Winner election among entries contending for one line is a scatter-max
-    over element indices (largest contending element id claims the line)
-    instead of a sort: entirely gather/compare/scatter, keeping the whole
-    level-round sort-free (``exchange.route_and_pack`` is the zero-sort
-    counting-rank router). Duplicate entries of the winning element combine
-    into the line with one more reduction scatter.
-
-    Emissions are positional ([U], slot j belongs to input entry j): an
-    entry's own pass-through/improving write, or — write-back — the occupant
-    its (unique per line) primary winner evicted. Returns
-    ``(tags, vals, emit_idx, emit_val, n_filtered)``.
+def _conflict_core(tags, vals, idx, val, slot, valid, *,
+                   op: ReduceOp, policy: WritePolicy, selective: bool):
+    """Flat conflict-resolution core shared by ``cache_pass`` (one cache)
+    and ``cache_pass_batched`` (stacked level caches flattened with
+    disjoint per-level slot ranges — every scatter below then serves all
+    levels in ONE op). ``tags``/``vals`` are flat [S_t]; ``idx``/``val``/
+    ``slot``/``valid`` flat [N]; the discard bin is ``S_t``. Returns
+    ``(new_tags, new_vals, e_idx, e_val, filtered_mask)`` — emissions
+    positional, ``filtered_mask`` the per-entry write-through filter hits
+    (callers sum it to whatever granularity they report).
 
     Uses a python-int sentinel internally (not the module-level jnp scalar
-    ``NO_IDX``) so the whole pass stays constant-free and can trace inside a
-    ``pallas_call`` kernel without captured-constant errors.
+    ``NO_IDX``) so the whole pass stays constant-free and can trace inside
+    a ``pallas_call`` kernel without captured-constant errors.
     """
     _NOI = -1  # == int(NO_IDX); plain int so no jnp constant is captured
     u, s = idx.shape[0], tags.shape[0]
-    valid = idx != _NOI
-    slot = jnp.where(valid, idx % s, 0)
     cur_tag = tags[slot]
     cur_val = vals[slot]
     hit = valid & (cur_tag == idx)
@@ -181,7 +176,7 @@ def cache_pass(
         # the delta (not the running sum) to avoid double counting.
         e_idx = jnp.where(emit, idx, _NOI)
         e_val = jnp.where(emit, val, jnp.zeros_like(val))
-        n_filtered = jnp.sum(hit & ~improved, dtype=jnp.int32)
+        filtered = hit & ~improved
     else:  # WRITE_BACK
         # Hits coalesce silently; winners evict the (post-coalesce) occupant
         # and install their combined value; losers pass through.
@@ -192,6 +187,8 @@ def cache_pass(
         new_vals = jnp.where(claimed, win_val, vals_h)
         # One "primary" entry per claimed line (first winner position)
         # carries the eviction so emissions stay positional and disjoint.
+        # (Within a level's slot group all contenders share the level, so
+        # the flat-position min picks the same entry as a per-level one.)
         pos = jnp.arange(u, dtype=jnp.int32)
         first = jnp.full((s + 1,), u, jnp.int32).at[slot_c].min(
             jnp.where(winner, pos, u))
@@ -200,8 +197,87 @@ def cache_pass(
         e_idx = jnp.where(loser, idx, jnp.where(evict, cur_tag, _NOI))
         e_val = jnp.where(loser, val,
                           jnp.where(evict, vals_h[slot], jnp.zeros_like(val)))
-        n_filtered = jnp.zeros((), jnp.int32)
-    return new_tags, new_vals, e_idx, e_val, n_filtered
+        filtered = jnp.zeros_like(valid)
+    return new_tags, new_vals, e_idx, e_val, filtered
+
+
+def cache_pass(
+    tags: jnp.ndarray,
+    vals: jnp.ndarray,
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    *,
+    op: ReduceOp,
+    policy: WritePolicy,
+    selective: bool = False,
+):
+    """Sort-free vectorized conflict resolution against a direct-mapped cache.
+
+    Winner election among entries contending for one line is a scatter-max
+    over element indices (largest contending element id claims the line)
+    instead of a sort: entirely gather/compare/scatter, keeping the whole
+    level-round sort-free (``exchange.route_and_pack`` is the zero-sort
+    counting-rank router). Duplicate entries of the winning element combine
+    into the line with one more reduction scatter.
+
+    Emissions are positional ([U], slot j belongs to input entry j): an
+    entry's own pass-through/improving write, or — write-back — the occupant
+    its (unique per line) primary winner evicted. Returns
+    ``(tags, vals, emit_idx, emit_val, n_filtered)``.
+    """
+    s = tags.shape[0]
+    valid = idx != -1
+    slot = jnp.where(valid, idx % s, 0)
+    new_tags, new_vals, e_idx, e_val, filtered = _conflict_core(
+        tags, vals, idx, val, slot, valid,
+        op=op, policy=policy, selective=selective)
+    return new_tags, new_vals, e_idx, e_val, \
+        jnp.sum(filtered, dtype=jnp.int32)
+
+
+def cache_pass_batched(
+    tags: jnp.ndarray,
+    vals: jnp.ndarray,
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    *,
+    op: ReduceOp,
+    policy: WritePolicy,
+    selective: bool = False,
+    sizes=None,
+):
+    """One ``cache_pass`` launch serving a whole STACK of level caches.
+
+    ``tags``/``vals`` are [L, S] stacked caches, ``idx``/``val`` [L, U]
+    stacked streams: row l is resolved against cache l exactly as
+    ``cache_pass(tags[l], vals[l], idx[l], val[l])`` would — bit-equal per
+    level (``tests/test_batched_cache.py``) — but every scatter in the
+    pass covers all L levels at once (rows flatten onto disjoint slot
+    ranges ``l*S + idx % size_l``), so the per-level launch loop in the
+    engine's drain collapses to one pass per iteration.
+
+    ``sizes`` (static tuple or int array [L]; default: every row uses S)
+    gives each row's true direct-mapped line count when rows are padded to
+    a common S — the modulus stays the level's own geometry and the padded
+    tail is never touched. Returns ``(tags [L,S], vals [L,S], e_idx [L,U],
+    e_val [L,U], n_filtered [L])``.
+    """
+    L, S = tags.shape
+    U = idx.shape[1]
+    if sizes is None:
+        size_l = jnp.full((L, 1), S, jnp.int32)
+    else:
+        size_l = jnp.asarray(sizes, jnp.int32).reshape(L, 1)
+    valid = idx != -1
+    base = (jnp.arange(L, dtype=jnp.int32) * S)[:, None]
+    slot = jnp.where(valid, idx % size_l, 0) + base
+    new_tags, new_vals, e_idx, e_val, filtered = _conflict_core(
+        tags.reshape(-1), vals.reshape(-1), idx.reshape(-1),
+        val.reshape(-1), slot.reshape(-1), valid.reshape(-1),
+        op=op, policy=policy, selective=selective)
+    return (new_tags.reshape(L, S), new_vals.reshape(L, S),
+            e_idx.reshape(L, U), e_val.reshape(L, U),
+            jnp.sum(filtered.reshape(L, U), axis=1, dtype=jnp.int32))
 
 
 def merge(

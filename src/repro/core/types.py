@@ -178,8 +178,27 @@ class TascadeConfig:
                         Fit/leftover/drop selection is bit-identical either
                         way (``tests/test_coverage_router.py``); False
                         retains the full-table router for A/B checks.
-      use_pallas     -- route P-cache merges and the router's
-                        segment-coalesce reduction through Pallas kernels.
+      batch_cache_passes -- staged drain: each ``drain=True`` iteration
+                        first exchanges EVERY level on its iteration-start
+                        queue, then resolves all merging levels' received
+                        streams with ONE batched cache pass
+                        (``pcache.cache_pass_batched`` / the batched Pallas
+                        kernel — level caches stacked along a leading
+                        axis), then forwards emissions to the next level's
+                        queue for the NEXT iteration. Per-launch overhead
+                        stops scaling with tree depth; root results are
+                        identical (the reduction is order-free) but the
+                        round schedule changes — an update traverses one
+                        level per iteration instead of the whole tree, so
+                        per-round coalescing groups (and with them the
+                        ``sent`` traffic counters) can differ from the
+                        default interleaved drain. False (default) keeps
+                        the interleaved drain whose per-level
+                        ``cache_pass`` loop is the batched pass's oracle
+                        (``tests/test_batched_cache.py``).
+      use_pallas     -- route P-cache merges, the router's
+                        segment-coalesce reduction and the fused route-pack
+                        epilogue through Pallas kernels.
       pallas_interpret -- Pallas execution override: None auto-selects by
                         backend (compiled on TPU, interpreted elsewhere);
                         True/False force interpret/compiled mode.
@@ -197,6 +216,7 @@ class TascadeConfig:
     n_lanes: int = 1  # batched query lanes sharing the tree (>= 1)
     lane_capacity_share: float = 1.0  # coverage fraction the plan sizes for
     compact_tables: bool = True  # owner-digit coverage compaction (§2.1)
+    batch_cache_passes: bool = False  # staged drain, one cache launch/iter
     use_pallas: bool = False  # route P-cache merges through the Pallas kernel
     pallas_interpret: bool | None = None  # None = auto-select by backend
 

@@ -32,6 +32,7 @@ from repro.core import (
 )
 from repro.core.types import NO_IDX, UpdateStream
 from repro.graph.partition import ShardedGraph
+from repro.kernels.segment_reduce.ops import bucket_gather
 
 
 class RunMetrics(NamedTuple):
@@ -168,13 +169,17 @@ def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
             # (vertex, lane) rows: prefix-sum the frontier rows' REMAINING
             # degrees (the cursor ``skip`` marks edges already relaxed on
             # carried rows), then map each worklist slot back to its
-            # (vertex, lane, edge) triple — O(wtot log(shard*L)), not O(E*L).
+            # (vertex, lane, edge) triple with the vectorized bucket-gather
+            # (scatter row heads + running max — O(wtot + shard*L), no
+            # per-slot binary search; bit-equal to
+            # ``searchsorted(cum, slot, "right")`` on every slot < total,
+            # and slots past the total are masked by ``ok``).
             adeg = jnp.where(frontier, deg_v[:, None] - skip, 0)
             flat = adeg.reshape(-1)              # row r = vertex * L + lane
             cum = jnp.cumsum(flat)               # inclusive; cum[-1] = total
             total = cum[-1]
             start = cum - flat                   # worklist offset per row
-            r = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32)
+            r = bucket_gather(cum, wtot)
             rc = jnp.clip(r, 0, n_shard * lanes - 1)
             uc = rc // lanes
             ln = rc % lanes

@@ -17,7 +17,10 @@ import functools
 
 import jax
 
-from repro.kernels.pcache.pcache import pcache_merge_pallas
+from repro.kernels.pcache.pcache import (
+    pcache_merge_batched_pallas,
+    pcache_merge_pallas,
+)
 from repro.kernels.pcache.ref import pcache_merge_ref
 
 
@@ -32,3 +35,27 @@ def pcache_merge(idx, val, tags, vals, *, op: str, policy: str,
         return pcache_merge_pallas(idx, val, tags, vals, op=op, policy=policy,
                                    block=block, interpret=interpret)
     return pcache_merge_ref(idx, val, tags, vals, op=op, policy=policy)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("op", "policy", "sizes", "impl", "block",
+                                    "interpret"))
+def pcache_merge_batched(idx, val, tags, vals, *, op: str, policy: str,
+                         sizes: tuple | None = None, impl: str = "pallas",
+                         block: int = 1024, interpret: bool | None = None):
+    """Batched merge of L stacked streams [L, U] into L stacked caches
+    [L, S] in one launch; ``impl="jnp"`` runs the vectorized
+    ``pcache.cache_pass_batched`` (bit-equal to the per-level loop),
+    ``impl="pallas"`` the grid-batched TPU kernel. ``sizes`` gives each
+    row's true line count when rows are padded to a common S."""
+    if impl == "pallas":
+        return pcache_merge_batched_pallas(
+            idx, val, tags, vals, op=op, policy=policy, sizes=sizes,
+            block=block, interpret=interpret)
+    assert impl == "jnp", impl
+    from repro.core.pcache import cache_pass_batched
+    from repro.core.types import ReduceOp, WritePolicy
+
+    return cache_pass_batched(
+        tags, vals, idx, val, op=ReduceOp(op), policy=WritePolicy(policy),
+        selective=False, sizes=sizes)[:4]

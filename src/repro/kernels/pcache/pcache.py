@@ -66,6 +66,86 @@ def _kernel(idx_ref, val_ref, tags_in_ref, vals_in_ref,
     eval_ref[...] = e_val
 
 
+def _kernel_batched(idx_ref, val_ref, size_ref, tags_in_ref, vals_in_ref,
+                    tags_ref, vals_ref, eidx_ref, eval_ref,
+                    *, op: str, policy: str):
+    del tags_in_ref, vals_in_ref  # aliased into tags_ref / vals_ref
+    from repro.core.pcache import cache_pass_batched
+    from repro.core.types import ReduceOp, WritePolicy
+
+    new_tags, new_vals, e_idx, e_val, _ = cache_pass_batched(
+        tags_ref[...], vals_ref[...], idx_ref[...], val_ref[...],
+        op=ReduceOp(op), policy=WritePolicy(policy), selective=False,
+        sizes=size_ref[...],
+    )
+    tags_ref[...] = new_tags
+    vals_ref[...] = new_vals
+    eidx_ref[...] = e_idx
+    eval_ref[...] = e_val
+
+
+def pcache_merge_batched_pallas(
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    tags: jnp.ndarray,
+    vals: jnp.ndarray,
+    *,
+    op: str,
+    policy: str,
+    sizes=None,
+    block: int = 1024,
+    interpret: bool | None = None,
+):
+    """Batched form: one launch merges L stacked streams [L, U] into L
+    stacked caches [L, S] (grid = levels x stream blocks; each level's
+    cache stays VMEM-resident across its blocks). Row semantics are
+    exactly ``pcache_merge_pallas`` per level; ``sizes`` (static per-level
+    line counts, default S) keeps each row's direct-mapped modulus at its
+    own geometry when rows are padded to a common S. Selective capture is
+    an engine-side concern and not offered here (as in the single-level
+    kernel)."""
+    assert op in ("min", "max", "add") and policy in ("write_through", "write_back")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    L, u = idx.shape
+    s = tags.shape[1]
+    size_arr = jnp.asarray(sizes if sizes is not None else (s,) * L,
+                           jnp.int32)
+    if u % block:
+        pad = block - u % block
+        idx = jnp.concatenate(
+            [idx, jnp.full((L, pad), NO_IDX, idx.dtype)], axis=1)
+        val = jnp.concatenate([val, jnp.zeros((L, pad), val.dtype)], axis=1)
+    up = idx.shape[1]
+
+    kern = functools.partial(_kernel_batched, op=op, policy=policy)
+    out_shapes = (
+        jax.ShapeDtypeStruct((L, s), tags.dtype),
+        jax.ShapeDtypeStruct((L, s), vals.dtype),
+        jax.ShapeDtypeStruct((L, up), idx.dtype),
+        jax.ShapeDtypeStruct((L, up), val.dtype),
+    )
+    cache_spec = pl.BlockSpec((1, s), lambda l, i: (l, 0))
+    stream_spec = pl.BlockSpec((1, block), lambda l, i: (l, i))
+    new_tags, new_vals, eidx, eval_ = pl.pallas_call(
+        kern,
+        out_shape=out_shapes,
+        grid=(L, up // block),
+        in_specs=[
+            stream_spec,                                  # stream idx tile
+            stream_spec,                                  # stream val tile
+            pl.BlockSpec((1,), lambda l, i: (l,)),        # level line count
+            cache_spec,                                   # cache tags
+            cache_spec,                                   # cache vals
+        ],
+        out_specs=(cache_spec, cache_spec, stream_spec, stream_spec),
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+        name="pcache_merge_batched",
+    )(idx, val, size_arr, tags, vals)
+    return new_tags, new_vals, eidx[:, :u], eval_[:, :u]
+
+
 def pcache_merge_pallas(
     idx: jnp.ndarray,
     val: jnp.ndarray,

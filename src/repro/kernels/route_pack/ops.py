@@ -1,0 +1,79 @@
+"""Dispatcher for the fused route-pack epilogue.
+
+The counting-rank router ends every level-round by materializing two
+regions from the update stream: the packed wire block (each fitting
+message at ``wdest = peer * bucket_cap + rank``) and the front-compacted
+leftover stream (each overflowing message at its prefix-sum slot
+``ldest``). ``impl="jnp"`` is the unfused reference epilogue — one XLA
+``.at[dest].set`` scatter per lane, exactly the scatters the fused kernel
+replaces, kept as the bit-exact oracle. ``impl="pallas"`` runs the
+block-tiled TPU kernel: ONE pass over the stream fills every lane of both
+regions (wire + leftover resident in VMEM; see ``route_pack.py``).
+``impl="ref"`` is the sequential numpy oracle (tests only; runs outside
+the trace). ``"auto"`` picks pallas on TPU and jnp elsewhere.
+
+Contract: a destination equal to the region's slot count parks (discards)
+that side of the entry; live destinations must be unique — the router
+guarantees both. Empty wire slots read the per-lane ``wire_inits`` fill
+(the wire format's invalid word/key, zero value bits); empty leftover
+slots read ``(NO_IDX, 0)``. ``wire_kinds`` names each lane's placement
+class for the kernel ("min" routing keys, "max" index lanes, "bits" value
+payloads); the jnp scatters ignore it. All impls are bit-exact — one
+writer per live slot, no reduction-order freedom.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.route_pack.ref import route_pack_ref
+from repro.kernels.route_pack.route_pack import route_pack_pallas
+
+
+def _scatter_set(dest, lane, n, init):
+    """Unfused reference placement: one scatter, park bin sliced off."""
+    return jnp.full((n + 1,), init, lane.dtype).at[dest].set(lane)[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("wire_inits", "wire_kinds", "num_wire",
+                                    "num_left", "impl", "block", "interpret"))
+def _traced(wdest, ldest, wire_lanes, lidx, lval, *, wire_inits, wire_kinds,
+            num_wire: int, num_left: int, impl: str, block: int,
+            interpret: bool | None):
+    if impl == "pallas":
+        return route_pack_pallas(wdest, ldest, wire_lanes, wire_inits,
+                                 wire_kinds, lidx, lval, num_wire, num_left,
+                                 block=block, interpret=interpret)
+    assert impl == "jnp", impl
+    wire = tuple(_scatter_set(wdest, lane, num_wire, init)
+                 for lane, init in zip(wire_lanes, wire_inits))
+    left_idx = _scatter_set(ldest, lidx, num_left, -1)
+    left_val = _scatter_set(ldest, lval, num_left, 0)
+    return wire, left_idx, left_val
+
+
+def route_pack(wdest, ldest, wire_lanes, lidx, lval, *, wire_inits,
+               wire_kinds, num_wire: int, num_left: int, impl: str = "jnp",
+               block: int = 2048, interpret: bool | None = None):
+    """Place every stream entry into the wire block and/or leftover stream
+    (see module docstring). Returns ``(wire_lane_arrays, left_idx,
+    left_val)``.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "ref":
+        wire, li, lv = route_pack_ref(
+            np.asarray(wdest), np.asarray(ldest),
+            tuple(np.asarray(l) for l in wire_lanes),
+            wire_inits, np.asarray(lidx), np.asarray(lval),
+            num_wire, num_left)
+        return (tuple(jnp.asarray(w) for w in wire), jnp.asarray(li),
+                jnp.asarray(lv))
+    return _traced(wdest, ldest, tuple(wire_lanes), lidx, lval,
+                   wire_inits=tuple(wire_inits), wire_kinds=tuple(wire_kinds),
+                   num_wire=num_wire, num_left=num_left, impl=impl,
+                   block=block, interpret=interpret)

@@ -1,0 +1,42 @@
+"""Numpy oracle for the fused route-pack epilogue.
+
+One message per stream entry: entry i lands its wire-lane payloads at wire
+slot ``wdest[i]`` and its leftover payloads at leftover slot ``ldest[i]``.
+A destination equal to the slot count parks (discards) that side of the
+entry — the counting-rank router parks non-fitting entries on the wire
+side and non-leftover entries on the leftover side, so every entry writes
+at most one of the two regions. Live destinations are unique by
+construction (per-peer ranks / the leftover prefix-sum are bijections), so
+sequential placement order is irrelevant.
+
+Empty wire slots read the per-lane init (the wire format's invalid word /
+key, zero bits); empty leftover slots read ``(NO_IDX, 0)``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def route_pack_ref(wdest, ldest, wire_lanes, wire_inits, lidx, lval,
+                   num_wire: int, num_left: int):
+    """Sequential per-entry oracle. Returns (wire lane arrays, left_idx,
+    left_val) — exactly the fused op's contract."""
+    wdest = np.asarray(wdest)
+    ldest = np.asarray(ldest)
+    outs = []
+    for lane, init in zip(wire_lanes, wire_inits):
+        lane = np.asarray(lane)
+        out = np.full((num_wire,), init, lane.dtype)
+        for i in range(lane.shape[0]):
+            if 0 <= wdest[i] < num_wire:
+                out[wdest[i]] = lane[i]
+        outs.append(out)
+    lidx = np.asarray(lidx)
+    lval = np.asarray(lval)
+    left_idx = np.full((num_left,), -1, np.int32)
+    left_val = np.zeros((num_left,), lval.dtype)
+    for i in range(lidx.shape[0]):
+        if 0 <= ldest[i] < num_left:
+            left_idx[ldest[i]] = lidx[i]
+            left_val[ldest[i]] = lval[i]
+    return tuple(outs), left_idx, left_val

@@ -1,0 +1,172 @@
+"""Pallas TPU kernel for the fused route-pack epilogue (paper SIII-C: the
+cascaded-update send path — coalesced segments leave the router straight
+into the wire block).
+
+Once the counting-rank router has assigned every message its wire slot
+(``peer * bucket_cap + rank``) and every overflowing message its leftover
+slot (the per-peer histogram's exclusive prefix), materializing the packed
+wire block and the front-compacted leftover stream is 3-4 independent XLA
+scatters per level-round. This kernel fuses them into ONE pass over the
+update stream: the wire lanes and the leftover lanes live VMEM-resident for
+the whole call (input/output aliasing — the analogue of the paper's
+per-router egress SRAM), the stream is tiled through VMEM in fixed blocks
+along a 1-D grid, and each block folds its entries into every resident
+region with one vectorized segment reduction per lane.
+
+Scatter-as-reduction: live destinations are *unique* (ranks are a bijection
+within each peer's bucket; the leftover prefix-sum is a bijection onto the
+compacted region), so placement can use any associative combine whose
+identity is the empty-slot fill:
+
+  * ``min``  — routing-key lanes: every valid key/word is strictly below
+    the wire format's invalid key, so a min against the invalid-key fill
+    is exact placement,
+  * ``max``  — index lanes: valid indices are >= 0 and the empty fill is
+    the ``NO_IDX`` sentinel (-1),
+  * ``bits`` — value-payload lanes: the lane is reinterpreted as its
+    unsigned bit pattern and scatter-maxed against an all-zeros fill (one
+    writer per slot, so the max IS the written pattern — bit-exact for any
+    float including -0.0, and empty slots read bit pattern 0, the zero
+    fill of the unfused scatters).
+
+Entries whose destination equals the slot count park in a discard bin, so
+callers never pre-mask lanes. VMEM budget: wire P*K + leftover cap
+residents plus one stream block per operand — tens of KiB at bench scale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+_SEG = {
+    "min": jax.ops.segment_min,
+    "max": jax.ops.segment_max,
+}
+
+_COMB = {
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+}
+
+_UINT_OF_WIDTH = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+def as_bits(x):
+    """Reinterpret a lane as its unsigned bit pattern (width-preserving)."""
+    u = _UINT_OF_WIDTH[jnp.dtype(x.dtype).itemsize]
+    if jnp.issubdtype(x.dtype, jnp.unsignedinteger):
+        return x
+    return jax.lax.bitcast_convert_type(x, u)
+
+
+def from_bits(b, dtype):
+    """Inverse of ``as_bits``."""
+    if jnp.dtype(dtype) == b.dtype:
+        return b
+    return jax.lax.bitcast_convert_type(b, dtype)
+
+
+def _kernel(*refs, n_lanes: int, num_wire: int, num_left: int,
+            kinds: tuple[str, ...]):
+    # refs: wdest, ldest, lanes[n_lanes], lidx, lval, inits[n_lanes + 2]
+    #       (aliased) | outs[n_lanes + 2]
+    wdest_ref, ldest_ref = refs[0], refs[1]
+    lane_refs = refs[2:2 + n_lanes]
+    lidx_ref, lval_ref = refs[2 + n_lanes], refs[3 + n_lanes]
+    out_refs = refs[4 + n_lanes + (n_lanes + 2):]
+    wd = wdest_ref[...]
+    ld = ldest_ref[...]
+    # Wire lanes fold on wdest; the two leftover lanes fold on ldest. Park
+    # bins (id == num slots) are sliced off each block reduction, and the
+    # reduction's empty-segment fill is each kind's combine identity w.r.t.
+    # the resident init, so revisiting the residents across sequential grid
+    # steps is a legal reduction pattern.
+    for j, (kind, ref) in enumerate(zip(
+            kinds, (*lane_refs, lidx_ref, lval_ref))):
+        dest, slots = (wd, num_wire) if j < n_lanes else (ld, num_left)
+        red = _SEG[kind](ref[...], dest, num_segments=slots + 1)
+        out_refs[j][...] = _COMB[kind](out_refs[j][...], red[:slots])
+
+
+def route_pack_pallas(
+    wdest: jnp.ndarray,
+    ldest: jnp.ndarray,
+    wire_lanes: tuple[jnp.ndarray, ...],
+    wire_inits: tuple[int, ...],
+    wire_kinds: tuple[str, ...],
+    lidx: jnp.ndarray,
+    lval: jnp.ndarray,
+    num_wire: int,
+    num_left: int,
+    *,
+    block: int = 2048,
+    interpret: bool | None = None,
+):
+    """Fused scatter epilogue; see ``ops.route_pack`` for the contract.
+
+    ``interpret=None`` auto-selects by backend: compiled on TPU, interpreter
+    everywhere else (CPU/GPU hosts running the TPU kernel for tests).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_lanes = len(wire_lanes)
+    # "bits" lanes scatter as unsigned patterns (init must be the 0 pattern).
+    lanes, kinds, dtypes = [], [], []
+    for lane, init, kind in zip(wire_lanes, wire_inits, wire_kinds):
+        dtypes.append(lane.dtype)
+        if kind == "bits":
+            assert init == 0, "bits lanes fill with the zero pattern"
+            lanes.append(as_bits(lane))
+            kinds.append("max")
+        else:
+            lanes.append(lane)
+            kinds.append(kind)
+    lval_dtype = lval.dtype
+    lval_b = as_bits(lval)
+    kinds = tuple(kinds) + ("max", "max")  # + leftover idx, leftover bits
+
+    u = wdest.shape[0]
+    if u % block:
+        pad = block - u % block
+        wdest = jnp.concatenate(
+            [wdest, jnp.full((pad,), num_wire, wdest.dtype)])
+        ldest = jnp.concatenate(
+            [ldest, jnp.full((pad,), num_left, ldest.dtype)])
+        lanes = [jnp.concatenate([l, jnp.zeros((pad,), l.dtype)])
+                 for l in lanes]
+        lidx = jnp.concatenate([lidx, jnp.zeros((pad,), lidx.dtype)])
+        lval_b = jnp.concatenate([lval_b, jnp.zeros((pad,), lval_b.dtype)])
+    up = wdest.shape[0]
+
+    inits = [jnp.full((num_wire,), init, lane.dtype)
+             for lane, init in zip(lanes, wire_inits)]
+    inits.append(jnp.full((num_left,), -1, lidx.dtype))
+    inits.append(jnp.zeros((num_left,), lval_b.dtype))
+
+    stream_spec = pl.BlockSpec((block,), lambda i: (i,))
+    wire_spec = pl.BlockSpec((num_wire,), lambda i: (0,))
+    left_spec = pl.BlockSpec((num_left,), lambda i: (0,))
+    res_specs = [wire_spec] * n_lanes + [left_spec, left_spec]
+
+    kern = functools.partial(_kernel, n_lanes=n_lanes, num_wire=num_wire,
+                             num_left=num_left, kinds=kinds)
+    outs = pl.pallas_call(
+        kern,
+        out_shape=tuple(jax.ShapeDtypeStruct(i.shape, i.dtype)
+                        for i in inits),
+        grid=(up // block,),
+        in_specs=[stream_spec] * (4 + n_lanes) + res_specs,
+        out_specs=tuple(res_specs),
+        input_output_aliases={4 + n_lanes + j: j
+                              for j in range(n_lanes + 2)},
+        interpret=interpret,
+        name="route_pack",
+    )(wdest, ldest, *lanes, lidx, lval_b, *inits)
+
+    wire_out = tuple(
+        from_bits(o, dt) if k == "bits" else o
+        for o, dt, k in zip(outs[:n_lanes], dtypes, wire_kinds))
+    return wire_out, outs[n_lanes], from_bits(outs[n_lanes + 1], lval_dtype)

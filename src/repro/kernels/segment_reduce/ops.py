@@ -1,9 +1,10 @@
-"""Jitted dispatcher for segment reduction."""
+"""Jitted dispatchers for segment reduction and the bucket-gather map."""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.segment_reduce.ref import segment_reduce_ref
 from repro.kernels.segment_reduce.segment_reduce import segment_reduce_pallas
@@ -19,3 +20,31 @@ def segment_reduce(data, seg, num_segments: int, *, op: str = "add",
         return segment_reduce_pallas(data, seg, num_segments, op=op,
                                      block=block, interpret=interp)
     return segment_reduce_ref(data, seg, num_segments, op=op)
+
+
+def bucket_gather(cum, num_slots: int):
+    """Slot -> owning-row map over contiguous row buckets: given the
+    inclusive prefix sum ``cum`` [R] of per-row counts, returns int32
+    [num_slots] with entry s = the row whose bucket ``[cum[r]-count[r],
+    cum[r])`` contains stream slot s.
+
+    This is the segment-machinery inverse of a per-slot binary search: one
+    scatter marks each non-empty row's head at its start offset (the same
+    head-table pattern as the counting-rank router's scatter-min) and one
+    running max over slots broadcasts the row id across its bucket —
+    O(R + num_slots) streaming work with no log factor, and one vectorized
+    pass instead of ``searchsorted`` per slot. For s < cum[-1] the result
+    is bit-equal to ``searchsorted(cum, s, side="right")`` (non-empty rows
+    have strictly increasing cum, so the latest head at or before s IS the
+    owning row); slots past the total saturate at the last non-empty row
+    and must be masked by the caller (``apps._label_correcting`` masks on
+    ``slot < total``).
+    """
+    r = cum.shape[0]
+    flat = jnp.diff(cum, prepend=0)
+    start = cum - flat
+    nonempty = flat > 0
+    rpos = jnp.where(nonempty & (start < num_slots), start, num_slots)
+    heads = jnp.zeros((num_slots + 1,), jnp.int32).at[rpos].max(
+        jnp.where(nonempty, jnp.arange(r, dtype=jnp.int32), 0))
+    return jax.lax.associative_scan(jnp.maximum, heads[:num_slots])

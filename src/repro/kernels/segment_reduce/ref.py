@@ -1,8 +1,25 @@
-"""Pure-jnp oracle for segment reduction."""
+"""Pure-jnp oracle for segment reduction, plus the numpy oracle for the
+bucket-gather (slot -> owning-row) map built on the same machinery."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def bucket_gather_ref(cum, num_slots: int):
+    """Sequential oracle for ``ops.bucket_gather``: slot s is owned by the
+    largest non-empty row whose start offset is <= s (0 when no row has
+    started yet). For s < cum[-1] this equals
+    ``searchsorted(cum, s, side="right")``; past the total it saturates at
+    the last non-empty row (callers mask those slots)."""
+    cum = np.asarray(cum)
+    flat = np.diff(cum, prepend=0)
+    out = np.zeros((num_slots,), np.int32)
+    for r in range(cum.shape[0]):
+        if flat[r] > 0 and cum[r] - flat[r] < num_slots:
+            out[cum[r] - flat[r]:] = r
+    return out
 
 
 def segment_reduce_ref(data, seg, num_segments: int, *, op: str = "add"):

@@ -38,64 +38,17 @@ def direct_reduce(n, idx, val, op):
     return out
 
 
-def count_primitive(jaxpr, name: str) -> int:
-    """Recursively count occurrences of a primitive in a (closed) jaxpr."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            n += 1
-        for v in eqn.params.values():
-            if hasattr(v, "eqns"):          # inner Jaxpr
-                n += count_primitive(v, name)
-            elif hasattr(v, "jaxpr"):       # ClosedJaxpr
-                n += count_primitive(v.jaxpr, name)
-            elif isinstance(v, (list, tuple)):
-                for w in v:
-                    if hasattr(w, "eqns"):
-                        n += count_primitive(w, name)
-                    elif hasattr(w, "jaxpr"):
-                        n += count_primitive(w.jaxpr, name)
-    return n
-
-
-def count_sorts(jaxpr) -> int:
-    return count_primitive(jaxpr, "sort")
-
-
-def iter_jaxprs(jaxpr):
-    """Yield a jaxpr and every jaxpr nested in its eqn params."""
-    yield jaxpr
-    for eqn in jaxpr.eqns:
-        for v in eqn.params.values():
-            vs = v if isinstance(v, (list, tuple)) else [v]
-            for w in vs:
-                if hasattr(w, "eqns"):            # inner Jaxpr
-                    yield from iter_jaxprs(w)
-                elif hasattr(w, "jaxpr"):         # ClosedJaxpr
-                    yield from iter_jaxprs(w.jaxpr)
-
-
-def max_array_extent(jaxpr) -> int:
-    """Largest single array dimension appearing anywhere in the program."""
-    m = 0
-    for jp in iter_jaxprs(jaxpr):
-        for eqn in jp.eqns:
-            for var in list(eqn.invars) + list(eqn.outvars):
-                shape = getattr(getattr(var, "aval", None), "shape", ())
-                for d in shape:
-                    if isinstance(d, int):
-                        m = max(m, d)
-    return m
-
-
-def has_extent(jaxpr, extent: int) -> bool:
-    for jp in iter_jaxprs(jaxpr):
-        for eqn in jp.eqns:
-            for var in list(eqn.invars) + list(eqn.outvars):
-                shape = getattr(getattr(var, "aval", None), "shape", ())
-                if extent in shape:
-                    return True
-    return False
+# Jaxpr walkers live in repro.core.introspect (shared with the benchmark's
+# scatter_ops column); re-exported here for the other subprocess helpers.
+from repro.core.introspect import (  # noqa: F401  (re-exports)
+    count_pallas_calls,
+    count_primitive,
+    count_scatters,
+    count_sorts,
+    has_extent,
+    iter_jaxprs,
+    max_array_extent,
+)
 
 
 def check_idx_table_extents(mesh, vpad, u):
@@ -160,6 +113,129 @@ def check_idx_table_extents(mesh, vpad, u):
                 print(f"OK extents {mode.value} L={n_lanes} level {li}: "
                       f"max {got} <= {bound} "
                       f"(table {table}, Vpad*L {vext})")
+
+
+def check_route_pack_fusion(mesh, vpad, u):
+    """Scatter-count acceptance for the fused route-pack epilogue: in the
+    lowered level-round of every level, for modes x wire formats x lanes x
+    compact on/off,
+
+      * with ``pack_impl="pallas"`` there is EXACTLY ONE fused route-pack
+        kernel launch (the wire block + leftover stream epilogue) and the
+        scatter-family primitive count sits at the router's irreducible
+        floor — the head-table scatter-min plus the segment-coalesce
+        reduction when coalescing, ZERO scatters otherwise — so an
+        accidental de-fusion (any epilogue lane falling back to its own
+        XLA scatter) fails CI exactly like a sort regression would,
+      * the unfused ``pack_impl="jnp"`` oracle shows the epilogue's
+        per-lane scatters (3-4 more), pinning that the gate actually
+        measures the fusion.
+    """
+    from repro.core import exchange as ex
+    from repro.core.types import UpdateStream as US
+
+    geom = MeshGeom.from_mesh(mesh, vpad)
+    for n_lanes in (1, 2):
+        for compact in (True, False):
+            for mode in (CascadeMode.OWNER_DIRECT, CascadeMode.PROXY_MERGE,
+                         CascadeMode.FULL_CASCADE, CascadeMode.TASCADE):
+                cfg = TascadeConfig(region_axes=("model",),
+                                    cascade_axes=("data",), capacity_ratio=4,
+                                    mode=mode, n_lanes=n_lanes,
+                                    compact_tables=compact)
+                engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=u)
+                vext = engine.geom.padded_elements
+                coalesce = mode is not CascadeMode.OWNER_DIRECT
+                for li, spec in enumerate(engine.levels):
+                    for wire in ("packed", "unpacked"):
+                        fmt = spec.fmt if wire == "packed" else None
+
+                        def level_fn(pidx, pval, _spec=spec, _fmt=fmt,
+                                     _coal=coalesce, _impl="pallas"):
+                            rr = ex.route_and_pack(
+                                US(pidx, pval, jnp.int32(0)), None,
+                                lambda i: engine._peer_of(i, _spec.axes),
+                                _spec.num_peers, _spec.bucket_cap,
+                                op=ReduceOp.MIN, coalesce=_coal, fmt=_fmt,
+                                num_elements=vext,
+                                coalesce_impl="jnp", pack_impl=_impl,
+                                pallas_interpret=True,
+                                peer_block=engine.geom.shard_size,
+                                plan=_spec.plan)
+                            return rr.wire, rr.leftover.idx, rr.n_sent
+
+                        args = (jnp.zeros((spec.pending_cap,), jnp.int32),
+                                jnp.zeros((spec.pending_cap,), jnp.float32))
+                        fused = jax.make_jaxpr(level_fn)(*args).jaxpr
+                        n_pack = count_pallas_calls(fused, "route_pack")
+                        n_scat = count_scatters(fused)
+                        floor = 2 if coalesce else 0
+                        tag = (f"{mode.value} L={n_lanes} "
+                               f"compact={int(compact)} level {li} {wire}")
+                        assert n_pack == 1, (
+                            f"{tag}: {n_pack} fused route-pack calls "
+                            "(must be exactly 1 per level-round)")
+                        assert n_scat == floor, (
+                            f"{tag}: {n_scat} scatter ops with the fused "
+                            f"epilogue (floor is {floor}: head table + "
+                            "segment-coalesce only) — de-fusion?")
+                        unfused = jax.make_jaxpr(
+                            lambda a, b: level_fn(a, b, _impl="jnp"))(
+                                *args).jaxpr
+                        n_unf = count_scatters(unfused)
+                        assert n_unf >= floor + 3, (
+                            f"{tag}: unfused oracle shows {n_unf} scatters "
+                            f"(expected >= {floor + 3}) — the gate would "
+                            "not catch a de-fusion")
+                        print(f"OK route-pack {tag}: 1 kernel, "
+                              f"{n_scat} scatters (unfused {n_unf})")
+
+
+def check_batched_drain(mesh, ndev):
+    """Staged batched-cache drain (TascadeConfig.batch_cache_passes): for
+    every mode x {WT-min, WB-add} x {jnp, Pallas} cache backends, the root
+    reduction equals the direct one, with zero overflow/residual — the
+    schedule changes (one level per iteration), the delivered values must
+    not. The use_pallas leg exercises the engine-side batched-kernel glue
+    (stacking, sizes tuple, per-level emission re-slicing, the
+    n_in - n_out filtered fallback); TASCADE + use_pallas stays rejected
+    by the engine's selective-capture guard."""
+    vpad, u = 256, 64
+    rng = np.random.default_rng(11)
+    for mode in CascadeMode:
+        for op, policy in ((ReduceOp.MIN, WritePolicy.WRITE_THROUGH),
+                           (ReduceOp.ADD, WritePolicy.WRITE_BACK)):
+            for pallas in (False, True):
+                if pallas and mode is CascadeMode.TASCADE:
+                    continue  # use_pallas rejects selective capture
+                raw = rng.zipf(1.5, size=(ndev, u)).astype(np.int64)
+                idx = np.minimum(raw - 1, vpad - 1).astype(np.int32)
+                idx = np.where(rng.random((ndev, u)) < 0.9, idx, -1)
+                val = np.where(idx == -1, 0,
+                               rng.standard_normal((ndev, u)) * 5
+                               ).astype(np.float32)
+                cfg = TascadeConfig(region_axes=("model",),
+                                    cascade_axes=("data",),
+                                    capacity_ratio=4, policy=policy,
+                                    mode=mode, exchange_slack=2.0,
+                                    batch_cache_passes=True,
+                                    use_pallas=pallas,
+                                    pallas_interpret=True if pallas
+                                    else None)
+                dest = jnp.full((vpad,), op.identity, jnp.float32)
+                out, stats = tascade_scatter_reduce(
+                    dest, jnp.asarray(idx), jnp.asarray(val), op=op,
+                    cfg=cfg, mesh=mesh, return_stats=True)
+                want = direct_reduce(vpad, idx, val, op)
+                assert int(stats["overflow"]) == 0, (mode, op, pallas)
+                assert int(stats["residual"]) == 0, (mode, op, pallas)
+                np.testing.assert_allclose(
+                    np.asarray(out, np.float64), want, rtol=1e-4,
+                    atol=1e-4, err_msg=f"batched {mode} {op} "
+                    f"pallas={pallas}")
+                print(f"OK batched-drain {mode.value:12s} {op.value:3s} "
+                      f"pallas={int(pallas)} "
+                      f"sent={int(stats['sent_total'])}")
 
 
 def check_sort_free_level_round(mesh, vpad, u):
@@ -241,7 +317,9 @@ def main():
 
     check_sort_free_level_round(mesh, vpad, u)
     check_idx_table_extents(mesh, vpad=2048, u=16)
+    check_route_pack_fusion(mesh, vpad=2048, u=16)
     check_overflow_accounting(mesh, ndev)
+    check_batched_drain(mesh, ndev)
 
     # Full {ADD,MIN,MAX} x {WT,WB} x mode product: the fused pipeline must be
     # root-equivalent to a direct reduction for every configuration.

@@ -1,0 +1,392 @@
+"""Unified kernel-parity harness: ONE registry drives every kernel's
+backend-vs-oracle sweep.
+
+Each kernel registers a ``KernelSpec``: how to generate a seeded random
+case (``make``), how to run one backend (``run``), the reference oracle
+(``ref``), and the equivalence contract (``compare`` — bit-exact for the
+routing kernels, tolerance/root-equivalence where the kernel's contract is
+reduction-level). ``tests/test_kernels.py`` is a thin pytest cross-product
+over ``all_cases()``: (kernel x impl x case x seed). Adding a kernel =
+adding one registry entry; the sweep, ids and skip logic come for free.
+
+Registered: pcache_merge (root-equivalent), segment_reduce, embedding_bag
+(allclose), segment_coalesce, route_pack, bucket_gather (bit-exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+import jax.numpy as jnp
+
+_IDENT = {"min": np.inf, "max": -np.inf, "add": 0.0}
+_REDUCE = {"min": min, "max": max, "add": lambda a, b: a + b}
+
+
+# ------------------------------------------------------------ comparators
+
+def assert_bit_equal(got, want, msg, case=None, inputs=None):
+    assert len(got) == len(want), msg
+    for i, (g, w) in enumerate(zip(got, want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"{msg}[out {i}]")
+
+
+def assert_allclose(got, want, msg, case=None, inputs=None,
+                    rtol=1e-5, atol=1e-5):
+    assert len(got) == len(want), msg
+    for i, (g, w) in enumerate(zip(got, want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=rtol,
+                                   atol=atol, err_msg=f"{msg}[out {i}]")
+
+
+def root_reduce(n, idx, val, op):
+    out = np.full((n,), _IDENT[op], np.float64)
+    for i, v in zip(np.asarray(idx), np.asarray(val, np.float64)):
+        if i != -1:
+            out[i] = _REDUCE[op](out[i], v)
+    return out
+
+
+def root_of_merge(n, tags, vals, eidx, eval_, op, policy):
+    """Owner values implied by a merge result: emissions, plus cache content
+    for write-back (write-through caches mirror already-emitted values)."""
+    idx = [np.asarray(eidx)]
+    val = [np.asarray(eval_, np.float64)]
+    if policy == "write_back":
+        t = np.asarray(tags)
+        idx.append(t[t != -1])
+        val.append(np.asarray(vals, np.float64)[t != -1])
+    return root_reduce(n, np.concatenate(idx), np.concatenate(val), op)
+
+
+# ----------------------------------------------------------------- registry
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One kernel's parity contract for the unified sweep."""
+
+    name: str
+    impls: tuple[str, ...]                 # backends checked against `ref`
+    cases: tuple[dict, ...]                # static params per case
+    make: Callable                         # (rng, case) -> inputs dict
+    run: Callable                          # (impl, inputs, case) -> arrays
+    ref: Callable                          # (inputs, case) -> arrays
+    compare: Callable = assert_bit_equal   # (got, want, msg) -> asserts
+    seeds: tuple[int, ...] = (0, 1)
+
+
+# --------------------------------------------------------------- pcache
+
+_PC_CASES = tuple(
+    {"op": op, "policy": policy, "u": u, "s": s, "block": block,
+     "dtype": dtype}
+    for op, policy in (("min", "write_through"), ("max", "write_through"),
+                       ("add", "write_back"))
+    for u, s, block in ((64, 16, 32), (300, 64, 128), (1024, 256, 1024))
+    for dtype in ("float32", "bfloat16")
+)
+
+
+def _pc_make(rng, case):
+    u, s = case["u"], case["s"]
+    n = 4 * s
+    idx = rng.integers(0, n, size=u).astype(np.int32)
+    idx = np.where(rng.random(u) < 0.85, idx, -1)
+    val = (rng.standard_normal(u) * 4).astype(np.float32)
+    return {"idx": idx, "val": val, "n": n}
+
+
+def _pc_run(impl, inputs, case):
+    from repro.kernels.pcache.ops import pcache_merge
+
+    dtype = jnp.dtype(case["dtype"])
+    tags0 = jnp.full((case["s"],), -1, jnp.int32)
+    vals0 = jnp.full((case["s"],), _IDENT[case["op"]], dtype)
+    return pcache_merge(jnp.asarray(inputs["idx"]),
+                        jnp.asarray(inputs["val"], dtype), tags0, vals0,
+                        op=case["op"], policy=case["policy"], impl=impl,
+                        block=case["block"])
+
+
+def _pc_ref(inputs, case):
+    return _pc_run("ref", inputs, case)
+
+
+def _pc_compare(got, want, msg, case, inputs=None):
+    """Root-equivalence: the kernel's contract is the implied owner
+    reduction, not element-identical cache occupancy (block-tiled winner
+    election differs from the sequential oracle's). The raw input stream's
+    direct reduction anchors the comparison in absolute terms — a shared
+    semantic drift of kernel AND oracle cannot pass as mutual agreement.
+    """
+    n, op, policy = 4 * case["s"], case["op"], case["policy"]
+    # bf16 add: accumulation order differs between the vectorized and
+    # sequential forms, so rounding can drift by ~2^-8 per partial sum.
+    rtol, atol = ((5e-2, 2e-1) if case["dtype"] == "bfloat16"
+                  else (1e-5, 1e-5))
+    g = root_of_merge(n, *got, op, policy)
+    w = root_of_merge(n, *want, op, policy)
+    fin = np.isfinite(w)
+    np.testing.assert_array_equal(np.isfinite(g), fin, err_msg=msg)
+    np.testing.assert_allclose(g[fin], w[fin], rtol=rtol, atol=atol,
+                               err_msg=msg)
+    if inputs is not None:
+        idx = inputs["idx"]
+        direct = root_reduce(n, idx, np.where(idx == -1, 0, inputs["val"]),
+                             op)
+        np.testing.assert_allclose(np.where(fin, w, 0),
+                                   np.where(fin, direct, 0), rtol=rtol,
+                                   atol=atol, err_msg=f"{msg} [vs direct]")
+
+
+# ---------------------------------------------------------- segment_reduce
+
+_SR_CASES = tuple(
+    {"op": op, "e": e, "n": n, "d": d, "block": block}
+    for op in ("add", "min", "max")
+    for e, n, d, block in ((128, 16, 8, 64), (1000, 77, 4, 256),
+                           (512, 512, 16, 512))
+)
+
+
+def _sr_make(rng, case):
+    seg = np.sort(rng.integers(0, case["n"], size=case["e"])).astype(np.int32)
+    data = rng.standard_normal((case["e"], case["d"])).astype(np.float32)
+    return {"seg": seg, "data": data}
+
+
+def _sr_run(impl, inputs, case):
+    from repro.kernels.segment_reduce.ops import segment_reduce
+
+    return (segment_reduce(jnp.asarray(inputs["data"]),
+                           jnp.asarray(inputs["seg"]), case["n"],
+                           op=case["op"], impl=impl, block=case["block"]),)
+
+
+def _sr_ref(inputs, case):
+    from repro.kernels.segment_reduce.ref import segment_reduce_ref
+
+    return (segment_reduce_ref(jnp.asarray(inputs["data"]),
+                               jnp.asarray(inputs["seg"]), case["n"],
+                               op=case["op"]),)
+
+
+# ----------------------------------------------------------- embedding_bag
+
+_EB_CASES = tuple(
+    {"v": v, "d": d, "b": b, "l": l}
+    for v, d, b, l in ((64, 8, 4, 3), (1000, 16, 32, 8), (16, 128, 2, 1))
+)
+
+
+def _eb_make(rng, case):
+    v, d, b, l = case["v"], case["d"], case["b"], case["l"]
+    table = rng.standard_normal((v, d)).astype(np.float32)
+    idx = rng.integers(0, v, size=(b, l)).astype(np.int32)
+    idx = np.where(rng.random((b, l)) < 0.8, idx, -1)
+    return {"table": table, "idx": idx}
+
+
+def _eb_run(impl, inputs, case):
+    from repro.kernels.embedding_bag.ops import embedding_bag
+
+    return (embedding_bag(jnp.asarray(inputs["table"]),
+                          jnp.asarray(inputs["idx"]), impl=impl),)
+
+
+def _eb_ref(inputs, case):
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+    return (embedding_bag_ref(jnp.asarray(inputs["table"]),
+                              jnp.asarray(inputs["idx"])),)
+
+
+# -------------------------------------------------------- segment_coalesce
+
+_SC_CASES = tuple(
+    {"op": op, "u": u, "s": s, "block": block}
+    for op in ("min", "max", "add")
+    for u, s, block in ((64, 16, 16), (1000, 300, 256), (4096, 4096, 1024))
+)
+
+
+def _sc_make(rng, case):
+    u, s = case["u"], case["s"]
+    seg = rng.integers(0, s + 1, u).astype(np.int32)  # id == s parks padding
+    val = rng.integers(-9, 9, u).astype(np.float32)   # bit-stable under ADD
+    return {"seg": seg, "val": val}
+
+
+def _sc_run(impl, inputs, case):
+    from repro.kernels.segment_coalesce.ops import segment_coalesce
+
+    return (segment_coalesce(jnp.asarray(inputs["seg"]),
+                             jnp.asarray(inputs["val"]), case["s"],
+                             op=case["op"], impl=impl, block=case["block"]),)
+
+
+def _sc_ref(inputs, case):
+    from repro.kernels.segment_coalesce.ref import segment_coalesce_ref
+
+    return (segment_coalesce_ref(inputs["seg"], inputs["val"], case["s"],
+                                 op=case["op"]),)
+
+
+# ------------------------------------------------------------- route_pack
+
+_RP_CASES = tuple(
+    {"kind": kind, "u": u, "P": P, "K": K, "C": C, "block": block}
+    for kind in ("paired", "unpacked", "word64")
+    for u, P, K, C, block in ((48, 4, 5, 16, 16), (300, 8, 16, 64, 128),
+                              (1024, 4, 64, 300, 1024))
+)
+
+_RP_IDX_BITS = 12
+
+
+def _rp_layout(case):
+    """Static lane layout for a route-pack case."""
+    inv_key = case["P"] << _RP_IDX_BITS
+    if case["kind"] == "word64":
+        return (inv_key << 32,), ("min",), inv_key
+    if case["kind"] == "paired":
+        return (inv_key, 0), ("min", "bits"), inv_key
+    return (-1, 0), ("max", "bits"), inv_key
+
+
+def _rp_make(rng, case):
+    """Random stream honoring the op contract: live wire / leftover
+    destinations are unique, everything else parks."""
+    u, P, K, C = case["u"], case["P"], case["K"], case["C"]
+    num_wire = P * K
+    inv_key = P << _RP_IDX_BITS
+    nfit = int(rng.integers(0, min(num_wire, u) + 1))
+    nleft = int(rng.integers(0, min(C, u - nfit) + 1))
+    order = rng.permutation(u)
+    wdest = np.full((u,), num_wire, np.int32)
+    ldest = np.full((u,), C, np.int32)
+    wdest[order[:nfit]] = rng.permutation(num_wire)[:nfit].astype(np.int32)
+    ldest[order[nfit:nfit + nleft]] = \
+        rng.permutation(C)[:nleft].astype(np.int32)
+    key = rng.integers(0, inv_key, u).astype(np.int32)
+    bits = rng.integers(-2**31, 2**31, u).astype(np.int64).astype(np.int32)
+    val = (rng.standard_normal(u) * 8).astype(np.float32)
+    if case["kind"] == "word64":
+        word = (key.astype(np.uint64) << np.uint64(32)) | \
+            bits.astype(np.uint32).astype(np.uint64)
+        lanes = (word,)
+    elif case["kind"] == "paired":
+        lanes = (key, bits)
+    else:
+        lanes = (key, val)
+    return {"wdest": wdest, "ldest": ldest, "lanes": lanes,
+            "lidx": rng.integers(0, 2**20, u).astype(np.int32),
+            "lval": (rng.standard_normal(u) * 8).astype(np.float32)}
+
+
+def _rp_run(impl, inputs, case):
+    from repro.kernels.route_pack.ops import route_pack
+
+    inits, kinds, _ = _rp_layout(case)
+    wire, li, lv = route_pack(
+        jnp.asarray(inputs["wdest"]), jnp.asarray(inputs["ldest"]),
+        tuple(jnp.asarray(l) for l in inputs["lanes"]),
+        jnp.asarray(inputs["lidx"]), jnp.asarray(inputs["lval"]),
+        wire_inits=inits, wire_kinds=kinds,
+        num_wire=case["P"] * case["K"], num_left=case["C"], impl=impl,
+        block=case["block"], interpret=True)
+    return (*wire, li, lv)
+
+
+def _rp_ref(inputs, case):
+    from repro.kernels.route_pack.ref import route_pack_ref
+
+    inits, _, _ = _rp_layout(case)
+    wire, li, lv = route_pack_ref(
+        inputs["wdest"], inputs["ldest"], inputs["lanes"], inits,
+        inputs["lidx"], inputs["lval"], case["P"] * case["K"], case["C"])
+    return (*wire, li, lv)
+
+
+# ----------------------------------------------------------- bucket_gather
+
+_BG_CASES = tuple(
+    {"rows": r, "num_slots": w, "p_empty": p}
+    for r, w in ((8, 16), (100, 64), (513, 2048))
+    for p in (0.2, 0.8)
+)
+
+
+def _bg_make(rng, case):
+    flat = np.where(rng.random(case["rows"]) < case["p_empty"], 0,
+                    rng.integers(0, 9, case["rows"])).astype(np.int32)
+    return {"cum": np.cumsum(flat).astype(np.int32)}
+
+
+def _bg_run(impl, inputs, case):
+    from repro.kernels.segment_reduce.ops import bucket_gather
+
+    assert impl == "jnp"
+    return (bucket_gather(jnp.asarray(inputs["cum"]), case["num_slots"]),)
+
+
+def _bg_ref(inputs, case):
+    from repro.kernels.segment_reduce.ref import bucket_gather_ref
+
+    return (bucket_gather_ref(inputs["cum"], case["num_slots"]),)
+
+
+# ----------------------------------------------------------------- wiring
+
+REGISTRY: dict[str, KernelSpec] = {
+    spec.name: spec for spec in (
+        KernelSpec(name="pcache_merge", impls=("pallas",), cases=_PC_CASES,
+                   make=_pc_make, run=_pc_run, ref=_pc_ref,
+                   compare=_pc_compare, seeds=(0,)),
+        KernelSpec(name="segment_reduce", impls=("pallas",), cases=_SR_CASES,
+                   make=_sr_make, run=_sr_run, ref=_sr_ref,
+                   compare=assert_allclose, seeds=(0,)),
+        KernelSpec(name="embedding_bag", impls=("pallas",), cases=_EB_CASES,
+                   make=_eb_make, run=_eb_run, ref=_eb_ref,
+                   compare=assert_allclose, seeds=(0,)),
+        KernelSpec(name="segment_coalesce", impls=("jnp", "pallas"),
+                   cases=_SC_CASES, make=_sc_make, run=_sc_run, ref=_sc_ref,
+                   seeds=(0,)),
+        KernelSpec(name="route_pack", impls=("jnp", "pallas"),
+                   cases=_RP_CASES, make=_rp_make, run=_rp_run, ref=_rp_ref,
+                   seeds=(0, 1)),
+        KernelSpec(name="bucket_gather", impls=("jnp",), cases=_BG_CASES,
+                   make=_bg_make, run=_bg_run, ref=_bg_ref, seeds=(0, 1, 2)),
+    )
+}
+
+
+def all_cases():
+    """Yield (kernel, impl, case_index, seed) for the pytest cross-product,
+    with a human-readable id string as the last element."""
+    for spec in REGISTRY.values():
+        for impl in spec.impls:
+            for ci, case in enumerate(spec.cases):
+                for seed in spec.seeds:
+                    label = "-".join(f"{k}{v}" for k, v in case.items())
+                    yield (spec.name, impl, ci, seed,
+                           f"{spec.name}-{impl}-{label}-s{seed}")
+
+
+def check(name: str, impl: str, case_index: int, seed: int):
+    """Run one registry cell: seeded inputs -> impl vs oracle -> compare."""
+    import jax
+    import pytest
+
+    spec = REGISTRY[name]
+    case = spec.cases[case_index]
+    if case.get("kind") == "word64" and not jax.config.jax_enable_x64:
+        pytest.skip("word64 wire lanes require jax x64")
+    rng = np.random.default_rng(1000 * case_index + seed)
+    inputs = spec.make(rng, case)
+    got = spec.run(impl, inputs, case)
+    want = spec.ref(inputs, case)
+    msg = f"{name}/{impl}/case{case_index}/seed{seed}: {case}"
+    spec.compare(got, want, msg, case, inputs)

@@ -1,0 +1,205 @@
+"""Batched cache pass: one launch over stacked level caches must be
+BIT-equal, per level, to the per-level ``cache_pass`` loop it replaces.
+
+Randomized equivalence over op/policy x selective x level-count x
+lane-extended index spaces x per-level cache sizes (padded stacks), with
+chained rounds and an interleaved ``flush`` step — tags, vals, positional
+emissions and per-level filter counts all compare with
+``assert_array_equal`` (no tolerance: the batched pass flattens rows onto
+disjoint slot ranges, so every scatter decision is identical by
+construction, and this suite is the proof).
+
+The engine-level staged drain built on it (``TascadeConfig.
+batch_cache_passes``) is validated end to end in the multi-device
+subprocess (``tests/helpers/engine_check.py::check_batched_drain``: root
+values equal the direct reduction for every mode x policy). The
+grid-batched Pallas kernel mirrors the single-level kernel's contract:
+bit-equal to the jnp batched pass when one block covers the stream,
+root-equivalent under tiling.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import pcache
+from repro.core.types import ReduceOp, WritePolicy, NO_IDX
+
+CASES = [
+    (ReduceOp.MIN, WritePolicy.WRITE_THROUGH),
+    (ReduceOp.MAX, WritePolicy.WRITE_THROUGH),
+    (ReduceOp.ADD, WritePolicy.WRITE_BACK),
+    (ReduceOp.ADD, WritePolicy.WRITE_THROUGH),
+    (ReduceOp.MIN, WritePolicy.WRITE_BACK),
+]
+
+
+def _rand_stack(rng, L, U, n, lanes=1, frac_valid=0.8):
+    """[L, U] stacked streams over a lane-extended index space (idx * lanes
+    + lane — the engine's extended element space)."""
+    base = rng.integers(0, n, size=(L, U)).astype(np.int32)
+    lane = rng.integers(0, lanes, size=(L, U)).astype(np.int32)
+    idx = base * lanes + lane
+    idx = np.where(rng.random((L, U)) < frac_valid, idx, -1)
+    val = (rng.standard_normal((L, U)) * 8).astype(np.float32)
+    val = np.where(idx == -1, 0, val)
+    return idx, val
+
+
+def _loop_reference(tags, vals, idx, val, sizes, *, op, policy, selective):
+    """The per-level launch loop the batched pass replaces."""
+    outs = []
+    for l in range(idx.shape[0]):
+        s_l = sizes[l]
+        outs.append(pcache.cache_pass(
+            jnp.asarray(tags[l, :s_l]), jnp.asarray(vals[l, :s_l]),
+            jnp.asarray(idx[l]), jnp.asarray(val[l]),
+            op=op, policy=policy, selective=selective))
+    return outs
+
+
+@pytest.mark.parametrize("op,policy", CASES)
+@pytest.mark.parametrize("selective", [False, True])
+@pytest.mark.parametrize("L,lanes", [(1, 1), (2, 2), (4, 1), (3, 4)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_batched_matches_per_level_loop(op, policy, selective, L, lanes,
+                                        seed):
+    rng = np.random.default_rng(10_000 * seed + 97 * L + lanes)
+    S, U = 32, 64
+    sizes = tuple(int(rng.integers(4, S + 1)) for _ in range(L))
+    idx, val = _rand_stack(rng, L, U, 3 * S, lanes=lanes)
+    tags = np.full((L, S), -1, np.int32)
+    vals = np.full((L, S), op.identity, np.float32)
+    got = pcache.cache_pass_batched(
+        jnp.asarray(tags), jnp.asarray(vals), jnp.asarray(idx),
+        jnp.asarray(val), op=op, policy=policy, selective=selective,
+        sizes=sizes)
+    want = _loop_reference(tags, vals, idx, val, sizes,
+                           op=op, policy=policy, selective=selective)
+    for l in range(L):
+        s_l = sizes[l]
+        w = want[l]
+        np.testing.assert_array_equal(np.asarray(got[0][l, :s_l]),
+                                      np.asarray(w[0]), err_msg=f"tags l{l}")
+        np.testing.assert_array_equal(np.asarray(got[1][l, :s_l]),
+                                      np.asarray(w[1]), err_msg=f"vals l{l}")
+        np.testing.assert_array_equal(np.asarray(got[2][l]),
+                                      np.asarray(w[2]), err_msg=f"eidx l{l}")
+        np.testing.assert_array_equal(np.asarray(got[3][l]),
+                                      np.asarray(w[3]), err_msg=f"eval l{l}")
+        assert int(got[4][l]) == int(w[4]), f"n_filtered l{l}"
+        # padded tail must stay untouched
+        np.testing.assert_array_equal(np.asarray(got[0][l, s_l:]),
+                                      np.full((S - s_l,), -1))
+
+
+@pytest.mark.parametrize("op,policy", CASES[:3])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batched_chained_rounds_with_flush(op, policy, seed):
+    """Chained merges with an interleaved per-level flush: the batched pass
+    threads state identically to the loop across rounds (op x flush x
+    level-count in one walk)."""
+    rng = np.random.default_rng(31 + seed)
+    L, S, U, rounds = 3, 16, 40, 4
+    sizes = (16, 8, 12)
+    tags_b = np.full((L, S), -1, np.int32)
+    vals_b = np.full((L, S), op.identity, np.float32)
+    tags_l = [np.full((sizes[l],), -1, np.int32) for l in range(L)]
+    vals_l = [np.full((sizes[l],), op.identity, np.float32)
+              for l in range(L)]
+    for r in range(rounds):
+        idx, val = _rand_stack(rng, L, U, 4 * S)
+        got = pcache.cache_pass_batched(
+            jnp.asarray(tags_b), jnp.asarray(vals_b), jnp.asarray(idx),
+            jnp.asarray(val), op=op, policy=policy, sizes=sizes)
+        for l in range(L):
+            w = pcache.cache_pass(
+                jnp.asarray(tags_l[l]), jnp.asarray(vals_l[l]),
+                jnp.asarray(idx[l]), jnp.asarray(val[l]),
+                op=op, policy=policy)
+            tags_l[l] = np.asarray(w[0])
+            vals_l[l] = np.asarray(w[1])
+            s_l = sizes[l]
+            np.testing.assert_array_equal(np.asarray(got[0][l, :s_l]),
+                                          tags_l[l], err_msg=f"r{r} l{l}")
+            np.testing.assert_array_equal(np.asarray(got[1][l, :s_l]),
+                                          vals_l[l], err_msg=f"r{r} l{l}")
+            np.testing.assert_array_equal(np.asarray(got[2][l]),
+                                          np.asarray(w[2]),
+                                          err_msg=f"r{r} l{l} eidx")
+        tags_b = np.array(got[0])  # writable copies: the flush step below
+        vals_b = np.array(got[1])  # mutates rows in place
+        if r == rounds // 2:
+            # mid-walk flush on every level, both representations
+            for l in range(L):
+                st, _ = pcache.flush(
+                    pcache.PCacheState(jnp.asarray(tags_l[l]),
+                                       jnp.asarray(vals_l[l])), op)
+                tags_l[l] = np.asarray(st.tags)
+                vals_l[l] = np.asarray(st.vals)
+                st_b, _ = pcache.flush(
+                    pcache.PCacheState(jnp.asarray(tags_b[l, :sizes[l]]),
+                                       jnp.asarray(vals_b[l, :sizes[l]])),
+                    op)
+                tags_b[l, :sizes[l]] = np.asarray(st_b.tags)
+                vals_b[l, :sizes[l]] = np.asarray(st_b.vals)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("op,policy", CASES[:3])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_batched_pallas_kernel_bitequal_single_block(op, policy, seed):
+    """The grid-batched Pallas kernel with one block per level must be
+    bit-identical to the jnp batched pass (same conflict resolution)."""
+    from repro.kernels.pcache.ops import pcache_merge_batched
+
+    rng = np.random.default_rng(seed)
+    L, S, U = 3, 16, 40
+    sizes = (16, 8, 12)
+    idx, val = _rand_stack(rng, L, U, 4 * S)
+    tags = np.full((L, S), -1, np.int32)
+    vals = np.full((L, S), op.identity, np.float32)
+    args = (jnp.asarray(idx), jnp.asarray(val), jnp.asarray(tags),
+            jnp.asarray(vals))
+    gk = pcache_merge_batched(*args, op=op.value, policy=policy.value,
+                              sizes=sizes, impl="pallas", block=64,
+                              interpret=True)
+    gj = pcache_merge_batched(*args, op=op.value, policy=policy.value,
+                              sizes=sizes, impl="jnp")
+    for a, b, nm in zip(gk, gj, ("tags", "vals", "eidx", "eval")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=nm)
+
+
+@pytest.mark.slow
+def test_batched_pallas_kernel_tiled_root_equivalent():
+    """Tiled blocks may elect different line winners; the implied root
+    reduction must not change (mirrors the single-level kernel contract)."""
+    from helpers import kernel_parity
+    from repro.kernels.pcache.ops import pcache_merge_batched
+
+    rng = np.random.default_rng(5)
+    op, policy = ReduceOp.ADD, WritePolicy.WRITE_BACK
+    L, S, U, n = 2, 16, 64, 64
+    idx, val = _rand_stack(rng, L, U, n)
+    tags = np.full((L, S), -1, np.int32)
+    vals = np.full((L, S), op.identity, np.float32)
+    args = (jnp.asarray(idx), jnp.asarray(val), jnp.asarray(tags),
+            jnp.asarray(vals))
+    roots = []
+    for block in (16, 64):
+        tg, vl, ei, ev = pcache_merge_batched(
+            *args, op=op.value, policy=policy.value, impl="pallas",
+            block=block, interpret=True)
+        per_level = [
+            kernel_parity.root_of_merge(
+                n, np.asarray(tg[l]), np.asarray(vl[l]), np.asarray(ei[l]),
+                np.asarray(ev[l]), op.value, policy.value)
+            for l in range(L)]
+        roots.append(per_level)
+    for l in range(L):
+        np.testing.assert_allclose(roots[0][l], roots[1][l], rtol=1e-5,
+                                   atol=1e-5)
+        direct = kernel_parity.root_reduce(
+            n, idx[l], np.where(idx[l] == -1, 0, val[l]), op.value)
+        np.testing.assert_allclose(roots[0][l], direct, rtol=1e-5, atol=1e-5)

@@ -1,12 +1,18 @@
-"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
-swept over shapes, dtypes, ops, and policies.
+"""Kernel validation.
 
-The block-vectorized P-cache kernel is *root-equivalent* to the sequential
-per-message oracle — {cache content (write-back) + emissions} reduce to the
-same owner values — but not element-identical: it resolves a block's line
-conflicts with scatter-based winner election, so *which* contender holds a
-line differs from one-message-at-a-time processing. Per block it matches
-``repro.core.pcache.cache_pass`` exactly.
+Backend-vs-oracle parity for EVERY kernel comes from one place: the
+unified harness ``tests/helpers/kernel_parity.py``. Its registry holds,
+per kernel, the seeded case generator, the backend runner, the reference
+oracle and the equivalence contract (bit-exact for the routing kernels —
+segment_coalesce, route_pack, bucket_gather — allclose for the float
+reducers, root-equivalence for the P-cache merge whose block-tiled winner
+election is deliberately not element-identical to the sequential oracle).
+``test_kernel_parity`` below is the whole sweep: one parametrized
+cross-product over (kernel x impl x case x seed).
+
+The remaining tests are kernel-SPECIFIC semantics that a generic parity
+cell cannot express: chained-block invariance, padding handling, the
+vectorization perf guard, and the hypothesis property sweep.
 """
 import numpy as np
 import pytest
@@ -16,12 +22,13 @@ pytestmark = pytest.mark.slow  # interpret-mode Pallas parity / property cross-p
 import jax
 import jax.numpy as jnp
 
+from helpers import kernel_parity
+
 from repro.kernels.pcache.ops import pcache_merge
 from repro.kernels.pcache.ref import pcache_merge_ref
 from repro.kernels.segment_reduce.ops import segment_reduce
-from repro.kernels.segment_reduce.ref import segment_reduce_ref
 from repro.kernels.embedding_bag.ops import embedding_bag
-from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.segment_coalesce.ops import segment_coalesce
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -30,66 +37,45 @@ except ImportError:  # pragma: no cover
     HAVE_HYP = False
 
 
-# ----------------------------------------------------------------- pcache
+# ------------------------------------------------- the unified parity sweep
 
-PC_CASES = [("min", "write_through"), ("max", "write_through"), ("add", "write_back")]
-
-_REDUCE = {"min": min, "max": max, "add": lambda a, b: a + b}
+_CASES = list(kernel_parity.all_cases())
 
 
-def _root_reduce(n, idx, val, op):
-    ident = {"min": np.inf, "max": -np.inf, "add": 0.0}[op]
-    out = np.full((n,), ident, np.float64)
-    for i, v in zip(np.asarray(idx), np.asarray(val, np.float64)):
-        if i != -1:
-            out[i] = _REDUCE[op](out[i], v)
-    return out
+@pytest.mark.parametrize("name,impl,ci,seed",
+                         [c[:4] for c in _CASES],
+                         ids=[c[4] for c in _CASES])
+def test_kernel_parity(name, impl, ci, seed):
+    """One registry cell: seeded random inputs -> backend vs oracle."""
+    kernel_parity.check(name, impl, ci, seed)
 
 
-def _root_of_merge(n, tags, vals, eidx, eval_, op, policy):
-    """Owner values implied by a merge result: emissions, plus cache content
-    for write-back (write-through caches mirror already-emitted values)."""
-    idx = [np.asarray(eidx)]
-    val = [np.asarray(eval_, np.float64)]
-    if policy == "write_back":
-        t = np.asarray(tags)
-        idx.append(t[t != -1])
-        val.append(np.asarray(vals, np.float64)[t != -1])
-    return _root_reduce(n, np.concatenate(idx), np.concatenate(val), op)
+def test_parity_registry_covers_all_kernels():
+    """Every kernel package must be registered in the unified harness, so
+    a new kernel cannot ship without oracle parity."""
+    import pathlib
+
+    import repro.kernels as k
+
+    pkg_root = pathlib.Path(k.__file__).parent
+    pkgs = {p.name for p in pkg_root.iterdir() if p.is_dir()
+            and not p.name.startswith("_")}
+    pkg_of = {"pcache_merge": "pcache", "segment_reduce": "segment_reduce",
+              "embedding_bag": "embedding_bag",
+              "segment_coalesce": "segment_coalesce",
+              "route_pack": "route_pack",
+              "bucket_gather": "segment_reduce"}
+    unknown = set(kernel_parity.REGISTRY) - set(pkg_of)
+    assert not unknown, f"registry names without a package mapping: {unknown}"
+    covered = {pkg_of[n] for n in kernel_parity.REGISTRY}
+    missing = pkgs - covered
+    assert not missing, f"kernel packages without parity registry: {missing}"
 
 
-@pytest.mark.parametrize("op,policy", PC_CASES)
-@pytest.mark.parametrize("u,s,block", [(64, 16, 32), (300, 64, 128), (1024, 256, 1024)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_pcache_kernel_root_equivalent_to_ref(op, policy, u, s, block, dtype):
-    """Vectorized kernel and sequential oracle must imply identical owner
-    values for the same stream (the paper's correctness contract)."""
-    rng = np.random.default_rng(u + s)
-    n = 4 * s
-    idx = rng.integers(0, n, size=u).astype(np.int32)
-    idx = np.where(rng.random(u) < 0.85, idx, -1)
-    val = (rng.standard_normal(u) * 4).astype(np.float32)
-    idx_j = jnp.asarray(idx)
-    val_j = jnp.asarray(val, dtype)
-    tags0 = jnp.full((s,), -1, jnp.int32)
-    ident = {"min": np.inf, "max": -np.inf, "add": 0.0}[op]
-    vals0 = jnp.full((s,), ident, dtype)
+# ------------------------------------ pcache-specific semantics (kept)
 
-    got = pcache_merge(idx_j, val_j, tags0, vals0, op=op, policy=policy,
-                       impl="pallas", block=block)
-    want = pcache_merge_ref(idx_j, val_j, tags0, vals0, op=op, policy=policy)
-    # bf16 add: accumulation order differs between the vectorized and the
-    # sequential form, so rounding can drift by ~2^-8 per partial sum.
-    rtol, atol = (5e-2, 2e-1) if dtype == jnp.bfloat16 else (1e-5, 1e-5)
-    g = _root_of_merge(n, *got, op, policy)
-    w = _root_of_merge(n, *want, op, policy)
-    fin = np.isfinite(w)
-    np.testing.assert_array_equal(np.isfinite(g), fin)
-    np.testing.assert_allclose(g[fin], w[fin], rtol=rtol, atol=atol)
-    # and both must match the direct reduction of the raw stream
-    direct = _root_reduce(n, idx, np.where(idx == -1, 0, val), op)
-    np.testing.assert_allclose(np.where(fin, w, 0), np.where(fin, direct, 0),
-                               rtol=rtol, atol=atol)
+PC_CASES = [("min", "write_through"), ("max", "write_through"),
+            ("add", "write_back")]
 
 
 def test_pcache_kernel_matches_vectorized_merge():
@@ -130,27 +116,14 @@ def test_pcache_kernel_chained_blocks():
                      op="min", policy="write_through", impl="pallas", block=32)
     b = pcache_merge(jnp.asarray(idx), jnp.asarray(val), tags0, vals0,
                      op="min", policy="write_through", impl="pallas", block=256)
-    ra = _root_of_merge(n, *a, "min", "write_through")
-    rb = _root_of_merge(n, *b, "min", "write_through")
+    ra = kernel_parity.root_of_merge(n, *a, "min", "write_through")
+    rb = kernel_parity.root_of_merge(n, *b, "min", "write_through")
     np.testing.assert_allclose(ra, rb)
-    np.testing.assert_allclose(ra, _root_reduce(n, idx, val, "min"))
+    np.testing.assert_allclose(ra, kernel_parity.root_reduce(n, idx, val,
+                                                             "min"))
 
 
-# --------------------------------------------------------- segment_reduce
-
-@pytest.mark.parametrize("op", ["add", "min", "max"])
-@pytest.mark.parametrize("e,n,d,block", [(128, 16, 8, 64), (1000, 77, 4, 256),
-                                         (512, 512, 16, 512)])
-def test_segment_reduce_matches_ref(op, e, n, d, block):
-    rng = np.random.default_rng(e + n)
-    seg = np.sort(rng.integers(0, n, size=e)).astype(np.int32)
-    data = rng.standard_normal((e, d)).astype(np.float32)
-    got = segment_reduce(jnp.asarray(data), jnp.asarray(seg), n, op=op,
-                         impl="pallas", block=block)
-    want = segment_reduce_ref(jnp.asarray(data), jnp.asarray(seg), n, op=op)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
-                               atol=1e-5)
-
+# -------------------------------------------- padding / edge-case semantics
 
 def test_segment_reduce_discard_padding():
     data = jnp.ones((8, 4), jnp.float32)
@@ -159,26 +132,67 @@ def test_segment_reduce_discard_padding():
     np.testing.assert_allclose(np.asarray(got), np.full((2, 4), 2.0))
 
 
-# ----------------------------------------------------------- embedding_bag
-
-@pytest.mark.parametrize("v,d,b,l", [(64, 8, 4, 3), (1000, 16, 32, 8), (16, 128, 2, 1)])
-def test_embedding_bag_matches_ref(v, d, b, l):
-    rng = np.random.default_rng(v + b)
-    table = rng.standard_normal((v, d)).astype(np.float32)
-    idx = rng.integers(0, v, size=(b, l)).astype(np.int32)
-    idx = np.where(rng.random((b, l)) < 0.8, idx, -1)
-    got = embedding_bag(jnp.asarray(table), jnp.asarray(idx), impl="pallas")
-    want = embedding_bag_ref(jnp.asarray(table), jnp.asarray(idx))
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
-                               atol=1e-5)
-
-
 def test_embedding_bag_all_padding_bag():
     table = jnp.ones((8, 4), jnp.float32)
     idx = jnp.full((2, 3), -1, jnp.int32)
     got = embedding_bag(table, idx, impl="pallas")
     np.testing.assert_allclose(np.asarray(got), np.zeros((2, 4)))
 
+
+def test_segment_coalesce_empty_segments_identity():
+    seg = jnp.array([5, 5, 5], jnp.int32)  # everything parks (s == 5)
+    val = jnp.array([1.0, 2.0, 3.0], jnp.float32)
+    for op, ident in (("min", np.inf), ("max", -np.inf), ("add", 0.0)):
+        out = np.asarray(segment_coalesce(seg, val, 5, op=op, impl="jnp"))
+        np.testing.assert_array_equal(out, np.full((5,), ident, np.float32))
+
+
+def test_route_pack_all_parked_reads_inits():
+    """A stream that fits nothing and leaves nothing must come back as the
+    pure init fill on every lane (both backends)."""
+    from repro.kernels.route_pack.ops import route_pack
+
+    u, num_wire, num_left = 16, 8, 4
+    inv = 5 << 10
+    for impl in ("jnp", "pallas"):
+        wire, li, lv = route_pack(
+            jnp.full((u,), num_wire, jnp.int32),
+            jnp.full((u,), num_left, jnp.int32),
+            (jnp.arange(u, dtype=jnp.int32),
+             jnp.arange(u, dtype=jnp.int32)),
+            jnp.arange(u, dtype=jnp.int32),
+            jnp.ones((u,), jnp.float32),
+            wire_inits=(inv, 0), wire_kinds=("min", "bits"),
+            num_wire=num_wire, num_left=num_left, impl=impl, block=8,
+            interpret=True)
+        np.testing.assert_array_equal(np.asarray(wire[0]),
+                                      np.full((num_wire,), inv))
+        np.testing.assert_array_equal(np.asarray(wire[1]),
+                                      np.zeros((num_wire,)))
+        np.testing.assert_array_equal(np.asarray(li),
+                                      np.full((num_left,), -1))
+        np.testing.assert_array_equal(np.asarray(lv), np.zeros((num_left,)))
+
+
+def test_bucket_gather_matches_searchsorted_in_range():
+    """The documented contract: bit-equal to side='right' searchsorted on
+    every slot below the total."""
+    from repro.kernels.segment_reduce.ops import bucket_gather
+
+    rng = np.random.default_rng(9)
+    for _ in range(50):
+        r = int(rng.integers(1, 50))
+        wtot = int(rng.integers(1, 80))
+        flat = np.where(rng.random(r) < 0.5, 0,
+                        rng.integers(0, 9, r)).astype(np.int32)
+        cum = np.cumsum(flat).astype(np.int32)
+        got = np.asarray(bucket_gather(jnp.asarray(cum), wtot))
+        ss = np.searchsorted(cum, np.arange(wtot), side="right")
+        m = np.arange(wtot) < cum[-1]
+        np.testing.assert_array_equal(got[m], ss[m])
+
+
+# --------------------------------------------------------- perf guard
 
 def test_embedding_bag_pallas_bench_parity():
     """The block-vectorized kernel must stay within 10x of the jnp reference
@@ -225,40 +239,8 @@ if HAVE_HYP:
                            op=op, policy=policy, impl="pallas", block=64)
         want = pcache_merge_ref(jnp.asarray(idx), jnp.asarray(val), tags0,
                                 vals0, op=op, policy=policy)
-        g = _root_of_merge(3 * s, *got, op, policy)
-        w = _root_of_merge(3 * s, *want, op, policy)
+        g = kernel_parity.root_of_merge(3 * s, *got, op, policy)
+        w = kernel_parity.root_of_merge(3 * s, *want, op, policy)
         m = np.isfinite(w)
         np.testing.assert_array_equal(np.isfinite(g), m)
         np.testing.assert_allclose(g[m], w[m], rtol=1e-5, atol=1e-5)
-
-
-# ------------------------------------------------------- segment-coalesce
-
-from repro.kernels.segment_coalesce.ops import segment_coalesce
-from repro.kernels.segment_coalesce.ref import segment_coalesce_ref
-
-
-@pytest.mark.slow
-@pytest.mark.parametrize("op", ["min", "max", "add"])
-@pytest.mark.parametrize("u,s,block", [(64, 16, 16), (1000, 300, 256),
-                                       (4096, 4096, 1024)])
-def test_segment_coalesce_matches_ref(op, u, s, block):
-    """Pallas (interpret) and jnp scatter-reduce vs the numpy oracle, on
-    integer-valued payloads (bit-stable under any reduction order)."""
-    rng = np.random.default_rng(u + s)
-    seg = rng.integers(0, s + 1, u).astype(np.int32)  # id == s parks padding
-    val = rng.integers(-9, 9, u).astype(np.float32)
-    want = segment_coalesce_ref(seg, val, s, op=op)
-    for impl in ("jnp", "pallas"):
-        got = np.asarray(segment_coalesce(
-            jnp.asarray(seg), jnp.asarray(val), s, op=op, impl=impl,
-            block=block))
-        np.testing.assert_array_equal(got, want, err_msg=f"{op}/{impl}")
-
-
-def test_segment_coalesce_empty_segments_identity():
-    seg = jnp.array([5, 5, 5], jnp.int32)  # everything parks (s == 5)
-    val = jnp.array([1.0, 2.0, 3.0], jnp.float32)
-    for op, ident in (("min", np.inf), ("max", -np.inf), ("add", 0.0)):
-        out = np.asarray(segment_coalesce(seg, val, 5, op=op, impl="jnp"))
-        np.testing.assert_array_equal(out, np.full((5,), ident, np.float32))
