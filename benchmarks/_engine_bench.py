@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import (CascadeMode, MeshGeom, ReduceOp, TascadeConfig,
-                        TascadeEngine, compat)
+from repro.core import (CascadeMode, MeshGeom, PayloadCodec, ReduceOp,
+                        TascadeConfig, TascadeEngine, compat)
 from repro.core.introspect import count_scatters
 from repro.core.types import UpdateStream
 from repro.graph import apps
@@ -116,13 +116,15 @@ def main():
                     for mode in CascadeMode}
     scat_for_mode = {mode: scatter_ops_for(mesh, sg.vpad, cfg_for(mode))
                      for mode in CascadeMode}
-    for app_name, runner in (
+    fig4_apps = (
         ("sssp", lambda c: apps.run_sssp(mesh, sg, root, c)),
         ("bfs", lambda c: apps.run_bfs(mesh, sg, root, c)),
         ("pagerank", lambda c: apps.run_pagerank(mesh, sg, c, iters=5)),
         ("spmv", lambda c: apps.run_spmv(
             mesh, sg, np.ones(g.num_vertices, np.float32), c)),
-    ):
+    )
+    tascade_res = {}  # app -> (result, hop_bytes) of the raw32 TASCADE row
+    for app_name, runner in fig4_apps:
         base_hop = None
         for mode in (CascadeMode.OWNER_DIRECT, CascadeMode.PROXY_MERGE,
                      CascadeMode.FULL_CASCADE, CascadeMode.TASCADE):
@@ -134,6 +136,8 @@ def main():
             er = float(m.edges_relaxed) if hasattr(m, "edges_relaxed") else 0.0
             if base_hop is None:
                 base_hop = max(hop, 1.0)
+            if mode is CascadeMode.TASCADE:
+                tascade_res[app_name] = (np.asarray(res), hop)
             gteps = f";edges_relaxed={er:.0f};gteps={gteps_of(er, us):.6f}" \
                 if er > 0 else ""
             tbl = tbl_for_mode[mode]
@@ -141,6 +145,41 @@ def main():
                 f"hop_bytes={hop:.0f};traffic_x={base_hop / max(hop, 1):.2f};"
                 f"msgs={sent};table_elems={tbl};"
                 f"scatter_ops={scat_for_mode[mode]}{gteps}")
+
+    # ---- Fig. 4 codec rows: compressed wire payloads ----
+    # A payload codec shrinks the wire BLOCK itself (32-bit key word +
+    # sub-word-packed payload words), cutting hop_bytes below the
+    # coalescing floor. Codec rows ride the fig4/ prefix so the standard
+    # --compare gates apply; run.py additionally pins each row against its
+    # raw32 sibling (same name with "@codec" stripped) at the codec's
+    # message-width ratio. App assignment follows the exactness tiers:
+    # bfs@u8 — hop counts < 256, bit-exact (dist must equal raw32 bit for
+    # bit); pagerank@bf16 — bounded-error under an explicit budget. sssp
+    # and spmv keep raw32 (float edge weights / dense mass are not
+    # label-valued payloads).
+    runners = dict(fig4_apps)
+    for app_name, codec, budget in (
+        ("bfs", PayloadCodec.U8, 0.0),
+        ("pagerank", PayloadCodec.BF16, 0.05),
+    ):
+        cfgc = dataclasses.replace(cfg_for(CascadeMode.TASCADE),
+                                   wire_codec=codec,
+                                   codec_error_budget=budget)
+        us, (res, m) = timed(runners[app_name], cfgc)
+        hop = float(m.hop_bytes)
+        res0, hop0 = tascade_res[app_name]
+        if codec.exact:
+            fid = f"bitequal={int(np.array_equal(np.asarray(res), res0))}"
+        else:
+            a = np.asarray(res, np.float64)
+            b = res0.astype(np.float64)
+            rel = float(np.max(np.abs(a - b) /
+                               np.maximum(np.abs(b), 1e-12)))
+            fid = (f"max_rel_err={rel:.2e};budget={budget};"
+                   f"within_budget={int(rel <= budget)}")
+        row(f"fig4/{app_name}/tascade@{codec.value}", us,
+            f"hop_bytes={hop:.0f};wire_x={hop0 / max(hop, 1):.3f};"
+            f"msgs={int(m.sent_total)};{fid}")
 
     # ---- GTEPS protocol: batched K-lane multi-source sweeps ----
     # The paper's headline number is throughput at scale (edges/second over
@@ -243,12 +282,26 @@ def main():
             f"msgs={int(met.sent_total)}")
 
     # ---- Fig. 3: scaling (Dalorex vs Tascade traffic) on WCC ----
+    wcc0 = None  # (labels, hop_bytes) of the raw32 TASCADE row
     for mode in (CascadeMode.OWNER_DIRECT, CascadeMode.TASCADE):
         us, (res, met) = timed(
             lambda c: apps.run_wcc(mesh, sgsym, c), cfg_for(mode))
+        if mode is CascadeMode.TASCADE:
+            wcc0 = (np.asarray(res), float(met.hop_bytes))
         row(f"fig3/wcc/{mode.value}/ndev{ndev}", us,
             f"hop_bytes={float(met.hop_bytes):.0f};"
             f"msgs={int(met.sent_total)};edges={e}")
+    # WCC labels are vertex ids (< 2^scale): too wide for u8 at this
+    # scale, exactly the u16 bit-exact tier. Labels must match raw32
+    # bit for bit.
+    cfgw = dataclasses.replace(cfg_for(CascadeMode.TASCADE),
+                               wire_codec=PayloadCodec.U16)
+    us, (res, met) = timed(lambda c: apps.run_wcc(mesh, sgsym, c), cfgw)
+    hop = float(met.hop_bytes)
+    row(f"fig3/wcc/tascade@u16/ndev{ndev}", us,
+        f"hop_bytes={hop:.0f};wire_x={wcc0[1] / max(hop, 1):.3f};"
+        f"msgs={int(met.sent_total)};edges={e};"
+        f"bitequal={int(np.array_equal(np.asarray(res), wcc0[0]))}")
 
     # ---- Histogram (write-back coalescing, single phase) ----
     rng = np.random.default_rng(0)

@@ -38,8 +38,11 @@ def _parse_derived(derived: str) -> dict:
                        ("epochs", "epochs"), ("edges_relaxed", "edges_relaxed"),
                        ("gteps", "gteps"), ("speedup_x", "speedup_x"),
                        ("table_elems", "table_elems"),
-                       ("scatter_ops", "scatter_ops")):
-        m = re.search(rf"{key}=(-?[\d.]+)", derived)
+                       ("scatter_ops", "scatter_ops"),
+                       ("wire_x", "wire_x"), ("bitequal", "bitequal"),
+                       ("within_budget", "within_budget"),
+                       ("max_rel_err", "max_rel_err")):
+        m = re.search(rf"{key}=(-?[\d.]+(?:e[+-]?\d+)?)", derived)
         if m:
             out[alias] = float(m.group(1))
     return out
@@ -174,6 +177,54 @@ def storage_model():
             f"sw_copy_bytes={sw_per_tile};tascade_bytes="
             f"{tascade_per_tile:.0f};reduction_x="
             f"{sw_per_tile / tascade_per_tile:.0f}")
+
+
+# Wire bytes per message by codec (4-byte routing key + payload width);
+# mirrors types.WireFormat.msg_bytes without importing jax in the harness.
+CODEC_MSG_BYTES = {"raw32": 8, "bf16": 6, "f16": 6, "u16": 6, "u8": 5}
+
+
+def codec_row_gates(rows: list[dict]) -> list[str]:
+    """Cross-row gates for payload-codec bench rows (names carrying an
+    ``@codec`` tag, e.g. ``fig4/bfs/tascade@u8``). Each codec row must
+
+      * keep its fidelity flag green — ``bitequal=1`` for the bit-exact
+        tier (u8/u16 labels identical to the raw32 run), ``within_budget=1``
+        for the bounded-error tier (bf16/f16 under an explicit budget), and
+      * actually shrink hop_bytes against its raw32 sibling (the row with
+        the ``@codec`` tag stripped) down to the codec's message-width
+        ratio ``(4 + width) / 8`` plus a small scheduling slack.
+
+    Unlike ``compare_snapshots`` this gate is cross-row within ONE run, so
+    it catches the wire silently falling back to raw32 even when every
+    row matches its own snapshot history."""
+    by_name = {r["name"]: r for r in rows}
+    out: list[str] = []
+    for r in rows:
+        m = re.search(r"@([a-z0-9]+)", r["name"])
+        if not m:
+            continue
+        codec = m.group(1)
+        if "bitequal=0" in r.get("derived", ""):
+            out.append(f"{r['name']}: codec output not bit-equal to raw32")
+        if "within_budget=0" in r.get("derived", ""):
+            out.append(f"{r['name']}: codec error exceeded its budget")
+        sib_name = r["name"].replace(f"@{codec}", "")
+        sib = by_name.get(sib_name)
+        if sib is None:
+            out.append(f"{r['name']}: raw32 sibling row '{sib_name}' missing")
+            continue
+        hop, hop0 = r.get("hop_bytes"), sib.get("hop_bytes")
+        if not hop or not hop0:
+            out.append(f"{r['name']}: hop_bytes missing for the codec gate")
+            continue
+        expect = CODEC_MSG_BYTES.get(codec, 8) / 8.0
+        ratio = float(hop) / float(hop0)
+        if ratio > expect * 1.05:
+            out.append(
+                f"{r['name']}: hop_bytes x{ratio:.3f} of raw32 sibling; the "
+                f"{codec} wire promises <= x{expect:.3f}")
+    return out
 
 
 def compare_snapshots(old_path: str, rows: list[dict],
@@ -311,12 +362,17 @@ def main(argv=None) -> None:
     regressions = []
     if compare_path is not None and Path(compare_path).exists():
         regressions = compare_snapshots(compare_path, ROWS)
+    if compare_path is not None:
+        for line in codec_row_gates(ROWS):
+            print(f"REGRESSION {line}", flush=True)
+            regressions.append(line)
     if not ok:
         raise SystemExit(1)
     if regressions:
         raise SystemExit(
-            f"{len(regressions)} fig4/* regression(s) — see REGRESSION "
-            "lines above (wall-clock past tolerance and/or traffic drift)")
+            f"{len(regressions)} regression(s) — see REGRESSION lines above "
+            "(wall-clock past tolerance, traffic drift, or a codec-row "
+            "fidelity/width gate)")
 
 
 if __name__ == "__main__":

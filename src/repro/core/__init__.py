@@ -9,6 +9,7 @@ from repro.core.api import (
     WritePolicy,
     tascade_scatter_reduce,
 )
+from repro.core.codec import PayloadCodec
 from repro.core.geom import CompactPlan
 from repro.core.types import NO_IDX, PCacheState, UpdateStream
 
@@ -18,6 +19,7 @@ __all__ = [
     "CompactPlan",
     "MeshGeom",
     "NO_IDX",
+    "PayloadCodec",
     "PCacheState",
     "ReduceOp",
     "TascadeConfig",

@@ -1,0 +1,174 @@
+"""Payload codecs shared by the wire format and the sparse-gradient path.
+
+The paper's primary metric is NoC traffic, and after at-source coalescing
+every remaining wire message still pays a raw 32-bit IEEE-754 value
+payload — even when the app's values need 8 bits (BFS hop counts), 16
+(WCC component labels, bounded int weights) or tolerate bfloat16
+(PageRank mass). ``PayloadCodec`` names the value encodings the engine
+can put on the wire (``types.WireFormat.codec``) and that the
+error-feedback gradient compressor can quantize with
+(``optim.grad_compress.topk_select``). One module owns encode/decode so
+the two paths cannot drift.
+
+Two exactness tiers, engine-enforced (``check_legal``):
+
+  * **bit-exact** — ``RAW32`` (raw IEEE bits, any f32 round-trips
+    including -0.0/inf/NaN) and the narrow integer codecs ``U16``/``U8``
+    (decode∘encode is the identity on integer-valued payloads in
+    ``[0, max_int]``; the engine restricts them to MIN/MAX reductions,
+    where per-message values are app labels with app-guaranteed range —
+    under ADD a clipped partial sum would silently saturate).
+  * **bounded-error** — ``BF16``/``F16`` round-to-nearest float
+    truncation with relative error ≤ ``rel_error_bound`` per message;
+    the engine requires an explicit positive
+    ``TascadeConfig.codec_error_budget`` before accepting them, and the
+    end-to-end error vs the scipy oracle is asserted in tests.
+
+Sub-word packing: codecs narrower than 32 bits carry
+``codes_per_word = 4 // width_bytes`` payloads per 32-bit wire word
+(U8 → 4, U16/BF16/F16 → 2), so the wire *block itself* shrinks — not
+just the accounted bytes (``exchange`` packs/unpacks the bitfields;
+``engine`` derives per-level ``hop_bytes`` from ``width_bytes``).
+
+Values are always decoded back to the working dtype immediately after
+the ``all_to_all`` (``exchange.wire_to_stream``): P-caches, pending
+queues and leftovers never hold codec-space values.
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+import jax.numpy as jnp
+
+
+class PayloadCodec(enum.Enum):
+    """Wire/value payload encoding for one 32-bit working value.
+
+    Deliberately NOT a ``str``-mixin enum (unlike the other config enums):
+    ``encode`` would shadow ``str.encode`` and break any consumer that
+    treats the member as a plain string. Construct from strings with
+    ``PayloadCodec("u8")``; read the wire name from ``.value``."""
+
+    RAW32 = "raw32"  # raw IEEE-754 bits: bit-exact, 4 bytes
+    BF16 = "bf16"    # bfloat16 truncation: bounded-error, 2 bytes
+    F16 = "f16"      # IEEE half: bounded-error, 2 bytes
+    U16 = "u16"      # integer-valued payloads in [0, 65535]: bit-exact
+    U8 = "u8"        # integer-valued payloads in [0, 255]: bit-exact
+
+    # ------------------------------------------------------------ geometry
+
+    @property
+    def width_bytes(self) -> int:
+        """Wire bytes one encoded payload occupies."""
+        return {PayloadCodec.RAW32: 4, PayloadCodec.BF16: 2,
+                PayloadCodec.F16: 2, PayloadCodec.U16: 2,
+                PayloadCodec.U8: 1}[self]
+
+    @property
+    def code_bits(self) -> int:
+        return self.width_bytes * 8
+
+    @property
+    def codes_per_word(self) -> int:
+        """How many encoded payloads pack into one 32-bit wire word."""
+        return 4 // self.width_bytes
+
+    @property
+    def code_mask(self) -> int:
+        return (1 << self.code_bits) - 1
+
+    # ----------------------------------------------------------- exactness
+
+    @property
+    def exact(self) -> bool:
+        """Bit-exact tier: decode∘encode is the identity on the codec's
+        contractual domain (all f32 for RAW32; integers in
+        ``[0, max_int]`` for U16/U8)."""
+        return self in (PayloadCodec.RAW32, PayloadCodec.U16,
+                        PayloadCodec.U8)
+
+    @property
+    def is_float(self) -> bool:
+        """Float truncation codecs (signed, bounded relative error)."""
+        return self in (PayloadCodec.BF16, PayloadCodec.F16)
+
+    @property
+    def rel_error_bound(self) -> float:
+        """Worst-case relative rounding error of one encode (normal
+        range): 2^-(mantissa bits + 1) for round-to-nearest."""
+        return {PayloadCodec.RAW32: 0.0, PayloadCodec.BF16: 2.0 ** -8,
+                PayloadCodec.F16: 2.0 ** -11, PayloadCodec.U16: 0.0,
+                PayloadCodec.U8: 0.0}[self]
+
+    @property
+    def max_int(self) -> int:
+        """Largest integer the codec represents exactly (integer codecs:
+        the clip ceiling; float codecs: contiguous-integer range)."""
+        return {PayloadCodec.RAW32: 1 << 24, PayloadCodec.BF16: 1 << 8,
+                PayloadCodec.F16: 1 << 11, PayloadCodec.U16: 65535,
+                PayloadCodec.U8: 255}[self]
+
+    # ------------------------------------------------------ encode/decode
+
+    def encode(self, val: jnp.ndarray) -> jnp.ndarray:
+        """f32 values -> uint32 codes (low ``code_bits`` significant)."""
+        if self is PayloadCodec.RAW32:
+            return jax.lax.bitcast_convert_type(val, jnp.uint32)
+        if self is PayloadCodec.BF16:
+            return jax.lax.bitcast_convert_type(
+                val.astype(jnp.bfloat16), jnp.uint16).astype(jnp.uint32)
+        if self is PayloadCodec.F16:
+            return jax.lax.bitcast_convert_type(
+                val.astype(jnp.float16), jnp.uint16).astype(jnp.uint32)
+        # Integer codecs: round-clip. The bit-exact contract holds only
+        # for integer-valued payloads already inside [0, max_int] — the
+        # engine's legality rules plus the app's value range guarantee it.
+        return jnp.clip(jnp.round(val), 0, self.max_int).astype(jnp.uint32)
+
+    def decode(self, code: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+        """uint32 codes -> values in ``dtype`` (inverse of ``encode`` on
+        the codec's contractual domain)."""
+        if self is PayloadCodec.RAW32:
+            return jax.lax.bitcast_convert_type(
+                code.astype(jnp.uint32), dtype)
+        if self is PayloadCodec.BF16:
+            return jax.lax.bitcast_convert_type(
+                code.astype(jnp.uint16), jnp.bfloat16).astype(dtype)
+        if self is PayloadCodec.F16:
+            return jax.lax.bitcast_convert_type(
+                code.astype(jnp.uint16), jnp.float16).astype(dtype)
+        return code.astype(dtype)
+
+    def roundtrip(self, val: jnp.ndarray) -> jnp.ndarray:
+        """decode∘encode — what the receiver will see for ``val``."""
+        return self.decode(self.encode(val), val.dtype)
+
+    # ------------------------------------------------------------ legality
+
+    def check_legal(self, op, error_budget: float = 0.0) -> None:
+        """Engine-side legality of putting this codec on the wire for
+        reduction ``op`` (a ``ReduceOp``). Raises ``ValueError`` when the
+        combination could silently corrupt results:
+
+          * U8/U16 require MIN/MAX — under ADD a partial sum past
+            ``max_int`` would clip-saturate without any error surfacing,
+          * BF16/F16 require a positive ``error_budget``
+            (``TascadeConfig.codec_error_budget``) — bounded-error
+            transport must be an explicit opt-in with a stated bound.
+        """
+        if self is PayloadCodec.RAW32:
+            return
+        opv = getattr(op, "value", op)
+        if self in (PayloadCodec.U8, PayloadCodec.U16):
+            if opv not in ("min", "max"):
+                raise ValueError(
+                    f"wire codec {self.value} is bit-exact only for "
+                    f"min/max label reductions; op={opv} accumulates "
+                    "partial sums that would clip-saturate silently. "
+                    "Use raw32 (exact) or bf16/f16 (bounded-error).")
+        if self.is_float and not error_budget > 0.0:
+            raise ValueError(
+                f"wire codec {self.value} is bounded-error (rel bound "
+                f"{self.rel_error_bound:.2e} per message); set "
+                "TascadeConfig.codec_error_budget > 0 to accept it.")

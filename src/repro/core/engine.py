@@ -70,6 +70,7 @@ import jax.numpy as jnp
 
 from repro.core import exchange as ex
 from repro.core import pcache
+from repro.core.codec import PayloadCodec
 from repro.core.geom import CompactPlan, MeshGeom
 from repro.core.types import (
     NO_IDX,
@@ -87,7 +88,9 @@ from repro.core.types import (
 
 IDX_BYTES = 4
 VAL_BYTES = 4
-MSG_BYTES = IDX_BYTES + VAL_BYTES  # one packed wire word
+MSG_BYTES = IDX_BYTES + VAL_BYTES  # one raw32 packed wire word; levels with
+                                   # a narrower payload codec cost
+                                   # WireFormat.msg_bytes (4 + codec width)
 
 
 class LevelState(NamedTuple):
@@ -184,6 +187,18 @@ class TascadeEngine:
                 "(use_pallas=False) or CascadeMode.FULL_CASCADE."
             )
 
+        # Wire payload codec legality — checked at construction (even on a
+        # degenerate single-device mesh) so an illegal codec/op pairing can
+        # never silently corrupt a reduction (core.codec docstring).
+        codec = cfg.wire_codec
+        if codec is not PayloadCodec.RAW32:
+            if jnp.dtype(dtype).itemsize != 4:
+                raise ValueError(
+                    f"wire codec {codec.value} encodes 32-bit working "
+                    f"values; dtype {jnp.dtype(dtype).name} takes the "
+                    "unpacked fallback wire, which a codec cannot narrow")
+            codec.check_legal(op, cfg.codec_error_budget)
+
         live_axes = [a for a in cfg.all_axes if geom.axis_size(a) > 1]
         if not live_axes:
             # single-device mesh: degenerate tree, root-apply only.
@@ -241,6 +256,14 @@ class TascadeEngine:
             plan = geom.compact_plan(exchanged) if cfg.compact_tables \
                 else None
             assert plan is None or plan.coverage == cov, (plan, cov)
+            fmt = wire_format_for(peers, cov if plan is not None else vpad,
+                                  dtype, codec=codec)
+            if fmt is not None and fmt.codec.codes_per_word > 1:
+                # Whole payload words must exchange: round the bucket up to
+                # a codes_per_word multiple (wire slots, not messages — the
+                # extra slots ride as invalid-key padding when unused).
+                cpw = fmt.codec.codes_per_word
+                bucket = -(-bucket // cpw) * cpw
             specs.append(
                 LevelSpec(
                     axes=axes,
@@ -251,9 +274,7 @@ class TascadeEngine:
                     cache_lines=lines,
                     mean_hops=hops,
                     coverage=cov_next,
-                    fmt=wire_format_for(peers,
-                                        cov if plan is not None else vpad,
-                                        dtype),
+                    fmt=fmt,
                     plan=plan,
                 )
             )
@@ -685,9 +706,16 @@ class TascadeEngine:
                 lane_inflight = lane_inflight.at[lane].add(1)
             lane_inflight = lane_inflight[: self.lanes]
 
+        # NoC traffic proxy: bytes derive from the ACTUAL per-level wire
+        # layout — 4-byte routing key + codec-width payload on packed
+        # levels (== MSG_BYTES for raw32, byte-identical to the fixed-word
+        # accounting), key + value itemsize on the unpacked fallback.
         hop_bytes = jnp.float32(0)
         for li, spec in enumerate(self.levels):
-            hop_bytes = hop_bytes + sent[li].astype(jnp.float32) * MSG_BYTES * spec.mean_hops
+            msg_bytes = spec.fmt.msg_bytes if spec.fmt is not None else \
+                IDX_BYTES + jnp.dtype(self.dtype).itemsize
+            hop_bytes = hop_bytes + \
+                sent[li].astype(jnp.float32) * msg_bytes * spec.mean_hops
 
         new_state = EngineState(levels=tuple(levels), overflow=overflow)
         stats = StepStats(

@@ -61,9 +61,23 @@ The pipeline:
     this level's axes only. Leftovers stay in global-index form, so no
     un-compaction is needed on the backpressure path.
 
+Payload codecs (``core.codec``): when the level's ``WireFormat`` carries a
+sub-word codec (u8/u16/bf16/f16), the router *encodes at the sender inside
+the fused epilogue* — each fitting message's value is encoded to a
+``code_bits``-bit code, pre-shifted to its ``(slot % codes_per_word)``-th
+bitfield, and the route-pack op's packed "or" lane folds
+``codes_per_word`` messages into one 32-bit payload word. The wire block
+shrinks to ``[P, K + K/codes_per_word]`` i32 (still ONE collective) and
+``wire_to_stream`` decodes right after the ``all_to_all``, so caches,
+pending queues and leftovers only ever hold decoded working-dtype values.
+Narrow codecs require the counting router (the retired sort oracles stay
+raw32-only) and a ``codes_per_word``-aligned ``bucket_cap`` (the engine
+rounds its capacity plan up).
+
 When the packed format cannot represent a level (value dtype not 32-bit, or
 peer+idx overflow the 31-bit key) the same counting pipeline emits the
-unpacked two-lane wire instead.
+unpacked two-lane wire instead (codec ignored — the fallback ships raw
+values).
 
 ``impl="sort"`` retains the PR-2 single-sort router as the reference
 implementation for the equivalence property tests
@@ -99,6 +113,8 @@ class RouteResult(NamedTuple):
     wire: jnp.ndarray | tuple   # packed wire block for all_to_all_wire:
                                 #   WireFormat.word64: u64 [P, K]
                                 #   WireFormat paired: i32 [P, 2K] (key|bits)
+                                #   sub-word codec:    i32 [P, K + K/cpw]
+                                #                      (keys | packed codes)
                                 #   unpacked (fmt None): (i32 [P,K], val [P,K])
     leftover: UpdateStream      # [pending cap] front-compacted, counter threaded
     n_sent: jnp.ndarray         # int32 messages packed for the wire
@@ -231,6 +247,13 @@ def route_and_pack(
         if plan is not None:
             assert plan.coverage <= (1 << fmt.idx_bits), (
                 "wire format too narrow for the compact key space")
+        if fmt.codec.codes_per_word > 1:
+            assert impl == "count", (
+                "sub-word payload codecs route only through the counting "
+                "router (the retired sort oracles are raw32-only)")
+            assert bucket_cap % fmt.codec.codes_per_word == 0, (
+                "bucket_cap must be a multiple of the codec's "
+                "codes_per_word so whole payload words exchange")
     if impl == "count":
         if plan is not None:
             num_elements = plan.coverage
@@ -404,6 +427,7 @@ def _route_counting(idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
     # entry carries the discard slot, so lanes go in unmasked.
     from repro.kernels.route_pack.ops import route_pack
 
+    packs = None
     if fmt is None:
         lanes = (ck, msg_val)
         inits = (-1, 0)
@@ -416,6 +440,21 @@ def _route_counting(idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
             lanes = (word,)
             inits = (int(fmt.invalid_key) << 32,)
             kinds = ("min",)
+        elif fmt.codec.codes_per_word > 1:
+            # Sender-side codec encode, fused into the epilogue: each
+            # fitting message's value becomes a code_bits-bit code
+            # pre-shifted to its (dest % cpw)-th bitfield; the packed "or"
+            # lane folds cpw messages into one 32-bit payload word at
+            # dest // cpw (parked entries carry dest == num_wire, a cpw
+            # multiple, and land in the lane's park bin).
+            cpw = fmt.codec.codes_per_word
+            code = fmt.codec.encode(msg_val)
+            sub = ((dest % cpw) * fmt.codec.code_bits).astype(jnp.uint32)
+            lanes = (key, jax.lax.bitcast_convert_type(code << sub,
+                                                       jnp.int32))
+            inits = (int(fmt.invalid_key), 0)
+            kinds = ("min", "or")
+            packs = (1, cpw)
         else:
             lanes = (key, val_bits(msg_val).astype(jnp.int32))
             inits = (int(fmt.invalid_key), 0)
@@ -423,13 +462,20 @@ def _route_counting(idx, val, valid, peer_fn, num_peers, cap_out, bucket_cap,
     wire_lanes, left_idx, left_val = route_pack(
         dest, ldest, lanes, idx, msg_val, wire_inits=inits, wire_kinds=kinds,
         num_wire=num_peers * bucket_cap, num_left=cap_out, impl=pack_impl,
-        interpret=pallas_interpret)
+        wire_packs=packs, interpret=pallas_interpret)
     leftover = UpdateStream(left_idx, left_val, n_left)
     if fmt is None:
         wire = (wire_lanes[0].reshape(num_peers, bucket_cap),
                 wire_lanes[1].reshape(num_peers, bucket_cap))
     elif fmt.word64:
         wire = wire_lanes[0].reshape(num_peers, bucket_cap)
+    elif fmt.codec.codes_per_word > 1:
+        # Word slot peer*bucket_cap/cpw + rank//cpw row-majors into the
+        # [P, K/cpw] payload half; the wire block itself is smaller.
+        cpw = fmt.codec.codes_per_word
+        wire = jnp.concatenate(
+            [wire_lanes[0].reshape(num_peers, bucket_cap),
+             wire_lanes[1].reshape(num_peers, bucket_cap // cpw)], axis=1)
     else:
         wire = jnp.concatenate(
             [wire_lanes[0].reshape(num_peers, bucket_cap),
@@ -554,7 +600,10 @@ def _route_unpacked_sort(idx, val, valid, peer_fn, num_peers, cap_out,
 
 
 def wire_to_stream(wire, fmt: WireFormat | None, dtype=jnp.float32) -> UpdateStream:
-    """Unpack a wire block (local or received) into a flat [P*K] stream."""
+    """Unpack a wire block (local or received) into a flat [P*K] stream.
+    Sub-word codec payloads are decoded here — immediately after the
+    exchange — so downstream merge/cache/leftover paths only ever see
+    working-dtype values."""
     if fmt is None:
         idx, val = wire
         return UpdateStream(idx.reshape(-1), val.reshape(-1))
@@ -562,6 +611,17 @@ def wire_to_stream(wire, fmt: WireFormat | None, dtype=jnp.float32) -> UpdateStr
         word = wire.reshape(-1)
         key = (word >> 32).astype(jnp.int32)
         val = bits_val(word.astype(jnp.uint32), dtype)
+    elif fmt.codec.codes_per_word > 1:
+        # Block is [P, K + K/cpw]: K key columns then K/cpw payload words.
+        cpw = fmt.codec.codes_per_word
+        k = wire.shape[1] * cpw // (cpw + 1)
+        key = wire[:, :k].reshape(-1)
+        words = jnp.repeat(wire[:, k:], cpw, axis=1)  # word of each slot
+        sub = ((jnp.arange(k, dtype=jnp.int32) % cpw)
+               * fmt.codec.code_bits).astype(jnp.uint32)
+        codes = (jax.lax.bitcast_convert_type(words, jnp.uint32)
+                 >> sub[None, :]) & jnp.uint32(fmt.codec.code_mask)
+        val = fmt.codec.decode(codes, dtype).reshape(-1)
     else:
         k = wire.shape[1] // 2
         key = wire[:, :k].reshape(-1)

@@ -28,6 +28,12 @@ Within-batch coalescing happens pre-exchange in the counting-rank
 at-source coalescing); ``merge(coalesce=True)`` keeps a standalone
 sort-based front-end for direct callers.
 
+Decode-before-merge: when the level's wire carries a sub-word payload
+codec (``core.codec``), ``exchange.wire_to_stream`` decodes values back to
+the working dtype immediately after the ``all_to_all`` — every stream
+reaching this module is already in working-dtype space, so cache lines,
+flush emissions and filter decisions are codec-agnostic by construction.
+
 One conflict-resolution core, three entry points: ``_conflict_core`` holds
 the scatter math; ``cache_pass`` runs it against one cache;
 ``cache_pass_batched`` runs ONE launch against a whole stack of level

@@ -18,6 +18,8 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.codec import PayloadCodec
+
 # Sentinel index marking an inactive update slot / empty cache line.
 NO_IDX = jnp.int32(-1)
 
@@ -202,6 +204,19 @@ class TascadeConfig:
       pallas_interpret -- Pallas execution override: None auto-selects by
                         backend (compiled on TPU, interpreted elsewhere);
                         True/False force interpret/compiled mode.
+      wire_codec     -- payload encoding for packed-wire values
+                        (``core.codec.PayloadCodec``): raw32 (default,
+                        bit-exact IEEE bits), u8/u16 (bit-exact narrow
+                        integers, MIN/MAX only), bf16/f16 (bounded-error
+                        float truncation). Narrow codecs pack
+                        ``codes_per_word`` payloads per 32-bit wire word,
+                        shrinking the exchanged block itself. Legality is
+                        checked at engine construction
+                        (``PayloadCodec.check_legal``).
+      codec_error_budget -- explicit end-to-end relative error budget a
+                        bounded-error codec (bf16/f16) is allowed to
+                        introduce; must be > 0 to select one (0.0 forbids
+                        them). Ignored by bit-exact codecs.
     """
 
     region_axes: Sequence[str] = ("model",)
@@ -219,12 +234,19 @@ class TascadeConfig:
     batch_cache_passes: bool = False  # staged drain, one cache launch/iter
     use_pallas: bool = False  # route P-cache merges through the Pallas kernel
     pallas_interpret: bool | None = None  # None = auto-select by backend
+    wire_codec: PayloadCodec = PayloadCodec.RAW32  # packed-wire payload codec
+    codec_error_budget: float = 0.0  # rel error opt-in for bf16/f16 (> 0)
 
     def __post_init__(self):
         object.__setattr__(self, "region_axes", tuple(self.region_axes))
         object.__setattr__(self, "cascade_axes", tuple(self.cascade_axes))
         object.__setattr__(self, "policy", WritePolicy(self.policy))
         object.__setattr__(self, "mode", CascadeMode(self.mode))
+        object.__setattr__(self, "wire_codec", PayloadCodec(self.wire_codec))
+        if self.codec_error_budget < 0.0:
+            raise ValueError(
+                f"codec_error_budget must be >= 0, got "
+                f"{self.codec_error_budget}")
         if self.n_lanes < 1:
             raise ValueError(f"n_lanes must be >= 1, got {self.n_lanes}")
         if not 0.0 < self.lane_capacity_share <= 1.0:
@@ -265,9 +287,17 @@ class WireFormat:
                       the wire is still ONE collective; the sort carries the
                       key plus one payload operand.
 
-    Either way a message costs 8 wire bytes (``engine.MSG_BYTES``). Invalid
-    slots carry ``invalid_key`` (peer field == num_peers), which also makes
-    padding sort after every live message.
+    Under a sub-word payload codec (``codec.codes_per_word`` > 1; see
+    ``core.codec``) the value half shrinks: payloads are encoded to
+    ``codec.code_bits``-bit codes and ``codes_per_word`` of them share one
+    32-bit payload word, so the wire block is [P, K + K/codes_per_word]
+    i32 — still ONE collective, and the block itself (not just the byte
+    accounting) is smaller. ``word64`` packing applies only to the raw32
+    codec. With raw32 a message costs 8 wire bytes (4 key + 4 payload,
+    ``engine.MSG_BYTES``); narrow codecs cost
+    ``4 + codec.width_bytes`` (see ``engine.step`` hop accounting).
+    Invalid slots carry ``invalid_key`` (peer field == num_peers), which
+    also makes padding sort after every live message.
 
     Float caveat: the value bits ride in the word's low half purely as
     payload — messages are grouped by the high (key) half, so the value's
@@ -279,6 +309,7 @@ class WireFormat:
     idx_bits: int
     num_peers: int
     word64: bool
+    codec: PayloadCodec = PayloadCodec.RAW32
 
     @property
     def idx_mask(self) -> int:
@@ -288,6 +319,12 @@ class WireFormat:
     def invalid_key(self) -> int:
         return self.num_peers << self.idx_bits
 
+    @property
+    def msg_bytes(self) -> int:
+        """Wire bytes one message costs: 4-byte routing key plus the
+        codec-width payload (8 for raw32 == ``engine.MSG_BYTES``)."""
+        return 4 + self.codec.width_bytes
+
 
 def x64_live() -> bool:
     """Whether 64-bit array types are enabled in this process."""
@@ -295,19 +332,26 @@ def x64_live() -> bool:
 
 
 def wire_format_for(num_peers: int, num_elements: int,
-                    dtype=jnp.float32) -> WireFormat | None:
+                    dtype=jnp.float32,
+                    codec: PayloadCodec = PayloadCodec.RAW32,
+                    ) -> WireFormat | None:
     """Resolve the packed wire layout for a level, or None if the packed
     format cannot represent it (value dtype not 32-bit, or peer+idx do not
-    fit the 31-bit key) — callers then fall back to the unpacked path."""
+    fit the 31-bit key) — callers then fall back to the unpacked path.
+    ``codec`` selects the payload encoding; the fused u64 realization is
+    only available for raw32 payloads (narrow codes pack sub-word lanes
+    instead), so a non-raw32 codec forces ``word64=False``."""
     if jnp.dtype(dtype).itemsize != 4:
         return None
+    codec = PayloadCodec(codec)
     idx_bits = max(1, int(num_elements - 1).bit_length())
     # key = (peer << idx_bits) | idx must stay a non-negative int32,
     # including the invalid bin at peer == num_peers.
     if (num_peers + 1) << idx_bits > 2**31:
         return None
     return WireFormat(idx_bits=idx_bits, num_peers=num_peers,
-                      word64=x64_live())
+                      word64=x64_live() and codec is PayloadCodec.RAW32,
+                      codec=codec)
 
 
 def val_bits(val: jnp.ndarray) -> jnp.ndarray:

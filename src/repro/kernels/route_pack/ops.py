@@ -18,8 +18,18 @@ guarantees both. Empty wire slots read the per-lane ``wire_inits`` fill
 (the wire format's invalid word/key, zero value bits); empty leftover
 slots read ``(NO_IDX, 0)``. ``wire_kinds`` names each lane's placement
 class for the kernel ("min" routing keys, "max" index lanes, "bits" value
-payloads); the jnp scatters ignore it. All impls are bit-exact — one
-writer per live slot, no reduction-order freedom.
+payloads, "or" sub-word codec payloads); the jnp scatters ignore it
+except for "or". All impls are bit-exact — one writer per live slot
+(per live *bitfield* for packed lanes), no reduction-order freedom.
+
+Sub-word payload lanes (``wire_packs[j] = p > 1``, payload codecs
+narrower than 32 bits): the lane carries codec codes pre-shifted to the
+``(wdest % p)``-th bitfield of a shared 32-bit word, ``p`` wire slots
+fold into one output word at ``wdest // p``, and the lane's output region
+is ``num_wire // p`` words. Since live wire destinations are unique the
+bitfields are disjoint, so OR == ADD == exact placement and the result
+is order-free. Requires ``wire_kinds[j] == "or"``, ``wire_inits[j] == 0``
+and ``num_wire % p == 0``.
 """
 from __future__ import annotations
 
@@ -38,19 +48,30 @@ def _scatter_set(dest, lane, n, init):
     return jnp.full((n + 1,), init, lane.dtype).at[dest].set(lane)[:n]
 
 
+def _scatter_or(wdest, lane, num_wire, pack):
+    """Packed-lane placement: ``pack`` wire slots share one word; disjoint
+    pre-shifted bitfields make scatter-add exact OR (park bin sliced off)."""
+    n = num_wire // pack
+    return jnp.zeros((n + 1,), lane.dtype).at[wdest // pack].add(lane)[:n]
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("wire_inits", "wire_kinds", "num_wire",
-                                    "num_left", "impl", "block", "interpret"))
+                   static_argnames=("wire_inits", "wire_kinds", "wire_packs",
+                                    "num_wire", "num_left", "impl", "block",
+                                    "interpret"))
 def _traced(wdest, ldest, wire_lanes, lidx, lval, *, wire_inits, wire_kinds,
-            num_wire: int, num_left: int, impl: str, block: int,
+            wire_packs, num_wire: int, num_left: int, impl: str, block: int,
             interpret: bool | None):
     if impl == "pallas":
         return route_pack_pallas(wdest, ldest, wire_lanes, wire_inits,
                                  wire_kinds, lidx, lval, num_wire, num_left,
-                                 block=block, interpret=interpret)
+                                 wire_packs=wire_packs, block=block,
+                                 interpret=interpret)
     assert impl == "jnp", impl
-    wire = tuple(_scatter_set(wdest, lane, num_wire, init)
-                 for lane, init in zip(wire_lanes, wire_inits))
+    wire = tuple(
+        _scatter_set(wdest, lane, num_wire, init) if pack == 1
+        else _scatter_or(wdest, lane, num_wire, pack)
+        for lane, init, pack in zip(wire_lanes, wire_inits, wire_packs))
     left_idx = _scatter_set(ldest, lidx, num_left, -1)
     left_val = _scatter_set(ldest, lval, num_left, 0)
     return wire, left_idx, left_val
@@ -58,11 +79,18 @@ def _traced(wdest, ldest, wire_lanes, lidx, lval, *, wire_inits, wire_kinds,
 
 def route_pack(wdest, ldest, wire_lanes, lidx, lval, *, wire_inits,
                wire_kinds, num_wire: int, num_left: int, impl: str = "jnp",
-               block: int = 2048, interpret: bool | None = None):
+               wire_packs=None, block: int = 2048,
+               interpret: bool | None = None):
     """Place every stream entry into the wire block and/or leftover stream
     (see module docstring). Returns ``(wire_lane_arrays, left_idx,
     left_val)``.
     """
+    packs = tuple(wire_packs) if wire_packs else (1,) * len(wire_lanes)
+    for kind, init, pack in zip(wire_kinds, wire_inits, packs):
+        if pack > 1:
+            assert kind == "or" and init == 0 and num_wire % pack == 0, (
+                "packed lanes require kind='or', init=0 and a pack-aligned "
+                "wire block")
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if impl == "ref":
@@ -70,10 +98,10 @@ def route_pack(wdest, ldest, wire_lanes, lidx, lval, *, wire_inits,
             np.asarray(wdest), np.asarray(ldest),
             tuple(np.asarray(l) for l in wire_lanes),
             wire_inits, np.asarray(lidx), np.asarray(lval),
-            num_wire, num_left)
+            num_wire, num_left, wire_packs=packs)
         return (tuple(jnp.asarray(w) for w in wire), jnp.asarray(li),
                 jnp.asarray(lv))
     return _traced(wdest, ldest, tuple(wire_lanes), lidx, lval,
                    wire_inits=tuple(wire_inits), wire_kinds=tuple(wire_kinds),
-                   num_wire=num_wire, num_left=num_left, impl=impl,
-                   block=block, interpret=interpret)
+                   wire_packs=packs, num_wire=num_wire, num_left=num_left,
+                   impl=impl, block=block, interpret=interpret)

@@ -11,6 +11,12 @@ sequential placement order is irrelevant.
 
 Empty wire slots read the per-lane init (the wire format's invalid word /
 key, zero bits); empty leftover slots read ``(NO_IDX, 0)``.
+
+Sub-word payload lanes (``wire_packs[j] = p > 1``): the lane holds codec
+codes pre-shifted to their ``(wdest % p)``-th bitfield, and ``p``
+consecutive wire slots share one output word at ``wdest // p`` — entries
+OR into it (disjoint bitfields, since live wire destinations are unique),
+so the lane's output region has ``num_wire // p`` words.
 """
 from __future__ import annotations
 
@@ -18,18 +24,26 @@ import numpy as np
 
 
 def route_pack_ref(wdest, ldest, wire_lanes, wire_inits, lidx, lval,
-                   num_wire: int, num_left: int):
+                   num_wire: int, num_left: int, wire_packs=None):
     """Sequential per-entry oracle. Returns (wire lane arrays, left_idx,
     left_val) — exactly the fused op's contract."""
     wdest = np.asarray(wdest)
     ldest = np.asarray(ldest)
+    packs = tuple(wire_packs) if wire_packs else (1,) * len(wire_lanes)
     outs = []
-    for lane, init in zip(wire_lanes, wire_inits):
+    for lane, init, pack in zip(wire_lanes, wire_inits, packs):
         lane = np.asarray(lane)
-        out = np.full((num_wire,), init, lane.dtype)
-        for i in range(lane.shape[0]):
-            if 0 <= wdest[i] < num_wire:
-                out[wdest[i]] = lane[i]
+        if pack == 1:
+            out = np.full((num_wire,), init, lane.dtype)
+            for i in range(lane.shape[0]):
+                if 0 <= wdest[i] < num_wire:
+                    out[wdest[i]] = lane[i]
+        else:
+            assert init == 0 and num_wire % pack == 0
+            out = np.zeros((num_wire // pack,), lane.dtype)
+            for i in range(lane.shape[0]):
+                if 0 <= wdest[i] < num_wire:
+                    out[wdest[i] // pack] |= lane[i]
         outs.append(out)
     lidx = np.asarray(lidx)
     lval = np.asarray(lval)

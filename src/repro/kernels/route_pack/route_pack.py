@@ -27,7 +27,14 @@ identity is the empty-slot fill:
     unsigned bit pattern and scatter-maxed against an all-zeros fill (one
     writer per slot, so the max IS the written pattern — bit-exact for any
     float including -0.0, and empty slots read bit pattern 0, the zero
-    fill of the unfused scatters).
+    fill of the unfused scatters),
+  * ``or``   — sub-word codec payload lanes (``wire_packs[j] = p > 1``):
+    ``p`` wire slots share one 32-bit output word; the lane carries codec
+    codes pre-shifted to the ``(wdest % p)``-th bitfield and the kernel
+    segment-SUMS on ``wdest // p`` over ``num_wire / p`` words. Live wire
+    destinations are unique, so the folded bitfields are disjoint and the
+    carry-free sum IS the bitwise OR — exact, order-free placement with
+    the all-zeros fill as identity.
 
 Entries whose destination equals the slot count park in a discard bin, so
 callers never pre-mask lanes. VMEM budget: wire P*K + leftover cap
@@ -44,11 +51,13 @@ import jax.experimental.pallas as pl
 _SEG = {
     "min": jax.ops.segment_min,
     "max": jax.ops.segment_max,
+    "add": jax.ops.segment_sum,
 }
 
 _COMB = {
     "min": jnp.minimum,
     "max": jnp.maximum,
+    "add": jnp.add,
 }
 
 _UINT_OF_WIDTH = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
@@ -70,7 +79,7 @@ def from_bits(b, dtype):
 
 
 def _kernel(*refs, n_lanes: int, num_wire: int, num_left: int,
-            kinds: tuple[str, ...]):
+            kinds: tuple[str, ...], packs: tuple[int, ...]):
     # refs: wdest, ldest, lanes[n_lanes], lidx, lval, inits[n_lanes + 2]
     #       (aliased) | outs[n_lanes + 2]
     wdest_ref, ldest_ref = refs[0], refs[1]
@@ -79,14 +88,21 @@ def _kernel(*refs, n_lanes: int, num_wire: int, num_left: int,
     out_refs = refs[4 + n_lanes + (n_lanes + 2):]
     wd = wdest_ref[...]
     ld = ldest_ref[...]
-    # Wire lanes fold on wdest; the two leftover lanes fold on ldest. Park
-    # bins (id == num slots) are sliced off each block reduction, and the
-    # reduction's empty-segment fill is each kind's combine identity w.r.t.
-    # the resident init, so revisiting the residents across sequential grid
-    # steps is a legal reduction pattern.
+    # Wire lanes fold on wdest (packed lanes on wdest // pack, p slots per
+    # word); the two leftover lanes fold on ldest. Park bins (id == num
+    # slots) are sliced off each block reduction, and the reduction's
+    # empty-segment fill is each kind's combine identity w.r.t. the
+    # resident init, so revisiting the residents across sequential grid
+    # steps is a legal reduction pattern ("add" included: padded/parked
+    # entries land in the park bin, so each live bitfield is summed once).
     for j, (kind, ref) in enumerate(zip(
             kinds, (*lane_refs, lidx_ref, lval_ref))):
-        dest, slots = (wd, num_wire) if j < n_lanes else (ld, num_left)
+        if j < n_lanes:
+            pack = packs[j]
+            dest = wd // pack if pack > 1 else wd
+            slots = num_wire // pack
+        else:
+            dest, slots = ld, num_left
         red = _SEG[kind](ref[...], dest, num_segments=slots + 1)
         out_refs[j][...] = _COMB[kind](out_refs[j][...], red[:slots])
 
@@ -102,6 +118,7 @@ def route_pack_pallas(
     num_wire: int,
     num_left: int,
     *,
+    wire_packs: tuple[int, ...] | None = None,
     block: int = 2048,
     interpret: bool | None = None,
 ):
@@ -113,7 +130,9 @@ def route_pack_pallas(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n_lanes = len(wire_lanes)
-    # "bits" lanes scatter as unsigned patterns (init must be the 0 pattern).
+    packs = tuple(wire_packs) if wire_packs else (1,) * n_lanes
+    # "bits" lanes scatter as unsigned patterns (init must be the 0
+    # pattern); "or" lanes sum disjoint pre-shifted bitfields.
     lanes, kinds, dtypes = [], [], []
     for lane, init, kind in zip(wire_lanes, wire_inits, wire_kinds):
         dtypes.append(lane.dtype)
@@ -121,6 +140,10 @@ def route_pack_pallas(
             assert init == 0, "bits lanes fill with the zero pattern"
             lanes.append(as_bits(lane))
             kinds.append("max")
+        elif kind == "or":
+            assert init == 0, "or lanes fill with the zero pattern"
+            lanes.append(lane)
+            kinds.append("add")
         else:
             lanes.append(lane)
             kinds.append(kind)
@@ -141,18 +164,18 @@ def route_pack_pallas(
         lval_b = jnp.concatenate([lval_b, jnp.zeros((pad,), lval_b.dtype)])
     up = wdest.shape[0]
 
-    inits = [jnp.full((num_wire,), init, lane.dtype)
-             for lane, init in zip(lanes, wire_inits)]
+    inits = [jnp.full((num_wire // pack,), init, lane.dtype)
+             for lane, init, pack in zip(lanes, wire_inits, packs)]
     inits.append(jnp.full((num_left,), -1, lidx.dtype))
     inits.append(jnp.zeros((num_left,), lval_b.dtype))
 
     stream_spec = pl.BlockSpec((block,), lambda i: (i,))
-    wire_spec = pl.BlockSpec((num_wire,), lambda i: (0,))
     left_spec = pl.BlockSpec((num_left,), lambda i: (0,))
-    res_specs = [wire_spec] * n_lanes + [left_spec, left_spec]
+    res_specs = [pl.BlockSpec((num_wire // pack,), lambda i: (0,))
+                 for pack in packs] + [left_spec, left_spec]
 
     kern = functools.partial(_kernel, n_lanes=n_lanes, num_wire=num_wire,
-                             num_left=num_left, kinds=kinds)
+                             num_left=num_left, kinds=kinds, packs=packs)
     outs = pl.pallas_call(
         kern,
         out_shape=tuple(jax.ShapeDtypeStruct(i.shape, i.dtype)

@@ -6,6 +6,15 @@ top-k entries, and the sparse (index, value) streams are summed through
 the paper's cascaded reduction tree (region coalescing merges duplicate
 hot indices before they travel — the Histogram pattern applied to
 gradients). Unselected mass stays in the residual (Stich et al., 2018).
+
+Value quantization shares ``core.codec.PayloadCodec`` with the wire
+format: ``topk_select(codec=...)`` quantizes the selected values through
+decode∘encode and feeds the quantization error back into the same
+error-feedback residual that absorbs the unselected mass — so a bf16/f16
+codec compounds with top-k sparsification without biasing the long-run
+sum. The default (raw32) is bit-for-bit the uncompressed path. Signed
+gradients cannot ride the unsigned integer codecs (u8/u16 are for
+label-valued wire payloads); only raw32/bf16/f16 are accepted here.
 """
 from __future__ import annotations
 
@@ -16,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import (
     CascadeMode,
+    PayloadCodec,
     ReduceOp,
     TascadeConfig,
     WritePolicy,
@@ -42,19 +52,42 @@ def unflatten_like(vec, grads):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def topk_select(vec, ef: EFState, k: int):
-    """Error-feedback top-k: returns (idx, val, new_state)."""
+def topk_select(vec, ef: EFState, k: int,
+                codec: PayloadCodec = PayloadCodec.RAW32):
+    """Error-feedback top-k: returns (idx, val, new_state).
+
+    ``codec`` quantizes the selected values (shared ``core.codec`` machinery
+    with the wire format); the quantization error joins the residual, so it
+    is re-applied on later steps instead of being lost. raw32 (default) is
+    bit-for-bit the unquantized path.
+    """
+    codec = PayloadCodec(codec)
+    assert codec is PayloadCodec.RAW32 or codec.is_float, (
+        f"gradients are signed floats; codec {codec.value} is an unsigned "
+        "integer label codec — use raw32, bf16 or f16")
     acc = vec + ef.residual
     _, idx = jax.lax.top_k(jnp.abs(acc), k)
     val = acc[idx]
-    residual = acc.at[idx].set(0.0)
+    if codec is PayloadCodec.RAW32:
+        residual = acc.at[idx].set(0.0)
+    else:
+        qval = codec.roundtrip(val)
+        # Quantization error stays behind in the residual (error feedback
+        # absorbs BOTH the unselected mass and the codec's rounding).
+        residual = acc.at[idx].set(val - qval)
+        val = qval
     return idx.astype(jnp.int32), val, EFState(residual=residual)
 
 
 def sparse_allreduce_grads(idx, val, dim: int, mesh,
                            cfg: TascadeConfig | None = None):
     """Sum per-device sparse gradients into a dense global vector via the
-    Tascade engine (write-back coalescing). idx/val: [D, k]."""
+    Tascade engine (write-back coalescing). idx/val: [D, k].
+
+    Values already quantized by ``topk_select(codec=...)`` travel bit-exact
+    on the default raw32 wire; alternatively pass a ``cfg`` with
+    ``wire_codec=bf16`` (+ ``codec_error_budget``) to compress transport
+    itself — the engine enforces legality for the ADD reduction."""
     cfg = cfg or TascadeConfig(
         region_axes=("model",), cascade_axes=tuple(
             a for a in mesh.axis_names if a != "model"),

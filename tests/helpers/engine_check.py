@@ -284,6 +284,121 @@ def check_sort_free_level_round(mesh, vpad, u):
               f"all_to_all(s) for {nlev} level(s)")
 
 
+def check_wire_codecs(mesh, ndev):
+    """Payload-codec acceptance (the compressed-wire tentpole):
+
+      * bit-exact tier: u8/u16 wires on integer-valued MIN reductions
+        produce outputs bit-identical to the raw32 wire AND to the direct
+        oracle, while hop_bytes shrinks by the codec's message-width
+        ratio (5/8 for u8, 6/8 for u16),
+      * bounded-error tier: a bf16 ADD reduction lands within the
+        configured codec_error_budget of the direct oracle,
+      * jaxpr legality: with a sub-word codec the lowered step still has
+        ZERO sorts and exactly one all_to_all per level-round, and every
+        all_to_all moves the SHRUNKEN [P, K + K/cpw] block — the wire
+        block itself is narrower, not just the byte accounting.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import PayloadCodec
+
+    vpad, u = 256, 64
+    rng = np.random.default_rng(23)
+
+    def run(op, policy, codec, budget, idx, val):
+        cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                            capacity_ratio=4, policy=policy,
+                            mode=CascadeMode.TASCADE, exchange_slack=2.0,
+                            wire_codec=codec, codec_error_budget=budget)
+        dest = jnp.full((vpad,), op.identity, jnp.float32)
+        return tascade_scatter_reduce(dest, jnp.asarray(idx),
+                                      jnp.asarray(val), op=op, cfg=cfg,
+                                      mesh=mesh, return_stats=True)
+
+    idx = np.minimum(rng.zipf(1.5, size=(ndev, u)).astype(np.int64) - 1,
+                     vpad - 1).astype(np.int32)
+    idx = np.where(rng.random((ndev, u)) < 0.9, idx, -1)
+
+    # Bit-exact tier: integer-valued labels under MIN (BFS hops / CC ids).
+    for codec, hi in ((PayloadCodec.U8, 255), (PayloadCodec.U16, 65535)):
+        val = np.where(idx == -1, 0,
+                       rng.integers(0, hi + 1, size=(ndev, u))
+                       ).astype(np.float32)
+        out0, st0 = run(ReduceOp.MIN, WritePolicy.WRITE_THROUGH,
+                        PayloadCodec.RAW32, 0.0, idx, val)
+        out1, st1 = run(ReduceOp.MIN, WritePolicy.WRITE_THROUGH,
+                        codec, 0.0, idx, val)
+        assert int(st1["overflow"]) == 0 and int(st1["residual"]) == 0
+        np.testing.assert_array_equal(
+            np.asarray(out1), np.asarray(out0),
+            err_msg=f"{codec.value} wire not bit-exact vs raw32")
+        want = direct_reduce(vpad, idx, val, ReduceOp.MIN)
+        np.testing.assert_array_equal(np.asarray(out1, np.float64), want,
+                                      err_msg=f"{codec.value} vs oracle")
+        ratio = float(st1["hop_bytes"]) / float(st0["hop_bytes"])
+        expect = (4 + codec.width_bytes) / 8.0
+        assert abs(ratio - expect) < 0.05, (
+            f"{codec.value}: hop_bytes ratio {ratio:.3f}, expected "
+            f"~{expect:.3f} (4-byte key + {codec.width_bytes}-byte payload "
+            "per message)")
+        print(f"OK codec {codec.value}: bit-exact vs raw32+oracle, "
+              f"hop_bytes x{ratio:.3f} (expect {expect:.3f})")
+
+    # Bounded-error tier: bf16 transport under an explicit budget (ADD —
+    # the PageRank shape: positive mass, write-back coalescing).
+    budget = 2e-2
+    val = np.where(idx == -1, 0,
+                   rng.uniform(0.5, 1.5, size=(ndev, u))).astype(np.float32)
+    out, st = run(ReduceOp.ADD, WritePolicy.WRITE_BACK,
+                  PayloadCodec.BF16, budget, idx, val)
+    assert int(st["overflow"]) == 0 and int(st["residual"]) == 0
+    want = direct_reduce(vpad, idx, val, ReduceOp.ADD)
+    np.testing.assert_allclose(np.asarray(out, np.float64), want,
+                               rtol=budget, atol=budget,
+                               err_msg="bf16 wire exceeded its error budget")
+    print(f"OK codec bf16: within budget {budget} of the oracle")
+
+    # Jaxpr: the codec level's collective operand is the shrunken block.
+    geom = MeshGeom.from_mesh(mesh, vpad)
+    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                        capacity_ratio=4, mode=CascadeMode.TASCADE,
+                        wire_codec=PayloadCodec.U8)
+    engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=u)
+    nlev = len(engine.levels)
+    assert all(s.fmt is not None and s.fmt.codec is PayloadCodec.U8
+               and s.bucket_cap % 4 == 0 for s in engine.levels)
+
+    def shard_fn(dest, idx, val):
+        state = engine.init_state()
+        new = UpdateStream(idx.reshape(-1), val.reshape(-1))
+        state, dest, stats = engine.step(state, dest.reshape(-1), new)
+        return dest
+
+    axes = tuple(mesh.axis_names)
+    fn = compat.shard_map(shard_fn, mesh=mesh,
+                          in_specs=(P(axes), P(axes), P(axes)),
+                          out_specs=P(axes), check_vma=False)
+    jaxpr = jax.make_jaxpr(fn)(
+        jnp.zeros((vpad,), jnp.float32),
+        jnp.zeros((8, u), jnp.int32),
+        jnp.zeros((8, u), jnp.float32),
+    ).jaxpr
+    assert count_sorts(jaxpr) == 0, "codec wire reintroduced a sort"
+    assert count_primitive(jaxpr, "all_to_all") == nlev
+    got = sorted(tuple(eqn.invars[0].aval.shape)
+                 for jp in iter_jaxprs(jaxpr) for eqn in jp.eqns
+                 if eqn.primitive.name == "all_to_all")
+    expect_shapes = sorted(
+        (s.num_peers, s.bucket_cap + s.bucket_cap // 4)
+        for s in engine.levels)
+    assert got == expect_shapes, (
+        f"u8 all_to_all operands {got} != expected shrunken blocks "
+        f"{expect_shapes} — the wire itself must narrow, not just the "
+        "accounting")
+    print(f"OK codec jaxpr: {nlev} shrunken all_to_all block(s) "
+          f"{expect_shapes}, 0 sorts")
+
+
 def check_overflow_accounting(mesh, ndev):
     """EngineState.overflow is an exact audit: with all-ones ADD updates and
     no coalescing (OWNER_DIRECT), every dropped update removes exactly 1.0
@@ -320,6 +435,7 @@ def main():
     check_route_pack_fusion(mesh, vpad=2048, u=16)
     check_overflow_accounting(mesh, ndev)
     check_batched_drain(mesh, ndev)
+    check_wire_codecs(mesh, ndev)
 
     # Full {ADD,MIN,MAX} x {WT,WB} x mode product: the fused pipeline must be
     # root-equivalent to a direct reduction for every configuration.

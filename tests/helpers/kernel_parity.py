@@ -241,19 +241,32 @@ _RP_CASES = tuple(
     for kind in ("paired", "unpacked", "word64")
     for u, P, K, C, block in ((48, 4, 5, 16, 16), (300, 8, 16, 64, 128),
                               (1024, 4, 64, 300, 1024))
+) + tuple(
+    # Sub-word codec payload lanes: cpw codes OR into one 32-bit word at
+    # wdest // cpw (K is cpw-aligned, as route_and_pack requires).
+    {"kind": kind, "u": u, "P": P, "K": K, "C": C, "block": block}
+    for kind in ("packed2", "packed4")
+    for u, P, K, C, block in ((48, 4, 8, 16, 16), (300, 8, 16, 64, 128),
+                              (1024, 4, 64, 300, 1024))
 )
 
 _RP_IDX_BITS = 12
 
+_RP_CPW = {"packed2": 2, "packed4": 4}
+
 
 def _rp_layout(case):
-    """Static lane layout for a route-pack case."""
+    """Static lane layout for a route-pack case: (inits, kinds, packs,
+    invalid key)."""
     inv_key = case["P"] << _RP_IDX_BITS
     if case["kind"] == "word64":
-        return (inv_key << 32,), ("min",), inv_key
+        return (inv_key << 32,), ("min",), None, inv_key
     if case["kind"] == "paired":
-        return (inv_key, 0), ("min", "bits"), inv_key
-    return (-1, 0), ("max", "bits"), inv_key
+        return (inv_key, 0), ("min", "bits"), None, inv_key
+    if case["kind"] in _RP_CPW:
+        return (inv_key, 0), ("min", "or"), (1, _RP_CPW[case["kind"]]), \
+            inv_key
+    return (-1, 0), ("max", "bits"), None, inv_key
 
 
 def _rp_make(rng, case):
@@ -279,6 +292,15 @@ def _rp_make(rng, case):
         lanes = (word,)
     elif case["kind"] == "paired":
         lanes = (key, bits)
+    elif case["kind"] in _RP_CPW:
+        # Codec codes pre-shifted to their (wdest % cpw)-th bitfield —
+        # parked entries (wdest == num_wire, a cpw multiple) shift by 0 and
+        # land in the park bin regardless.
+        cpw = _RP_CPW[case["kind"]]
+        cb = 32 // cpw
+        code = rng.integers(0, 1 << cb, u).astype(np.uint32)
+        sub = (wdest % cpw).astype(np.uint32) * np.uint32(cb)
+        lanes = (key, (code << sub).astype(np.int32))
     else:
         lanes = (key, val)
     return {"wdest": wdest, "ldest": ldest, "lanes": lanes,
@@ -289,12 +311,12 @@ def _rp_make(rng, case):
 def _rp_run(impl, inputs, case):
     from repro.kernels.route_pack.ops import route_pack
 
-    inits, kinds, _ = _rp_layout(case)
+    inits, kinds, packs, _ = _rp_layout(case)
     wire, li, lv = route_pack(
         jnp.asarray(inputs["wdest"]), jnp.asarray(inputs["ldest"]),
         tuple(jnp.asarray(l) for l in inputs["lanes"]),
         jnp.asarray(inputs["lidx"]), jnp.asarray(inputs["lval"]),
-        wire_inits=inits, wire_kinds=kinds,
+        wire_inits=inits, wire_kinds=kinds, wire_packs=packs,
         num_wire=case["P"] * case["K"], num_left=case["C"], impl=impl,
         block=case["block"], interpret=True)
     return (*wire, li, lv)
@@ -303,10 +325,11 @@ def _rp_run(impl, inputs, case):
 def _rp_ref(inputs, case):
     from repro.kernels.route_pack.ref import route_pack_ref
 
-    inits, _, _ = _rp_layout(case)
+    inits, _, packs, _ = _rp_layout(case)
     wire, li, lv = route_pack_ref(
         inputs["wdest"], inputs["ldest"], inputs["lanes"], inits,
-        inputs["lidx"], inputs["lval"], case["P"] * case["K"], case["C"])
+        inputs["lidx"], inputs["lval"], case["P"] * case["K"], case["C"],
+        wire_packs=packs)
     return (*wire, li, lv)
 
 

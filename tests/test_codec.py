@@ -1,0 +1,249 @@
+"""Unit tests for the shared payload codecs (``core.codec``).
+
+The two exactness tiers from the module contract, pinned directly:
+
+  * bit-exact — raw32 round-trips arbitrary IEEE bits (incl. -0.0 / inf /
+    NaN); u8/u16 are the identity on integer-valued payloads in
+    ``[0, max_int]`` and clip-saturate outside it,
+  * bounded-error — bf16/f16 round-trip within ``rel_error_bound * |v|``.
+
+Plus the two consumers:
+
+  * the wire — a ``route_and_pack`` → ``wire_to_stream`` round trip per
+    codec delivers the coalesced stream bit-identically to the raw32 wire
+    while the wire block itself shrinks by ``codes_per_word``,
+  * the gradient compressor — ``topk_select`` with codec=raw32 is
+    bit-for-bit the legacy path (regression), and a float codec feeds its
+    quantization error into the error-feedback residual.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import PayloadCodec, ReduceOp
+from repro.core import exchange as ex
+from repro.core.types import UpdateStream, make_stream, wire_format_for
+from repro.optim.grad_compress import EFState, topk_select
+
+ALL = list(PayloadCodec)
+NARROW = [PayloadCodec.U8, PayloadCodec.U16, PayloadCodec.BF16,
+          PayloadCodec.F16]
+
+
+# --------------------------------------------------------------- geometry
+
+def test_codec_geometry():
+    for c in ALL:
+        assert c.width_bytes * c.codes_per_word == 4
+        assert c.code_bits == 8 * c.width_bytes
+        assert c.code_mask == (1 << c.code_bits) - 1
+    assert PayloadCodec.U8.codes_per_word == 4
+    assert PayloadCodec.U16.codes_per_word == 2
+    assert PayloadCodec.BF16.codes_per_word == 2
+    assert PayloadCodec.RAW32.codes_per_word == 1
+    assert PayloadCodec("u8") is PayloadCodec.U8  # string coercion
+
+
+# ------------------------------------------------------- round-trip: exact
+
+def test_raw32_roundtrip_arbitrary_bits():
+    """raw32 is the identity on BITS — including -0.0, infs, NaN payloads
+    and denormals."""
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 1 << 32, size=256, dtype=np.uint64).astype(
+        np.uint32)
+    special = np.array([0.0, -0.0, np.inf, -np.inf, np.nan, 1e-40],
+                       np.float32).view(np.uint32)
+    bits = np.concatenate([bits, special])
+    val = jnp.asarray(bits).view(jnp.float32)
+    out = PayloadCodec.RAW32.roundtrip(val)
+    np.testing.assert_array_equal(np.asarray(out).view(np.uint32), bits)
+    code = PayloadCodec.RAW32.encode(val)
+    assert code.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(code), bits)
+
+
+@pytest.mark.parametrize("codec", [PayloadCodec.U8, PayloadCodec.U16])
+def test_integer_codec_roundtrip_exact(codec):
+    """decode∘encode is the identity on every in-range integer value."""
+    if codec is PayloadCodec.U8:
+        ints = np.arange(256)
+    else:
+        rng = np.random.default_rng(1)
+        ints = np.unique(np.concatenate(
+            [rng.integers(0, 65536, 512), [0, 1, 65534, 65535]]))
+    val = jnp.asarray(ints, jnp.float32)
+    code = codec.encode(val)
+    assert code.dtype == jnp.uint32
+    assert int(jnp.max(code)) <= codec.code_mask
+    np.testing.assert_array_equal(np.asarray(codec.decode(code)),
+                                  ints.astype(np.float32))
+
+
+def test_integer_codec_clips_out_of_range():
+    """Outside the contractual domain the codecs saturate (never wrap) —
+    this is why the engine refuses them for ADD."""
+    v = jnp.asarray([-3.0, 0.4, 0.6, 255.0, 256.0, 1e9], jnp.float32)
+    out = np.asarray(PayloadCodec.U8.roundtrip(v))
+    np.testing.assert_array_equal(out, [0.0, 0.0, 1.0, 255.0, 255.0, 255.0])
+    out16 = np.asarray(PayloadCodec.U16.roundtrip(
+        jnp.asarray([65535.0, 65536.0, -1.0], jnp.float32)))
+    np.testing.assert_array_equal(out16, [65535.0, 65535.0, 0.0])
+
+
+# ----------------------------------------------- round-trip: bounded-error
+
+@pytest.mark.parametrize("codec", [PayloadCodec.BF16, PayloadCodec.F16])
+def test_float_codec_error_bound(codec):
+    """One encode stays within the advertised relative bound on
+    normal-range values, signs included."""
+    rng = np.random.default_rng(2)
+    v = np.concatenate([
+        rng.uniform(-100.0, 100.0, 512),
+        rng.uniform(-1e-3, 1e-3, 128),
+        [0.0, 1.0, -1.0, 3.14159, 1e4, -1e4],
+    ]).astype(np.float32)
+    out = np.asarray(codec.roundtrip(jnp.asarray(v)), np.float64)
+    err = np.abs(out - v.astype(np.float64))
+    # Below the target format's min normal the bound is absolute (half a
+    # subnormal step), not relative: 2^-25 for f16, 2^-134 for bf16.
+    atol = 2.0 ** -25 if codec is PayloadCodec.F16 else 2.0 ** -134
+    assert np.all(err <= codec.rel_error_bound * np.abs(v) + atol), (
+        codec, float(np.max(err)))
+    # Small integers ride exactly (BFS-style payloads under a float codec).
+    small = jnp.asarray(np.arange(codec.max_int + 1), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(codec.roundtrip(small)),
+                                  np.asarray(small))
+
+
+# ----------------------------------------------------------------- legality
+
+def test_check_legal_matrix():
+    for c in ALL:
+        c.check_legal(ReduceOp.MIN, error_budget=1.0)  # all legal w/ budget
+    PayloadCodec.RAW32.check_legal(ReduceOp.ADD)
+    for c in (PayloadCodec.U8, PayloadCodec.U16):
+        c.check_legal(ReduceOp.MIN)
+        c.check_legal(ReduceOp.MAX)
+        c.check_legal("min")  # raw string ops accepted
+        with pytest.raises(ValueError, match="clip-saturate"):
+            c.check_legal(ReduceOp.ADD)
+    for c in (PayloadCodec.BF16, PayloadCodec.F16):
+        c.check_legal(ReduceOp.ADD, error_budget=1e-2)
+        with pytest.raises(ValueError, match="budget"):
+            c.check_legal(ReduceOp.ADD)
+        with pytest.raises(ValueError, match="budget"):
+            c.check_legal(ReduceOp.ADD, error_budget=0.0)
+
+
+# ------------------------------------------------------- the wire consumer
+
+def _int_stream(rng, n, u, hi, frac_valid=0.85):
+    idx = rng.integers(0, n, size=u).astype(np.int32)
+    idx = np.where(rng.random(u) < frac_valid, idx, -1)
+    val = rng.integers(0, hi + 1, size=u).astype(np.float32)
+    val = np.where(idx == -1, 0, val)
+    return UpdateStream(jnp.asarray(idx), jnp.asarray(val))
+
+
+def _live(stream, fmt, P, K):
+    s = ex.wire_to_stream(stream, fmt)
+    idx = np.asarray(s.idx).reshape(-1)
+    val = np.asarray(s.val).reshape(-1)
+    return {int(i): v.tobytes() for i, v in zip(idx, val) if i != -1}
+
+
+@pytest.mark.parametrize("pack_impl", ["jnp", "pallas"])
+@pytest.mark.parametrize("codec", [PayloadCodec.U8, PayloadCodec.U16,
+                                   PayloadCodec.BF16])
+def test_wire_codec_roundtrip_vs_raw32(codec, pack_impl):
+    """The codec wire delivers the identical live (idx -> value-bits) map
+    as the raw32 wire — integer payloads ride any codec bit-exactly after
+    coalescing (live destinations are unique) — while the exchanged block
+    shrinks from [P, 2K] to [P, K + K/codes_per_word]."""
+    rng = np.random.default_rng(7)
+    n, u, P, K = 97, 64, 4, 16
+    hi = min(codec.max_int, 255)
+    new = _int_stream(rng, n, u, hi)
+
+    def route(c):
+        fmt = wire_format_for(P, n, codec=c)
+        assert fmt is not None and fmt.codec is c
+        r = ex.route_and_pack(
+            make_stream(u, counted=True), new, lambda i: i % P, P, K,
+            op=ReduceOp.MIN, coalesce=True, fmt=fmt, num_elements=n,
+            pack_impl=pack_impl, pallas_interpret=True)
+        return r, fmt
+
+    r0, fmt0 = route(PayloadCodec.RAW32)
+    r1, fmt1 = route(codec)
+    cpw = codec.codes_per_word
+    assert r0.wire.shape == (P, 2 * K)
+    assert r1.wire.shape == (P, K + K // cpw)
+    assert int(r1.n_sent) == int(r0.n_sent)
+    assert _live(r1.wire, fmt1, P, K) == _live(r0.wire, fmt0, P, K)
+    # Leftover stream is codec-independent (values never leave the device).
+    np.testing.assert_array_equal(np.asarray(r1.leftover.idx),
+                                  np.asarray(r0.leftover.idx))
+    np.testing.assert_array_equal(np.asarray(r1.leftover.val),
+                                  np.asarray(r0.leftover.val))
+
+
+def test_wire_codec_bucket_cap_must_align():
+    """Sub-word wires need bucket_cap % codes_per_word == 0 (the engine
+    rounds caps up; direct callers get the assert)."""
+    rng = np.random.default_rng(3)
+    new = _int_stream(rng, 64, 16, 200)
+    fmt = wire_format_for(4, 64, codec=PayloadCodec.U8)
+    with pytest.raises(AssertionError):
+        ex.route_and_pack(make_stream(16, counted=True), new,
+                          lambda i: i % 4, 4, 13, op=ReduceOp.MIN,
+                          coalesce=True, fmt=fmt, num_elements=64)
+
+
+# --------------------------------------------- the grad-compress consumer
+
+def test_topk_select_raw32_regression():
+    """codec=raw32 (the default) is bit-for-bit the legacy error-feedback
+    top-k: selected values leave uncompressed, residual zeroed at the
+    selected slots and untouched elsewhere."""
+    rng = np.random.default_rng(11)
+    vec = jnp.asarray(rng.standard_normal(128), jnp.float32)
+    res = jnp.asarray(rng.standard_normal(128) * 0.1, jnp.float32)
+    k = 16
+    idx, val, st = topk_select(vec, EFState(residual=res), k)
+
+    acc = np.asarray(vec) + np.asarray(res)
+    order = np.argsort(-np.abs(acc), kind="stable")[:k]
+    np.testing.assert_array_equal(np.sort(np.asarray(idx)), np.sort(order))
+    np.testing.assert_array_equal(np.asarray(val), acc[np.asarray(idx)])
+    want_res = acc.copy()
+    want_res[np.asarray(idx)] = 0.0
+    np.testing.assert_array_equal(np.asarray(st.residual), want_res)
+
+
+def test_topk_select_float_codec_error_feedback():
+    """A float codec quantizes the selected values and parks the rounding
+    error in the residual — no mass is lost (acc == val + residual at the
+    selected slots, bitwise)."""
+    rng = np.random.default_rng(13)
+    vec = jnp.asarray(rng.standard_normal(128) * 3, jnp.float32)
+    res = jnp.zeros((128,), jnp.float32)
+    idx, val, st = topk_select(vec, EFState(residual=res), 16,
+                               codec=PayloadCodec.BF16)
+    acc = np.asarray(vec)
+    iv = np.asarray(idx)
+    qv = np.asarray(val, np.float64)
+    rv = np.asarray(st.residual)
+    want_q = np.asarray(PayloadCodec.BF16.roundtrip(jnp.asarray(acc[iv])))
+    np.testing.assert_array_equal(np.asarray(val), want_q)
+    np.testing.assert_array_equal(rv[iv], acc[iv] - want_q)
+    err = np.abs(qv - acc[iv])
+    assert np.all(err <= PayloadCodec.BF16.rel_error_bound * np.abs(acc[iv]))
+
+
+def test_topk_select_rejects_integer_codecs():
+    vec = jnp.zeros((8,), jnp.float32)
+    with pytest.raises(AssertionError, match="unsigned"):
+        topk_select(vec, EFState(residual=vec), 2, codec=PayloadCodec.U8)

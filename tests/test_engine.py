@@ -14,8 +14,11 @@ import jax.numpy as jnp
 
 from repro.core import (
     CascadeMode,
+    MeshGeom,
+    PayloadCodec,
     ReduceOp,
     TascadeConfig,
+    TascadeEngine,
     WritePolicy,
     compat,
     tascade_scatter_reduce,
@@ -38,6 +41,50 @@ def test_single_device_degenerate():
     out = np.asarray(out)
     assert out[3] == 0.5 and out[5] == 7.0 and out[31] == 4.0 and out[0] == 9.0
     assert np.isinf(out[1])
+
+
+def test_codec_legality_gate():
+    """Fast-tier codec legality: the engine rejects illegal codec/op pairs at
+    construction time (before any mesh communication), so a misconfigured
+    codec can never silently corrupt a reduction. Runs on a 1x1 mesh — the
+    legality check deliberately fires even when no wire level exists."""
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
+    geom = MeshGeom.from_mesh(mesh, 64)
+
+    def build(op, codec, budget=0.0, dtype=jnp.float32):
+        cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                            mode=CascadeMode.TASCADE, wire_codec=codec,
+                            codec_error_budget=budget)
+        return TascadeEngine(cfg, geom, op, update_cap=8, dtype=dtype)
+
+    # Integer codecs saturate under clip: fine for MIN/MAX, illegal for ADD.
+    build(ReduceOp.MIN, PayloadCodec.U8)
+    build(ReduceOp.MAX, PayloadCodec.U16)
+    with pytest.raises(ValueError, match="u8"):
+        build(ReduceOp.ADD, PayloadCodec.U8)
+    with pytest.raises(ValueError, match="u16"):
+        build(ReduceOp.ADD, PayloadCodec.U16)
+
+    # Lossy float codecs demand an explicit error budget.
+    with pytest.raises(ValueError, match="budget"):
+        build(ReduceOp.ADD, PayloadCodec.BF16)
+    build(ReduceOp.ADD, PayloadCodec.BF16, budget=1e-2)
+    build(ReduceOp.MIN, PayloadCodec.F16, budget=1e-3)
+
+    # Narrow codecs only re-interpret 4-byte payload words.
+    with pytest.raises(ValueError):
+        build(ReduceOp.MIN, PayloadCodec.U8, dtype=jnp.float16)
+
+    # A negative budget is rejected at config level.
+    with pytest.raises(ValueError, match="budget"):
+        TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                      codec_error_budget=-0.5)
+
+    # String coercion mirrors the rest of the config enums.
+    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                        wire_codec="u16")
+    assert cfg.wire_codec is PayloadCodec.U16
 
 
 @pytest.mark.parametrize("devices,script", [

@@ -1,0 +1,96 @@
+"""Boundary tests for ``types.wire_format_for`` — the packed-wire gate.
+
+The packed key is ``(peer << idx_bits) | idx`` and must stay a
+non-negative int32 INCLUDING the invalid bin at ``peer == num_peers``, so
+the representability condition is ``(num_peers + 1) << idx_bits <= 2**31``.
+These tests pin that edge exactly (one peer more / one idx bit more flips
+the answer), the idx_bits derivation, the word64 realization switch (x64
+on/off, raw32-only), and the non-4-byte-dtype fallback.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PayloadCodec
+from repro.core.types import wire_format_for
+
+
+def test_idx_bits_derivation():
+    """idx_bits covers num_elements - 1, floor 1 bit."""
+    for n, bits in ((1, 1), (2, 1), (3, 2), (4, 2), (5, 3),
+                    (256, 8), (257, 9), (1 << 20, 20)):
+        fmt = wire_format_for(2, n)
+        assert fmt is not None and fmt.idx_bits == bits, (n, bits)
+        assert fmt.idx_mask == (1 << bits) - 1
+        assert fmt.invalid_key == 2 << bits
+
+
+def test_key_fits_31_bit_boundary():
+    """Exactly at the limit the format exists; one step past it, None."""
+    # 1 peer (+1 invalid) x 30 idx bits: (1+1) << 30 == 2**31 — fits.
+    fmt = wire_format_for(1, 1 << 30)
+    assert fmt is not None and fmt.idx_bits == 30
+    assert fmt.invalid_key == 1 << 30 < 2**31
+    # One more idx bit overflows the sign bit.
+    assert wire_format_for(1, (1 << 30) + 1) is None
+
+    # Peer-count edge at fixed 24 idx bits: (P+1) << 24 <= 2**31
+    # iff P <= 127.
+    n = 1 << 24
+    fmt = wire_format_for(127, n)
+    assert fmt is not None and fmt.num_peers == 127
+    # The sentinel key itself stays a valid int32; the (P+1) headroom
+    # term is what makes the boundary (128 << 24 == 2**31 exactly).
+    assert fmt.invalid_key == 127 << 24 < 2**31
+    assert wire_format_for(128, n) is None
+
+
+def test_num_peers_plus_one_invalid_bin_is_counted():
+    """The invalid bin (peer == num_peers) must itself be representable:
+    a peer count whose LIVE keys all fit still gets None when the
+    sentinel bin would wrap negative."""
+    n = 1 << 23  # 23 idx bits
+    # live keys fit for P = 255: 255 << 23 < 2**31; but the sentinel at
+    # 256 << 23 == 2**31 would be INT32_MIN — rejected.
+    assert (255 << 23) < 2**31 <= (256 << 23)
+    assert wire_format_for(255, n) is not None
+    assert wire_format_for(256, n) is None
+
+
+def test_dtype_gate():
+    """Non-4-byte working dtypes cannot ride the packed word."""
+    assert wire_format_for(4, 64, dtype=jnp.float16) is None
+    assert wire_format_for(4, 64, dtype=jnp.float64) is None
+    assert wire_format_for(4, 64, dtype=jnp.int32) is not None
+
+
+def test_word64_realization_switch():
+    """word64 follows x64 availability and is raw32-only."""
+    x64_was = jax.config.jax_enable_x64
+    try:
+        jax.config.update("jax_enable_x64", False)
+        fmt = wire_format_for(4, 64)
+        assert fmt is not None and not fmt.word64
+        assert fmt.msg_bytes == 8
+
+        jax.config.update("jax_enable_x64", True)
+        fmt = wire_format_for(4, 64)
+        assert fmt is not None and fmt.word64
+        assert fmt.msg_bytes == 8  # realization, not cost, changes
+
+        # Sub-word codecs pack two/four codes per payload word — the u64
+        # fused realization doesn't exist for them even under x64.
+        for codec, mb in ((PayloadCodec.U8, 5), (PayloadCodec.U16, 6),
+                          (PayloadCodec.BF16, 6), (PayloadCodec.F16, 6)):
+            fmt = wire_format_for(4, 64, codec=codec)
+            assert fmt is not None and not fmt.word64
+            assert fmt.codec is codec and fmt.msg_bytes == mb
+    finally:
+        jax.config.update("jax_enable_x64", x64_was)
+
+
+def test_codec_string_coercion():
+    fmt = wire_format_for(4, 64, codec="u16")
+    assert fmt is not None and fmt.codec is PayloadCodec.U16

@@ -1,0 +1,102 @@
+"""Offline line-coverage estimator for the fast test tier.
+
+pytest-cov is not installable in the offline dev container, so the CI
+coverage floor (``--cov-fail-under`` in .github/workflows/ci.yml) could
+not be measured before pushing — the original floor was a deliberate
+under-bid. This tool approximates ``--cov=repro`` line coverage with a
+stdlib ``sys.settrace`` hook so the floor can be ratcheted from a local
+measurement:
+
+  * a global trace installs a line-recording local trace ONLY for frames
+    whose code lives under ``src/repro`` (everything else runs untraced,
+    keeping the overhead tolerable),
+  * executable lines per file come from the compiled code objects'
+    ``co_lines()`` tables (walked recursively through nested functions /
+    comprehensions / class bodies), for every file under ``src/repro`` —
+    including files the test run never imports, matching coverage.py's
+    source-scan behavior,
+  * subprocess helpers (the fake-device engine checks, examples) execute
+    outside the traced process — exactly as they do under CI's pytest-cov
+    invocation, which does not configure subprocess coverage — so the
+    estimate and the CI figure undercount the same paths.
+
+Differences vs coverage.py remain (AST-based statement counting vs
+bytecode line tables, docstring handling), so treat the result as an
+estimate with a few points of slack — ratchet the CI floor to a margin
+BELOW the printed total, never to the total itself.
+
+Usage:
+  PYTHONPATH=src python tools/cov_estimate.py [pytest args]
+  # default pytest args: -q -m "not slow" tests
+"""
+from __future__ import annotations
+
+import sys
+import threading
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src" / "repro"
+
+_covered: dict[str, set[int]] = {}
+
+
+def _local_trace(frame, event, arg):
+    if event == "line":
+        _covered[frame.f_code.co_filename].add(frame.f_lineno)
+    return _local_trace
+
+
+def _global_trace(frame, event, arg):
+    fn = frame.f_code.co_filename
+    if fn.startswith(str(SRC)):
+        _covered.setdefault(fn, set()).add(frame.f_lineno)
+        return _local_trace
+    return None
+
+
+def executable_lines(path: Path) -> set[int]:
+    """Line numbers carrying bytecode anywhere in the file (nested code
+    objects included) — the denominator coverage.py calls 'statements'."""
+    code = compile(path.read_text(), str(path), "exec")
+    lines: set[int] = set()
+    stack = [code]
+    while stack:
+        c = stack.pop()
+        lines.update(l for *_, l in c.co_lines() if l is not None and l > 0)
+        stack.extend(k for k in c.co_consts if isinstance(k, type(code)))
+    return lines
+
+
+def main(argv: list[str]) -> int:
+    import pytest
+
+    args = argv or ["-q", "-m", "not slow", str(REPO / "tests")]
+    threading.settrace(_global_trace)
+    sys.settrace(_global_trace)
+    try:
+        rc = pytest.main(args)
+    finally:
+        sys.settrace(None)
+        threading.settrace(None)
+
+    total_exec = total_cov = 0
+    print(f"\n{'file':52s} {'lines':>6s} {'hit':>6s} {'pct':>7s}")
+    for path in sorted(SRC.rglob("*.py")):
+        ex = executable_lines(path)
+        hit = _covered.get(str(path), set()) & ex
+        total_exec += len(ex)
+        total_cov += len(hit)
+        rel = str(path.relative_to(REPO))
+        print(f"{rel:52s} {len(ex):6d} {len(hit):6d} "
+              f"{100.0 * len(hit) / max(len(ex), 1):6.1f}%")
+    pct = 100.0 * total_cov / max(total_exec, 1)
+    print(f"\nESTIMATED fast-tier line coverage: {pct:.1f}% "
+          f"({total_cov}/{total_exec} lines; pytest exit code {rc})")
+    print("Ratchet ci.yml --cov-fail-under to a margin BELOW this figure "
+          "(trace-based estimate, not a coverage.py measurement).")
+    return int(rc)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
