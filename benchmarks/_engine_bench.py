@@ -232,6 +232,58 @@ def main():
             f"speedup_x={tput_b / max(tput_s, 1e-12):.2f};"
             f"epochs={int(mb.epochs)};lanes_bitequal={bitequal}")
 
+    # ---- fig_faults: self-healing exchange under injected wire faults ----
+    # A seeded FaultPlan (deterministic per (level, epoch, edge)) injects
+    # 5% bucket drop + 2% corruption + 2% duplication + 2% one-round delay
+    # on every level's wire. Per app, a CLEAN sibling (same config + the
+    # runtime auditor, plan disabled) anchors two machine-independent
+    # gates in run.py:
+    #   * clean traffic must be byte-identical to the plain fig4/fig3
+    #     TASCADE rows (the fault machinery + auditor are statically gated
+    #     out of the fault-free wire);
+    #   * faulted rows gate on recovery fidelity — bitequal=1 for MIN apps
+    #     (idempotent re-delivery), within_budget for PageRank (ADD
+    #     re-association under retransmission), extra_epochs bounded,
+    #     retransmits > 0 — and NEVER on wall-clock: recovery rounds
+    #     legitimately stretch the schedule.
+    from repro.core import FaultPlan
+
+    plan = FaultPlan(seed=7, drop_rate=0.05, corrupt_rate=0.02,
+                     dup_rate=0.02, delay_rate=0.02)
+    fault_apps = (
+        ("bfs", lambda c: apps.run_bfs(mesh, sg, root, c), True),
+        ("sssp", lambda c: apps.run_sssp(mesh, sg, root, c), True),
+        ("wcc", lambda c: apps.run_wcc(mesh, sgsym, c), True),
+        ("pagerank", lambda c: apps.run_pagerank(mesh, sg, c, iters=5),
+         False),
+    )
+    rebudget = 1e-4  # ADD re-association budget under recovery
+    for app_name, runner, exact in fault_apps:
+        cfg_clean = dataclasses.replace(cfg_for(CascadeMode.TASCADE),
+                                        audit=True)
+        cfg_fault = dataclasses.replace(cfg_clean, fault_plan=plan,
+                                        codec_error_budget=rebudget)
+        us_c, (res_c, mc) = timed(runner, cfg_clean)
+        row(f"fig_faults/{app_name}/clean", us_c,
+            f"hop_bytes={float(mc.hop_bytes):.0f};msgs={int(mc.sent_total)};"
+            f"epochs={int(mc.epochs)};retransmits={int(mc.retransmits)}")
+        us_f, (res_f, mf) = timed(runner, cfg_fault)
+        extra = int(mf.epochs) - int(mc.epochs)
+        if exact:
+            fid = ("bitequal="
+                   f"{int(np.array_equal(np.asarray(res_f), np.asarray(res_c)))}")
+        else:
+            a = np.asarray(res_f, np.float64)
+            b = np.asarray(res_c, np.float64)
+            rel = float(np.max(np.abs(a - b) /
+                               np.maximum(np.abs(b), 1e-12)))
+            fid = (f"max_rel_err={rel:.2e};budget={rebudget};"
+                   f"within_budget={int(rel <= rebudget)}")
+        row(f"fig_faults/{app_name}/faulted", us_f,
+            f"hop_bytes={float(mf.hop_bytes):.0f};msgs={int(mf.sent_total)};"
+            f"epochs={int(mf.epochs)};extra_epochs={extra};"
+            f"retransmits={int(mf.retransmits)};{fid}")
+
     # ---- Fig. 5: proxy region size (region axis width) ----
     for shape, axes, region in (((ndev, 1), ("data", "model"), 1),
                                 ((ndev // 2, 2), ("data", "model"), 2),

@@ -41,7 +41,9 @@ def _parse_derived(derived: str) -> dict:
                        ("scatter_ops", "scatter_ops"),
                        ("wire_x", "wire_x"), ("bitequal", "bitequal"),
                        ("within_budget", "within_budget"),
-                       ("max_rel_err", "max_rel_err")):
+                       ("max_rel_err", "max_rel_err"),
+                       ("extra_epochs", "extra_epochs"),
+                       ("retransmits", "retransmits")):
         m = re.search(rf"{key}=(-?[\d.]+(?:e[+-]?\d+)?)", derived)
         if m:
             out[alias] = float(m.group(1))
@@ -227,6 +229,68 @@ def codec_row_gates(rows: list[dict]) -> list[str]:
     return out
 
 
+def fault_row_gates(rows: list[dict]) -> list[str]:
+    """Cross-row gates for the self-healing exchange rows (``fig_faults/*``),
+    all machine-independent — faulted rows are NEVER gated on wall-clock
+    (recovery rounds legitimately stretch the schedule):
+
+      * each ``fig_faults/<app>/clean`` row (same config + runtime auditor,
+        FaultPlan disabled) must carry traffic BYTE-IDENTICAL to its plain
+        fig4/fig3 TASCADE sibling — the fault machinery and the auditor
+        must be statically absent from the fault-free wire — and report
+        zero retransmits;
+      * each ``fig_faults/<app>/faulted`` row must keep its fidelity flag
+        green (``bitequal=1`` for the MIN apps, ``within_budget=1`` for
+        PageRank's ADD re-association budget), must have actually exercised
+        recovery (``retransmits`` > 0), and its ``extra_epochs`` must stay
+        within 4x the clean epoch count + 16 (bounded recovery stretch, not
+        an unbounded liveness stall).
+    """
+    by_name = {r["name"]: r for r in rows}
+    out: list[str] = []
+    for r in rows:
+        if not r["name"].startswith("fig_faults/"):
+            continue
+        app = r["name"].split("/")[1]
+        if r["name"].endswith("/clean"):
+            sib = by_name.get(f"fig4/{app}/tascade")
+            if sib is None:  # wcc lives in the fig3 scaling family
+                sib = next((x for x in rows
+                            if x["name"].startswith(f"fig3/{app}/tascade/")),
+                           None)
+            if sib is None:
+                out.append(f"{r['name']}: plain TASCADE sibling row missing")
+                continue
+            for key in ("sent", "hop_bytes"):
+                if r.get(key) != sib.get(key):
+                    out.append(
+                        f"{r['name']}: {key} {r.get(key)} != fault-free "
+                        f"sibling {sib['name']}'s {sib.get(key)} (the "
+                        "disabled fault path must be byte-identical)")
+            if r.get("retransmits", 0) != 0:
+                out.append(f"{r['name']}: clean run reported retransmits")
+        elif r["name"].endswith("/faulted"):
+            if "bitequal=0" in r.get("derived", ""):
+                out.append(f"{r['name']}: faulted result not bit-equal to "
+                           "the fault-free run")
+            if "within_budget=0" in r.get("derived", ""):
+                out.append(f"{r['name']}: faulted result exceeded the "
+                           "recovery error budget")
+            if not r.get("retransmits"):
+                out.append(f"{r['name']}: no retransmission fired — the "
+                           "fault sweep exercised nothing")
+            clean = by_name.get(f"fig_faults/{app}/clean")
+            extra = r.get("extra_epochs")
+            if extra is None or clean is None or clean.get("epochs") is None:
+                out.append(f"{r['name']}: extra_epochs/clean-epochs missing "
+                           "for the bounded-recovery gate")
+            elif extra > 4 * clean["epochs"] + 16:
+                out.append(
+                    f"{r['name']}: extra_epochs={extra:.0f} exceeds the "
+                    f"bound for {clean['epochs']:.0f} clean epochs")
+    return out
+
+
 def compare_snapshots(old_path: str, rows: list[dict],
                       wall_tol: float = 0.25,
                       traffic_tol: float = 0.01) -> list[str]:
@@ -366,13 +430,16 @@ def main(argv=None) -> None:
         for line in codec_row_gates(ROWS):
             print(f"REGRESSION {line}", flush=True)
             regressions.append(line)
+        for line in fault_row_gates(ROWS):
+            print(f"REGRESSION {line}", flush=True)
+            regressions.append(line)
     if not ok:
         raise SystemExit(1)
     if regressions:
         raise SystemExit(
             f"{len(regressions)} regression(s) — see REGRESSION lines above "
-            "(wall-clock past tolerance, traffic drift, or a codec-row "
-            "fidelity/width gate)")
+            "(wall-clock past tolerance, traffic drift, a codec-row "
+            "fidelity/width gate, or a fig_faults recovery gate)")
 
 
 if __name__ == "__main__":

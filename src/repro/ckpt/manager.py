@@ -30,6 +30,7 @@ class CheckpointManager:
         self.keep_n = keep_n
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
 
     # ------------------------------------------------------------- save
 
@@ -54,16 +55,32 @@ class CheckpointManager:
             os.rename(tmp, final)  # atomic publish
             self._gc()
 
+        def write_guarded():
+            # A daemon thread's exception otherwise evaporates into a
+            # stderr traceback and the train loop keeps running on a
+            # checkpoint that was never published; park it for the next
+            # wait()/save() to re-raise on the caller's thread.
+            try:
+                write()
+            except BaseException as e:  # noqa: BLE001 - reraised in wait()
+                self._error = e
+
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread = threading.Thread(target=write_guarded, daemon=True)
             self._thread.start()
 
     def wait(self):
+        """Join any in-flight background write.  If that write failed, the
+        captured exception is re-raised HERE (once) so checkpoint loss is
+        loud at the first synchronization point, not silent."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _gc(self):
         steps = self.all_steps()
@@ -107,7 +124,20 @@ class CheckpointManager:
         return jax.tree_util.tree_unflatten(treedef, leaves), meta
 
     def restore_latest(self, example_tree, shardings=None):
-        step = self.latest_step()
-        if step is None:
-            return None, None
-        return self.restore(step, example_tree, shardings)
+        """Restore the newest READABLE step: a step directory with a
+        truncated/unreadable ``arrays.npz`` or missing ``meta.json`` (e.g. a
+        crash mid-publish or bit rot) is skipped and the next-newest of the
+        ``keep_n`` retained steps is tried — this is the promised corruption
+        fallback. Returns ``(None, None)`` when no step is readable."""
+        last_err: Exception | None = None
+        for step in reversed(self.all_steps()):
+            try:
+                return self.restore(step, example_tree, shardings)
+            except Exception as e:  # corrupt/partial step: fall back
+                last_err = e
+        if last_err is not None:
+            import warnings
+            warnings.warn(
+                f"no readable checkpoint in {self.dir!r}; newest failure: "
+                f"{last_err!r}", RuntimeWarning, stacklevel=2)
+        return None, None

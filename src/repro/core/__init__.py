@@ -10,6 +10,7 @@ from repro.core.api import (
     tascade_scatter_reduce,
 )
 from repro.core.codec import PayloadCodec
+from repro.core.faults import FaultPlan
 from repro.core.geom import CompactPlan
 from repro.core.types import NO_IDX, PCacheState, UpdateStream
 
@@ -17,6 +18,7 @@ __all__ = [
     "CascadeMode",
     "compat",
     "CompactPlan",
+    "FaultPlan",
     "MeshGeom",
     "NO_IDX",
     "PayloadCodec",

@@ -17,6 +17,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import checkify
 from jax.sharding import PartitionSpec as P
 
 from repro.core import compat
@@ -122,13 +123,24 @@ def tascade_scatter_reduce(
             gstats = jax.tree.map(lambda x: jax.lax.psum(x, axes), _stats_vec(stats))
             return dest_shard, overflow, residual, gstats
 
-        fn = _JIT_CACHE[key] = jax.jit(compat.shard_map(
+        mapped = jax.jit(compat.shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(P(axes), P(axes), P(axes)),
             out_specs=(P(axes), P(), P(), _stats_vec_spec()),
             check_vma=False,
         ))
+        if _wants_checkify(cfg):
+            # The engine emits checkify.check assertions (audit /
+            # overflow_policy="strict"); functionalize them here and throw
+            # eagerly so callers get a JaxRuntimeError, not silence.
+            checked = checkify.checkify(mapped)
+
+            def mapped(*args, _checked=checked):
+                err, out = _checked(*args)
+                err.throw()
+                return out
+        fn = _JIT_CACHE[key] = mapped
     dest_out, overflow, residual, gstats = fn(dest_flat, idx, val)
     if lanes > 1:
         dest_out = dest_out.reshape(vpad, lanes).T
@@ -140,13 +152,22 @@ def tascade_scatter_reduce(
             "hop_bytes": gstats[1],
             "filtered": gstats[2],
             "coalesced": gstats[3],
+            "retransmits": gstats[4],
+            "audit_fail": gstats[5],
         }
     return dest_out
 
 
+def _wants_checkify(cfg: TascadeConfig) -> bool:
+    """Whether the engine will emit checkify assertions under ``cfg`` (the
+    runtime auditor and the strict overflow policy)."""
+    return cfg.audit or cfg.overflow_policy == "strict"
+
+
 def _stats_vec(s: StepStats):
-    return (jnp.sum(s.sent), s.hop_bytes, s.filtered, s.coalesced)
+    return (jnp.sum(s.sent), s.hop_bytes, s.filtered, s.coalesced,
+            s.retransmits, s.audit_fail)
 
 
 def _stats_vec_spec():
-    return (P(), P(), P(), P())
+    return (P(), P(), P(), P(), P(), P())

@@ -67,8 +67,10 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import checkify
 
 from repro.core import exchange as ex
+from repro.core import faults
 from repro.core import pcache
 from repro.core.codec import PayloadCodec
 from repro.core.geom import CompactPlan, MeshGeom
@@ -93,6 +95,39 @@ MSG_BYTES = IDX_BYTES + VAL_BYTES  # one raw32 packed wire word; levels with
                                    # WireFormat.msg_bytes (4 + codec width)
 
 
+class NetState(NamedTuple):
+    """Per-level self-healing-exchange state (present iff a ``FaultPlan`` is
+    configured; ``None`` otherwise so the fault-free pytree is unchanged).
+
+    Implements the wire protocol of DESIGN.md §"Delivery guarantees":
+
+      - ``sent_wire`` is the *retransmit slot*: the clean (pre-fault) packed
+        body of the bucket block transmitted last round. It is held until
+        implicitly acknowledged one round later — rows whose previous-epoch
+        channel masks said drop-or-corrupt are decoded back into update
+        form and re-emitted through the ordinary leftover/pending route
+        (at-least-once delivery).
+      - ``last_epoch`` is the receiver's duplicate-suppression state: the
+        newest epoch tag accepted per sending peer. ADD accepts a row only
+        if its tag is fresher (exactly-once effect); MIN/MAX skip the check
+        (idempotent, duplicates are harmless by algebra).
+      - ``replay``/``replay_ep``/``replay_live`` model the channel's
+        re-delivery buffer: rows the channel duplicated (processed now AND
+        next round) or delayed (processed next round only).
+      - ``backlog`` counts entries that still need a future round
+        (will-be-retransmitted + deferred-by-delay) so drain loops and
+        liveness accounting cannot terminate while recovery is in flight.
+    """
+
+    epoch: jnp.ndarray        # int32[] round counter == next epoch tag
+    sent_wire: jnp.ndarray    # int32[P, Wc] clean body of last transmission
+    last_epoch: jnp.ndarray   # int32[P] newest accepted epoch per sender
+    replay: jnp.ndarray       # int32[P, Wc] channel re-delivery buffer
+    replay_ep: jnp.ndarray    # int32[P] original epoch tag of each replay row
+    replay_live: jnp.ndarray  # bool[P] which replay rows re-deliver
+    backlog: jnp.ndarray      # int32[] entries needing future rounds
+
+
 class LevelState(NamedTuple):
     """Per-level functional state.
 
@@ -103,11 +138,13 @@ class LevelState(NamedTuple):
 
     cache: PCacheState      # this level's proxy cache (empty for non-merging levels)
     pending: UpdateStream   # updates awaiting exchange along this level's axis
+    net: NetState | None = None  # self-healing exchange state (faults only)
 
 
 class EngineState(NamedTuple):
     levels: tuple  # tuple[LevelState, ...]
-    overflow: jnp.ndarray  # dropped-update count; must remain 0 for correctness
+    overflow: jnp.ndarray  # dropped-update count; stays 0 unless explicitly
+                           # opted out (TascadeConfig.overflow_policy="drop")
 
 
 class StepStats(NamedTuple):
@@ -121,7 +158,13 @@ class StepStats(NamedTuple):
     lane_inflight: jnp.ndarray  # int32[n_lanes] per-lane pending occupancy:
                                 # lanes whose count hits 0 (and whose app
                                 # frontier is empty) are finished and stop
-                                # contributing worklist slots
+                                # contributing work
+    retransmits: jnp.ndarray    # int32 entries re-emitted by the
+                                # at-least-once delivery layer (0: no faults)
+    audit_fail: jnp.ndarray     # int32 bitmask of failed runtime audits
+                                # (1=wire conservation, 2=MIN/MAX
+                                # monotonicity, 4=overflow under "spill");
+                                # always 0 unless TascadeConfig.auditlist slots
 
 
 @dataclasses.dataclass(frozen=True)
@@ -293,6 +336,28 @@ class TascadeEngine:
             cov = cov_next
         self.levels = tuple(specs)
 
+        if cfg.fault_plan is not None:
+            # Self-healing exchange: the integrity/sequencing header and the
+            # retransmit slot live on the packed i32 wire, so every level
+            # must take the packed format and the single-u64 realization is
+            # replaced by the equivalent paired-i32 block (same ONE
+            # collective, header columns appended). Pending queues gain
+            # headroom for one round of retransmit + replay inflow so
+            # channel faults can never convert into queue drops.
+            fspecs = []
+            for s in self.levels:
+                if s.fmt is None:
+                    raise ValueError(
+                        "fault_plan requires the packed wire format at "
+                        f"every level; level {s.axes} fell back to the "
+                        f"unpacked wire (dtype {jnp.dtype(dtype).name})")
+                fspecs.append(dataclasses.replace(
+                    s,
+                    fmt=dataclasses.replace(s.fmt, word64=False),
+                    pending_cap=s.pending_cap
+                    + 2 * s.num_peers * s.bucket_cap))
+            self.levels = tuple(fspecs)
+
     @property
     def table_elems(self) -> int:
         """Total idx-table elements streamed per round across all levels —
@@ -315,9 +380,23 @@ class TascadeEngine:
                 if spec.merge
                 else make_pcache(1, self.op, self.dtype)
             )
+            net = None
+            if self.cfg.fault_plan is not None:
+                p = spec.num_peers
+                empty = jnp.tile(self._invalid_row(spec)[None, :], (p, 1))
+                net = NetState(
+                    epoch=jnp.int32(0),
+                    sent_wire=empty,
+                    last_epoch=jnp.full((p,), -1, jnp.int32),
+                    replay=empty,
+                    replay_ep=jnp.full((p,), -1, jnp.int32),
+                    replay_live=jnp.zeros((p,), bool),
+                    backlog=jnp.int32(0),
+                )
             lvls.append(LevelState(
                 cache=cache,
                 pending=make_stream(spec.pending_cap, self.dtype, counted=True),
+                net=net,
             ))
         return EngineState(levels=tuple(lvls), overflow=jnp.int32(0))
 
@@ -330,14 +409,218 @@ class TascadeEngine:
             peer = peer * self.geom.axis_size(a) + self.geom.owner_coord(idx, a)
         return peer
 
+    # ------------------------------------------- self-healing wire helpers
+
+    def _body_cols(self, spec: LevelSpec) -> int:
+        """Column count of the packed wire body per peer row (the paired-i32
+        realization is forced whenever a FaultPlan is configured)."""
+        k = spec.bucket_cap
+        cpw = spec.fmt.codec.codes_per_word
+        return 2 * k if cpw == 1 else k + k // cpw
+
+    def _invalid_row(self, spec: LevelSpec) -> jnp.ndarray:
+        """A body row carrying no messages: every key slot holds
+        ``invalid_key``, payload words are zero."""
+        k = spec.bucket_cap
+        pad = self._body_cols(spec) - k
+        return jnp.concatenate([
+            jnp.full((k,), spec.fmt.invalid_key, jnp.int32),
+            jnp.zeros((pad,), jnp.int32)])
+
+    def _edge_ids(self, spec: LevelSpec):
+        """Receive-side edge identities for this level's all_to_all:
+        ``sender_lin[p]`` is the linear device id that produced recv row p
+        (the device at joint coord p on ``spec.axes`` sharing my other
+        coords), and ``my_j`` is my own joint coord — the row index my
+        buckets land at on every peer. Together with the sender-side pair
+        (my_linear, arange(P)) this names each wire edge identically at
+        both endpoints, which is what lets ``faults.edge_masks`` be drawn
+        without any extra communication."""
+        p = jnp.arange(spec.num_peers, dtype=jnp.int32)
+        sizes = [self.geom.axis_size(a) for a in spec.axes]
+        coords = []
+        r = p
+        for s_ in reversed(sizes):
+            coords.append(r % s_)
+            r = r // s_
+        coords.reverse()
+        sender_lin = jnp.zeros((spec.num_peers,), jnp.int32) \
+            + self.geom.my_linear()
+        my_j = jnp.int32(0)
+        for a, ca in zip(spec.axes, coords):
+            ai = jax.lax.axis_index(a).astype(jnp.int32)
+            sender_lin = sender_lin + (ca - ai) * self.geom.axis_stride(a)
+            my_j = my_j * self.geom.axis_size(a) + ai
+        return sender_lin, my_j
+
+    def _expand_recv(self, spec: LevelSpec, recv: UpdateStream) -> UpdateStream:
+        """Re-insert owner-digit-compacted key digits with THIS device's
+        coordinates (sender and receiver agree on every already-exchanged
+        axis — the all_to_all moved along this level's axes only). The same
+        expansion is valid for a sender decoding its own retransmit slot."""
+        if spec.plan is None:
+            return recv
+        exch_lin = jnp.int32(0)
+        for a in spec.plan.exch_names:
+            exch_lin = exch_lin + jax.lax.axis_index(a).astype(
+                jnp.int32) * self.geom.axis_stride(a)
+        gidx = spec.plan.expand(jnp.maximum(recv.idx, 0), exch_lin)
+        return UpdateStream(jnp.where(recv.idx != NO_IDX, gidx, NO_IDX),
+                            recv.val)
+
+    def _retransmit_input(self, spec: LevelSpec, li: int, net: NetState,
+                          new: UpdateStream | None):
+        """At-least-once delivery, sender half: rows of last round's
+        transmission whose channel masks said drop-or-corrupt were never
+        accepted (the receiver saw no packet / a checksum mismatch), so
+        their clean bodies are decoded out of the retransmit slot and fed
+        back through the ordinary route path. Epoch 0 has nothing in the
+        slot (it is initialized all-invalid; the gate keeps the masks'
+        epoch non-negative)."""
+        fp = self.cfg.fault_plan
+        p = spec.num_peers
+        prev = faults.edge_masks(
+            fp, li, jnp.maximum(net.epoch - 1, 0),
+            jnp.zeros((p,), jnp.int32) + self.geom.my_linear(),
+            jnp.arange(p, dtype=jnp.int32), self._body_cols(spec))
+        nack = (prev.drop | prev.corrupt) & (net.epoch > 0)
+        body = jnp.where(nack[:, None], net.sent_wire,
+                         self._invalid_row(spec)[None, :])
+        rs = self._expand_recv(spec, ex.wire_to_stream(
+            body, spec.fmt, self.dtype))
+        n_resent = jnp.sum(rs.idx != NO_IDX, dtype=jnp.int32)
+        if new is None:
+            return rs, n_resent
+        return UpdateStream(jnp.concatenate([new.idx, rs.idx]),
+                            jnp.concatenate([new.val, rs.val])), n_resent
+
+    def _faulty_exchange(self, spec: LevelSpec, li: int, net: NetState,
+                         rr: "ex.RouteResult"):
+        """The lossy-channel exchange: append the integrity header
+        (checksum + epoch tag) to the clean body, inject this epoch's
+        sender-side faults (bit-flip corruption, dropped rows), ship the
+        block in the SAME single all_to_all, then run the receive protocol:
+        checksum/epoch validation, ADD duplicate suppression, channel
+        re-delivery (dup/delay) via the replay buffer, and compact-key
+        re-expansion. Returns (received stream, next NetState, audit_bad).
+
+        Detection is purely protocol-level — the receiver consults only the
+        header. The shared-seed masks stand in for the physical channel
+        (which rows it loses/replays) and for the NACK/timeout feedback the
+        sender would get; they never shortcut detection itself."""
+        fp = self.cfg.fault_plan
+        p = spec.num_peers
+        wc = self._body_cols(spec)
+        axis_name = spec.axes if len(spec.axes) > 1 else spec.axes[0]
+        body = rr.wire
+        inv = self._invalid_row(spec)
+
+        # --- sender: header, then channel faults on the transmitted copy.
+        cur = faults.edge_masks(
+            fp, li, net.epoch,
+            jnp.zeros((p,), jnp.int32) + self.geom.my_linear(),
+            jnp.arange(p, dtype=jnp.int32), wc)
+        ck = faults.checksum(body)
+        ep_col = jnp.zeros((p,), jnp.int32) + net.epoch
+        tx_body = faults.flip_bits(body, cur.corrupt, cur.c_col, cur.c_bit)
+        tx = jnp.concatenate(
+            [tx_body, ck[:, None], ep_col[:, None]], axis=1)
+        no_pkt = jnp.concatenate(
+            [inv, jnp.zeros((1,), jnp.int32), jnp.full((1,), -1, jnp.int32)])
+        tx = jnp.where(cur.drop[:, None], no_pkt[None, :], tx)
+        recv_ext = jax.lax.all_to_all(tx, axis_name, split_axis=0,
+                                      concat_axis=0)
+
+        # --- receiver: validate header, suppress duplicates, defer delays.
+        rbody = recv_ext[:, :wc]
+        rck = recv_ext[:, wc]
+        rep = recv_ext[:, wc + 1]
+        ok = (rep >= 0) & (faults.checksum(rbody) == rck)
+        sender_lin, my_j = self._edge_ids(spec)
+        rmask = faults.edge_masks(fp, li, net.epoch, sender_lin,
+                                  jnp.zeros((p,), jnp.int32) + my_j, wc)
+        if self.op is ReduceOp.ADD:
+            fresh_cur = rep > net.last_epoch
+            fresh_rep = net.replay_ep > net.last_epoch
+        else:
+            # MIN/MAX are idempotent: re-merging a duplicate row is
+            # harmless by algebra, so no sequencing check is needed.
+            fresh_cur = jnp.ones((p,), bool)
+            fresh_rep = jnp.ones((p,), bool)
+        delay_r = rmask.delay & ok        # arrived, but channel holds it
+        proc_rep = net.replay_live & fresh_rep
+        proc_cur = ok & fresh_cur & ~delay_r
+        last_ep = jnp.where(net.replay_live,
+                            jnp.maximum(net.last_epoch, net.replay_ep),
+                            net.last_epoch)
+        last_ep = jnp.where(ok & ~delay_r, jnp.maximum(last_ep, rep),
+                            last_ep)
+        rep_body = jnp.where(proc_rep[:, None], net.replay, inv[None, :])
+        cur_body = jnp.where(proc_cur[:, None], rbody, inv[None, :])
+        recv = self._expand_recv(spec, ex.wire_to_stream(
+            jnp.concatenate([rep_body, cur_body], axis=0),
+            spec.fmt, self.dtype))
+
+        # --- channel re-delivery buffer for next round (dup + delay).
+        buffer_m = ok & (rmask.dup | rmask.delay)
+        new_replay = jnp.where(buffer_m[:, None], rbody, inv[None, :])
+        new_replay_ep = jnp.where(buffer_m, rep, -1)
+
+        # --- backlog: entries that still need a future round. Rows lost to
+        # the channel (sender will retransmit) plus rows deferred by delay
+        # (receiver will process next round). Dup replays are excluded —
+        # re-processing them is optional by idempotence/dedup.
+        row_sent = jnp.sum(body[:, :spec.bucket_cap] < spec.fmt.invalid_key,
+                           axis=1, dtype=jnp.int32)
+        row_recv = jnp.sum(rbody[:, :spec.bucket_cap] < spec.fmt.invalid_key,
+                           axis=1, dtype=jnp.int32)
+        lost = jnp.sum(jnp.where(cur.drop | cur.corrupt, row_sent, 0),
+                       dtype=jnp.int32)
+        deferred = jnp.sum(jnp.where(delay_r, row_recv, 0), dtype=jnp.int32)
+        net2 = NetState(
+            epoch=net.epoch + 1,
+            sent_wire=body,
+            last_epoch=last_ep,
+            replay=new_replay,
+            replay_ep=new_replay_ep,
+            replay_live=buffer_m,
+            backlog=lost + deferred,
+        )
+
+        audit_bad = jnp.int32(0)
+        if self.cfg.audit:
+            # Wire mass conservation across the channel: every message
+            # packed this round either arrived with a valid header or was
+            # lost to the channel (and sits in a retransmit slot).
+            arrived = jnp.sum(jnp.where(ok, row_recv, 0), dtype=jnp.int32)
+            lhs = jax.lax.psum(rr.n_sent, axis_name)
+            rhs = jax.lax.psum(arrived + lost, axis_name)
+            audit_bad = (lhs != rhs).astype(jnp.int32)
+            checkify.check(
+                lhs == rhs,
+                f"audit: wire conservation violated at level {li} "
+                "(sent != arrived + channel-lost)")
+        return recv, net2, audit_bad
+
+    # ---------------------------------------------------- one level-round
+
     def _exchange_round(self, spec: LevelSpec, lvl: LevelState,
-                        new: UpdateStream | None):
+                        new: UpdateStream | None, li: int):
         """The exchange half of a level-round: the counting-rank shuffle
         with its fused route-pack epilogue, ONE collective on the packed
         wire word, and compact-key re-expansion on the receive side.
         Returns (leftover stream, received stream, sent, coalesced,
-        dropped) — no cache interaction, so the staged drain can run every
-        level's exchange before ONE batched cache pass."""
+        dropped, retransmitted, audit_bad, next NetState) — no cache
+        interaction, so the staged drain can run every level's exchange
+        before ONE batched cache pass.
+
+        With a FaultPlan configured the same single collective carries the
+        header-extended block through the lossy channel and the receive
+        protocol of ``_faulty_exchange``; retransmit-slot re-emissions ride
+        the ``new`` input so recovery reuses the ordinary route path."""
+        n_resent = jnp.int32(0)
+        if self.cfg.fault_plan is not None:
+            new, n_resent = self._retransmit_input(spec, li, lvl.net, new)
         rr = ex.route_and_pack(
             lvl.pending, new,
             lambda i: self._peer_of(i, spec.axes),
@@ -357,30 +640,37 @@ class TascadeEngine:
             peer_block=self.geom.shard_size,
             plan=spec.plan,
         )
+        if self.cfg.fault_plan is not None:
+            recv, net2, audit_bad = self._faulty_exchange(spec, li, lvl.net,
+                                                          rr)
+            return (rr.leftover, recv, rr.n_sent, rr.n_coalesced,
+                    rr.dropped, n_resent, audit_bad, net2)
         axis_name = spec.axes if len(spec.axes) > 1 else spec.axes[0]
         recv = ex.all_to_all_wire(rr.wire, axis_name, spec.fmt, self.dtype)
-        if spec.plan is not None:
-            # The wire carried owner-digit-compacted keys; re-insert the
-            # pinned digits with THIS device's coordinates (sender and
-            # receiver agree on every already-exchanged axis — the
-            # all_to_all moved along this level's axes only).
-            exch_lin = jnp.int32(0)
-            for a in spec.plan.exch_names:
-                exch_lin = exch_lin + jax.lax.axis_index(a).astype(
-                    jnp.int32) * self.geom.axis_stride(a)
-            gidx = spec.plan.expand(jnp.maximum(recv.idx, 0), exch_lin)
-            recv = UpdateStream(jnp.where(recv.idx != NO_IDX, gidx, NO_IDX),
-                                recv.val)
-        return rr.leftover, recv, rr.n_sent, rr.n_coalesced, rr.dropped
+        recv = self._expand_recv(spec, recv)
+        audit_bad = jnp.int32(0)
+        if self.cfg.audit:
+            # Fault-free conservation: one psum over the level's exchange
+            # group — everything packed must decode on the far side.
+            n_recv = jnp.sum(recv.idx != NO_IDX, dtype=jnp.int32)
+            lhs = jax.lax.psum(rr.n_sent, axis_name)
+            rhs = jax.lax.psum(n_recv, axis_name)
+            audit_bad = (lhs != rhs).astype(jnp.int32)
+            checkify.check(
+                lhs == rhs,
+                f"audit: wire conservation violated at level {li} "
+                "(sent != received)")
+        return (rr.leftover, recv, rr.n_sent, rr.n_coalesced, rr.dropped,
+                n_resent, audit_bad, None)
 
     def _level_round(self, spec: LevelSpec, lvl: LevelState,
-                     new: UpdateStream | None):
+                     new: UpdateStream | None, li: int):
         """One full exchange+merge round at a level: ``_exchange_round``
         followed by a sort-free cache merge. Returns (new level state,
         emissions for the next level, sent count, filtered count, coalesced
-        count, dropped count)."""
-        leftover, recv, n_sent, n_coal, dropped = self._exchange_round(
-            spec, lvl, new)
+        count, dropped count, retransmit count, audit_bad)."""
+        (leftover, recv, n_sent, n_coal, dropped, n_resent, audit_bad,
+         net2) = self._exchange_round(spec, lvl, new, li)
         if spec.merge:
             if self.cfg.use_pallas:
                 # Route the cache pass through the block-vectorized Pallas
@@ -412,26 +702,39 @@ class TascadeEngine:
         else:
             cache, out = lvl.cache, recv
             filtered = jnp.int32(0)
-        new_lvl = LevelState(cache=cache, pending=leftover)
-        return new_lvl, out, n_sent, filtered, n_coal, dropped
+        new_lvl = LevelState(cache=cache, pending=leftover, net=net2)
+        return (new_lvl, out, n_sent, filtered, n_coal, dropped, n_resent,
+                audit_bad)
 
     # --------------------------------------------------- interleaved drain
 
     def _run_drain(self, levels, dest_shard, overflow, sent, filtered,
-                   coalesced, round_fn, limit: int):
+                   coalesced, retrans, afail, round_fn, limit: int,
+                   rest=None):
         """Shared early-exit drain shell: iterate ``round_fn`` (one drain
         iteration over the level list) until every queue on the mesh is
         empty — the check is one psum of the summed occupancy counters —
         or the progress ``limit`` trips. Both drain schedules (interleaved
         and staged) supply only their iteration body, so the termination
-        machinery cannot fork between them."""
+        machinery cannot fork between them.
+
+        ``rest`` (overflow_policy="spill") is the not-yet-admitted input
+        remainder: each iteration moves as much of it into level 0's queue
+        as the exchange just freed, and its occupancy keeps the loop alive
+        until every entry has been admitted AND drained."""
         all_axes = tuple(self.geom.axis_names)
         limit = jnp.int32(limit)
 
-        def occupancy(lvls):
+        def occupancy(lvls, rst):
             t = jnp.int32(0)
             for l in lvls:
                 t = t + l.pending.n
+                if l.net is not None:
+                    # Recovery in flight (pending retransmits + deferred
+                    # rows) keeps the drain alive even with empty queues.
+                    t = t + l.net.backlog
+            if rst is not None:
+                t = t + rst.count()
             return t
 
         def cond(carry):
@@ -439,21 +742,28 @@ class TascadeEngine:
             return (g > 0) & (r < limit)
 
         def body(carry):
-            r, _, lvls, dest, ovf, s_vec, filt, coal = carry
-            lvls, dest, ovf, s_vec, filt, coal = round_fn(
-                list(lvls), dest, ovf, s_vec, filt, coal)
-            g = jax.lax.psum(occupancy(lvls), all_axes)
-            return (r + 1, g, tuple(lvls), dest, ovf, s_vec, filt, coal)
+            r, _, lvls, dest, ovf, s_vec, filt, coal, retr, af, rst = carry
+            lvls = list(lvls)
+            if rst is not None:
+                pend, rst = ex.transfer(lvls[0].pending, rst)
+                lvls[0] = LevelState(cache=lvls[0].cache, pending=pend,
+                                     net=lvls[0].net)
+            lvls, dest, ovf, s_vec, filt, coal, retr, af = round_fn(
+                lvls, dest, ovf, s_vec, filt, coal, retr, af)
+            g = jax.lax.psum(occupancy(lvls, rst), all_axes)
+            return (r + 1, g, tuple(lvls), dest, ovf, s_vec, filt, coal,
+                    retr, af, rst)
 
-        g0 = jax.lax.psum(occupancy(levels), all_axes)
+        g0 = jax.lax.psum(occupancy(levels, rest), all_axes)
         carry = (jnp.int32(0), g0, tuple(levels), dest_shard, overflow,
-                 sent, filtered, coalesced)
-        (_, _, lvls, dest_shard, overflow,
-         sent, filtered, coalesced) = jax.lax.while_loop(cond, body, carry)
-        return list(lvls), dest_shard, overflow, sent, filtered, coalesced
+                 sent, filtered, coalesced, retrans, afail, rest)
+        (_, _, lvls, dest_shard, overflow, sent, filtered, coalesced,
+         retrans, afail, rest) = jax.lax.while_loop(cond, body, carry)
+        return (list(lvls), dest_shard, overflow, sent, filtered, coalesced,
+                retrans, afail, rest)
 
     def _drain_all(self, levels, dest_shard, overflow, sent, filtered,
-                   coalesced):
+                   coalesced, retrans, afail, rest=None):
         """Early-exit drain advancing ALL levels per iteration (leaf→root,
         so an update can traverse the whole tree in one iteration). With
         ``TascadeConfig.batch_cache_passes`` the staged round body runs
@@ -471,17 +781,31 @@ class TascadeEngine:
             limit = (len(self.levels) + 1) * limit
         else:
             round_fn = self._interleaved_round
+        if self.cfg.fault_plan is not None:
+            # Recovery rounds: each lost round retransmits on the next, so
+            # the geometric tail under any rate <= 0.9 fits well inside a
+            # doubled bound (faulted runs report extra epochs, they must
+            # never trip the progress limit and strand a retransmit slot).
+            limit = 2 * limit + 16
+        if rest is not None:
+            # Spill admission stretches the drain: worst-case (all input
+            # keyed to one peer) each iteration frees only one level-0
+            # bucket's worth of queue slots.
+            limit += 2 * math.ceil(
+                rest.capacity / max(self.levels[0].bucket_cap, 1)) + 8
         return self._run_drain(levels, dest_shard, overflow, sent, filtered,
-                               coalesced, round_fn, limit)
+                               coalesced, retrans, afail, round_fn, limit,
+                               rest=rest)
 
-    def _interleaved_round(self, lvls, dest, ovf, s_vec, filt, coal):
+    def _interleaved_round(self, lvls, dest, ovf, s_vec, filt, coal, retr,
+                           af):
         """One interleaved drain iteration: a full exchange+merge round at
         every level leaf→root, emissions flowing downstream within the
         SAME iteration."""
         nlev = len(self.levels)
         for li, spec in enumerate(self.levels):
-            lvl, out, n_sent, f, c, d = self._level_round(spec, lvls[li],
-                                                          None)
+            lvl, out, n_sent, f, c, d, nr, ab = self._level_round(
+                spec, lvls[li], None, li)
             lvls[li] = lvl
             ovf = ovf + d
             if li + 1 == nlev:
@@ -490,16 +814,19 @@ class TascadeEngine:
             else:
                 pend, dq = ex.enqueue(lvls[li + 1].pending, out)
                 lvls[li + 1] = LevelState(cache=lvls[li + 1].cache,
-                                          pending=pend)
+                                          pending=pend,
+                                          net=lvls[li + 1].net)
                 ovf = ovf + dq
             s_vec = s_vec.at[li].add(n_sent)
             filt = filt + f
             coal = coal + c
-        return lvls, dest, ovf, s_vec, filt, coal
+            retr = retr + nr
+            af = af | ab
+        return lvls, dest, ovf, s_vec, filt, coal, retr, af
 
     # --------------------------------------------- staged round (batched)
 
-    def _staged_round(self, lvls, dest, ovf, s_vec, filt, coal):
+    def _staged_round(self, lvls, dest, ovf, s_vec, filt, coal, retr, af):
         """One staged drain iteration: every level's exchange on its
         iteration-start queue, then ONE batched cache pass over all
         merging levels (level caches stacked on a leading axis —
@@ -518,8 +845,13 @@ class TascadeEngine:
         merge_lis = [li for li, s in enumerate(self.levels) if s.merge]
         smax = max((self.levels[li].cache_lines for li in merge_lis),
                    default=1)
-        umax = max((self.levels[li].num_peers * self.levels[li].bucket_cap
-                    for li in merge_lis), default=1)
+        # Received-stream length per level: P*K decoded slots, doubled
+        # under a FaultPlan (the replay buffer rides ahead of the current
+        # block through one shared decode).
+        rfac = 2 if self.cfg.fault_plan is not None else 1
+        umerge = {li: rfac * self.levels[li].num_peers
+                  * self.levels[li].bucket_cap for li in merge_lis}
+        umax = max(umerge.values(), default=1)
         sizes = tuple(self.levels[li].cache_lines for li in merge_lis)
         identity = jnp.asarray(self.op.identity, self.dtype)
 
@@ -532,13 +864,16 @@ class TascadeEngine:
         outs = []
         # Stage 1: every level's exchange, on iteration-start queues.
         for li, spec in enumerate(self.levels):
-            leftover, recv, n_sent, c, d = self._exchange_round(
-                spec, lvls[li], None)
-            lvls[li] = LevelState(cache=lvls[li].cache, pending=leftover)
+            (leftover, recv, n_sent, c, d, nr, ab,
+             net2) = self._exchange_round(spec, lvls[li], None, li)
+            lvls[li] = LevelState(cache=lvls[li].cache, pending=leftover,
+                                  net=net2)
             outs.append(recv)
             s_vec = s_vec.at[li].add(n_sent)
             coal = coal + c
             ovf = ovf + d
+            retr = retr + nr
+            af = af | ab
         # Stage 2: ONE batched cache pass over all merging levels.
         if merge_lis:
             idx_stack = jnp.stack(
@@ -569,10 +904,10 @@ class TascadeEngine:
                         sizes=sizes)
             for k, li in enumerate(merge_lis):
                 lines = self.levels[li].cache_lines
-                ul = self.levels[li].num_peers * self.levels[li].bucket_cap
+                ul = umerge[li]
                 lvls[li] = LevelState(
                     cache=PCacheState(tags_n[k, :lines], vals_n[k, :lines]),
-                    pending=lvls[li].pending)
+                    pending=lvls[li].pending, net=lvls[li].net)
                 out = UpdateStream(eidx[k, :ul], eval_[k, :ul])
                 if f_vec is None:
                     n_in = jnp.sum(outs[li].idx != NO_IDX, dtype=jnp.int32)
@@ -589,9 +924,10 @@ class TascadeEngine:
             else:
                 pend, dq = ex.enqueue(lvls[li + 1].pending, outs[li])
                 lvls[li + 1] = LevelState(cache=lvls[li + 1].cache,
-                                          pending=pend)
+                                          pending=pend,
+                                          net=lvls[li + 1].net)
                 ovf = ovf + dq
-        return lvls, dest, ovf, s_vec, filt, coal
+        return lvls, dest, ovf, s_vec, filt, coal, retr, af
 
     # ------------------------------------------------------------------ step
 
@@ -625,7 +961,8 @@ class TascadeEngine:
             return state, dest_shard, StepStats(
                 sent=jnp.zeros((1,), jnp.int32), hop_bytes=jnp.float32(0),
                 inflight=zero, filtered=zero, coalesced=zero,
-                lane_inflight=jnp.zeros((self.lanes,), jnp.int32))
+                lane_inflight=jnp.zeros((self.lanes,), jnp.int32),
+                retransmits=zero, audit_fail=zero)
 
         levels = list(state.levels)
         overflow = state.overflow
@@ -633,18 +970,24 @@ class TascadeEngine:
         sent = jnp.zeros((nlev,), jnp.int32)
         filtered = jnp.int32(0)
         coalesced = jnp.int32(0)
+        retrans = jnp.int32(0)
+        afail = jnp.int32(0)
+        audit_mono = self.cfg.audit and self.op is not ReduceOp.ADD
+        dest0 = dest_shard if audit_mono else None
 
         def _enqueue_at(li: int, stream: UpdateStream):
             nonlocal overflow
             lvl = levels[li]
             pend, dropped = ex.enqueue(lvl.pending, stream)
-            levels[li] = LevelState(cache=lvl.cache, pending=pend)
+            levels[li] = LevelState(cache=lvl.cache, pending=pend,
+                                    net=lvl.net)
             overflow = overflow + dropped
 
         def _flush_at(li: int):
             nonlocal dest_shard
             cache, flushed = pcache.flush(levels[li].cache, self.op)
-            levels[li] = LevelState(cache=cache, pending=levels[li].pending)
+            levels[li] = LevelState(cache=cache, pending=levels[li].pending,
+                                    net=levels[li].net)
             if li + 1 == nlev:
                 dest_shard = pcache.apply_to_owner(
                     dest_shard, flushed, op=self.op, base=self.geom.my_base())
@@ -652,11 +995,21 @@ class TascadeEngine:
                 _enqueue_at(li + 1, flushed)
 
         if drain:
+            rest = None
             if new is not None:
-                _enqueue_at(0, new)
-            (levels, dest_shard, overflow,
-             sent, filtered, coalesced) = self._drain_all(
-                levels, dest_shard, overflow, sent, filtered, coalesced)
+                if self.cfg.overflow_policy == "spill":
+                    # Lossless admission: the input stream itself is the
+                    # spill buffer — entries that exceed the level-0 queue
+                    # are retried each drain iteration as slots free up,
+                    # so undersized queues stretch the schedule instead of
+                    # dropping updates.
+                    rest = ex.compact(new)
+                else:
+                    _enqueue_at(0, new)
+            (levels, dest_shard, overflow, sent, filtered, coalesced,
+             retrans, afail, rest) = self._drain_all(
+                levels, dest_shard, overflow, sent, filtered, coalesced,
+                retrans, afail, rest=rest)
             if flush and self.cfg.policy is WritePolicy.WRITE_BACK:
                 # Flush caches root-ward one level at a time; each flush can
                 # wake downstream queues, so re-drain after each (cheap when
@@ -665,21 +1018,28 @@ class TascadeEngine:
                     if not spec.merge:
                         continue
                     _flush_at(li)
-                    (levels, dest_shard, overflow,
-                     sent, filtered, coalesced) = self._drain_all(
+                    (levels, dest_shard, overflow, sent, filtered,
+                     coalesced, retrans, afail, rest) = self._drain_all(
                         levels, dest_shard, overflow, sent, filtered,
-                        coalesced)
+                        coalesced, retrans, afail, rest=rest)
+            if rest is not None:
+                # Only reachable if the progress limit tripped before every
+                # input entry was admitted; anything still stranded is a
+                # counted loss, preserving the exact-overflow contract.
+                overflow = overflow + rest.count()
         else:
             for li, spec in enumerate(self.levels):
                 is_last = li + 1 == nlev
                 incoming = new if li == 0 else None
-                lvl, out, n_sent, f, c, d = self._level_round(
-                    spec, levels[li], incoming)
+                lvl, out, n_sent, f, c, d, nr, ab = self._level_round(
+                    spec, levels[li], incoming, li)
                 levels[li] = lvl
                 sent = sent.at[li].add(n_sent)
                 filtered = filtered + f
                 coalesced = coalesced + c
                 overflow = overflow + d
+                retrans = retrans + nr
+                afail = afail | ab
                 if is_last:
                     dest_shard = pcache.apply_to_owner(
                         dest_shard, out, op=self.op, base=self.geom.my_base()
@@ -693,6 +1053,15 @@ class TascadeEngine:
         inflight = jnp.int32(0)
         for lvl in levels:
             inflight = inflight + lvl.pending.count()
+        backlog = jnp.int32(0)
+        if self.cfg.fault_plan is not None:
+            # Recovery in flight counts as inflight work: an update lost on
+            # the step's last round lives only in a retransmit slot (or a
+            # delayed replay row), and callers' liveness checks must keep
+            # stepping until it lands.
+            for lvl in levels:
+                backlog = backlog + lvl.net.backlog
+            inflight = inflight + backlog
 
         # Per-lane pending occupancy: one scatter-count of (extended idx
         # mod L) per queue. With a single lane it is just the total.
@@ -705,6 +1074,10 @@ class TascadeEngine:
                                  lvl.pending.idx % self.lanes, self.lanes)
                 lane_inflight = lane_inflight.at[lane].add(1)
             lane_inflight = lane_inflight[: self.lanes]
+            # Backlog rows are packed wire, not lane-attributable without a
+            # decode; charge lane 0 so any lane-liveness sum stays positive
+            # while recovery is in flight.
+            lane_inflight = lane_inflight.at[0].add(backlog)
 
         # NoC traffic proxy: bytes derive from the ACTUAL per-level wire
         # layout — 4-byte routing key + codec-width payload on packed
@@ -717,6 +1090,30 @@ class TascadeEngine:
             hop_bytes = hop_bytes + \
                 sent[li].astype(jnp.float32) * msg_bytes * spec.mean_hops
 
+        if audit_mono:
+            # MIN/MAX monotonicity: the owner shard may only move in the
+            # reduction's direction — any regression means a merge path
+            # delivered a value it never should have (or corruption slipped
+            # past the checksum).
+            mono_ok = jnp.all(self.op.improves(dest_shard, dest0)
+                              | (dest_shard == dest0))
+            afail = afail | jnp.where(mono_ok, 0, 2).astype(jnp.int32)
+            checkify.check(
+                mono_ok, "audit: MIN/MAX monotonicity violated on the "
+                "owner shard")
+        if self.cfg.audit and self.cfg.overflow_policy == "spill":
+            # Under the default policy the capacity plan makes drops
+            # unreachable; a nonzero counter is an engine bug, not load.
+            afail = afail | jnp.where(overflow == 0, 0, 4).astype(jnp.int32)
+            checkify.check(
+                overflow == 0,
+                "audit: pending-queue drop under overflow_policy='spill'")
+        if self.cfg.overflow_policy == "strict":
+            checkify.check(
+                overflow == 0,
+                "overflow_policy='strict': a pending-queue update was "
+                "dropped")
+
         new_state = EngineState(levels=tuple(levels), overflow=overflow)
         stats = StepStats(
             sent=sent,
@@ -725,6 +1122,8 @@ class TascadeEngine:
             filtered=filtered,
             coalesced=coalesced,
             lane_inflight=lane_inflight,
+            retransmits=retrans,
+            audit_fail=afail,
         )
         return new_state, dest_shard, stats
 

@@ -688,3 +688,39 @@ def compact(stream: UpdateStream, cap: int | None = None) -> UpdateStream:
         jnp.where(valid, stream.val, 0))
     n = jnp.minimum(jnp.sum(valid, dtype=jnp.int32), out_cap)
     return UpdateStream(idx[:out_cap], val[:out_cap], n)
+
+
+def transfer(pending: UpdateStream,
+             src: UpdateStream) -> tuple[UpdateStream, UpdateStream]:
+    """Move as many of ``src``'s entries into ``pending`` as fit its free
+    space; the remainder stays in ``src`` (front-compacted, same capacity).
+
+    LOSSLESS by construction — the spill half of the engine's
+    ``overflow_policy="spill"``: input that cannot be admitted this drain
+    iteration is retried on the next, once the exchange has freed queue
+    slots. Returns ``(pending', rest)``; ``rest.count() == 0`` once all of
+    ``src`` has been admitted.
+    """
+    if pending.n is None:
+        pending = compact(pending)
+    if src.n is None:
+        src = compact(src)
+    cap = src.capacity
+    free = pending.capacity - pending.count()
+    take = jnp.minimum(src.count(), free)
+    sel = jnp.arange(cap, dtype=jnp.int32) < take
+    moved = UpdateStream(jnp.where(sel, src.idx, NO_IDX),
+                         jnp.where(sel, src.val, 0))
+    pending2, dropped = enqueue(pending, moved)
+    # take <= free, so nothing can drop here; the counter is a trace-time
+    # invariant, not runtime state, hence no assert.
+    del dropped
+    # Remainder: shift the surviving suffix to the front (src is compacted,
+    # so this is a bounded gather, no scatter/sort needed).
+    pos = jnp.arange(cap, dtype=jnp.int32) + take
+    ok = pos < src.count()
+    posc = jnp.clip(pos, 0, cap - 1)
+    rest = UpdateStream(jnp.where(ok, src.idx[posc], NO_IDX),
+                        jnp.where(ok, src.val[posc], 0),
+                        src.count() - take)
+    return pending2, rest

@@ -1,0 +1,142 @@
+"""Wire-level fault injection for the self-healing exchange.
+
+A ``FaultPlan`` on ``TascadeConfig`` turns the per-level all_to_all into a
+lossy channel: between the fused route-pack epilogue and the receiver's
+``wire_to_stream`` decode, each per-peer bucket row may independently be
+
+  - **dropped**    (lost packet: the row arrives as "no packet"),
+  - **corrupted**  (a single bit of one packed payload word is flipped),
+  - **delayed**    (the row arrives but is only processed one round later),
+  - **duplicated** (the row is processed this round AND replayed next round).
+
+All decisions are drawn from a ``jax.random`` fold-in chain keyed on
+``(seed, level, epoch, sender_linear_id, dest_peer)``.  Because the chain is
+a pure function of the *edge* identity, the sender and the receiver of a
+bucket derive identical decisions from their own coordinates — this is what
+lets the channel be simulated with ZERO extra collectives:
+
+  - the **sender** uses the masks to emulate loss (mask the row out of its
+    transmitted block) and to emulate the NACK/timeout feedback path (it
+    retransmits rows whose previous-epoch masks said drop-or-corrupt);
+  - the **receiver** uses the masks only to emulate channel *re-delivery*
+    (buffering duplicated/delayed rows for the next round).
+
+Corruption detection itself never consults the masks: the receiver trusts
+only the integrity word (``checksum``) and the epoch sequence tag carried in
+the wire header, exactly as a real NIC would.
+
+The fault path is statically gated on ``cfg.fault_plan is not None`` — with
+no plan configured, nothing here is traced and the wire is byte-identical
+to the fault-free engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Extra int32 columns appended per peer row when a FaultPlan is active:
+# [checksum over the body words, epoch sequence tag].
+HEADER_WORDS = 2
+
+_RATE_FIELDS = ("drop_rate", "dup_rate", "delay_rate", "corrupt_rate")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seed-deterministic wire fault model (rates are per bucket row).
+
+    Hashable and immutable: it rides on ``TascadeConfig`` which keys the
+    compiled-program caches.
+    """
+
+    seed: int = 0
+    drop_rate: float = 0.0
+    dup_rate: float = 0.0
+    delay_rate: float = 0.0
+    corrupt_rate: float = 0.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "seed", int(self.seed))
+        for name in _RATE_FIELDS:
+            r = float(getattr(self, name))
+            if not 0.0 <= r <= 0.9:
+                raise ValueError(f"FaultPlan.{name} must be in [0, 0.9], got {r}")
+            object.__setattr__(self, name, r)
+
+    @property
+    def active(self) -> bool:
+        """True if any fault class can actually fire.  A plan with all-zero
+        rates still engages the header/retransmit machinery (useful to prove
+        the protocol is overhead-only-no-behaviour-change)."""
+        return any(getattr(self, name) > 0.0 for name in _RATE_FIELDS)
+
+
+class EdgeFaults(NamedTuple):
+    """Per-edge fault decisions for one (level, epoch).  All vectors have one
+    entry per edge; at most ONE of drop/corrupt/delay/dup is set per edge
+    (precedence drop > corrupt > delay > dup)."""
+
+    drop: jnp.ndarray     # bool[E]
+    corrupt: jnp.ndarray  # bool[E]
+    delay: jnp.ndarray    # bool[E]
+    dup: jnp.ndarray      # bool[E]
+    c_col: jnp.ndarray    # int32[E] body word whose bit is flipped (if corrupt)
+    c_bit: jnp.ndarray    # int32[E] bit position in that word
+
+
+def edge_masks(plan: FaultPlan, level: int, epoch, sender_lin, dest,
+               n_cols: int) -> EdgeFaults:
+    """Draw the fault decisions for a batch of edges.
+
+    ``sender_lin`` and ``dest`` are equal-length int32 vectors identifying
+    each edge by (sender linear device id, destination peer index within the
+    level's exchange group); ``epoch`` is the level's round counter (traced).
+    Deterministic: the same (seed, level, epoch, edge) always draws the same
+    decision, which is what lets both endpoints of an edge agree without
+    communicating.
+    """
+    base = jax.random.PRNGKey(plan.seed)
+    base = jax.random.fold_in(base, level)
+    base = jax.random.fold_in(base, epoch)
+
+    def one(s, d):
+        k = jax.random.fold_in(jax.random.fold_in(base, s), d)
+        ku, kc = jax.random.split(k)
+        u = jax.random.uniform(ku, (4,))
+        q = jax.random.randint(kc, (), 0, n_cols * 32)
+        return u, q
+
+    u, q = jax.vmap(one)(jnp.asarray(sender_lin, jnp.int32),
+                         jnp.asarray(dest, jnp.int32))
+    drop = u[:, 0] < plan.drop_rate
+    corrupt = (u[:, 1] < plan.corrupt_rate) & ~drop
+    delay = (u[:, 2] < plan.delay_rate) & ~drop & ~corrupt
+    dup = (u[:, 3] < plan.dup_rate) & ~drop & ~corrupt & ~delay
+    return EdgeFaults(drop=drop, corrupt=corrupt, delay=delay, dup=dup,
+                      c_col=(q // 32).astype(jnp.int32),
+                      c_bit=(q % 32).astype(jnp.int32))
+
+
+def checksum(body: jnp.ndarray) -> jnp.ndarray:
+    """Position-weighted wraparound-i32 checksum per row.
+
+    ``ck[r] = sum_i (2i+1) * body[r, i] mod 2^32``.  Odd weights are units
+    mod 2^32, so flipping any single bit of any single word always changes
+    the sum — every injected single-bit corruption is detected.  Pure i32
+    arithmetic keeps it inside the packed-wire dtype (no widening).
+    """
+    body = body.astype(jnp.int32)
+    w = (2 * jnp.arange(body.shape[-1], dtype=jnp.int32) + 1)
+    return jnp.sum(body * w, axis=-1, dtype=jnp.int32)
+
+
+def flip_bits(body: jnp.ndarray, do: jnp.ndarray, c_col: jnp.ndarray,
+              c_bit: jnp.ndarray) -> jnp.ndarray:
+    """XOR a single bit (``c_bit`` of word ``c_col``) into each row where
+    ``do`` is set; other rows pass through untouched."""
+    rows = jnp.arange(body.shape[0])
+    mask = jnp.where(do, jnp.left_shift(jnp.int32(1), c_bit), jnp.int32(0))
+    return body.at[rows, c_col].set(body[rows, c_col] ^ mask)

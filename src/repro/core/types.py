@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.codec import PayloadCodec
+from repro.core.faults import FaultPlan
 
 # Sentinel index marking an inactive update slot / empty cache line.
 NO_IDX = jnp.int32(-1)
@@ -217,6 +218,35 @@ class TascadeConfig:
                         bounded-error codec (bf16/f16) is allowed to
                         introduce; must be > 0 to select one (0.0 forbids
                         them). Ignored by bit-exact codecs.
+      fault_plan     -- wire-level fault injection (``core.faults.FaultPlan``)
+                        between the route-pack epilogue and the receiver's
+                        decode: per-peer bucket drop, duplication,
+                        payload-word bit-flips and one-round delay, all
+                        seed-deterministic. A plan (even all-zero rates)
+                        engages the self-healing protocol: a
+                        checksum + epoch-tag wire header, a per-level
+                        retransmit slot (at-least-once delivery) and
+                        epoch-based duplicate suppression for ADD.
+                        None (default) keeps the wire byte-identical to
+                        the fault-free engine.
+      overflow_policy -- what a pending-queue drop means:
+                        "spill" (default) — leftovers retry on later drain
+                        iterations and the geometric capacity plan makes
+                        true drops unreachable; if one ever occurs it is
+                        counted AND flagged by the auditor.
+                        "strict" — any nonzero drop count checkify-raises
+                        inside jit (callers wrap with
+                        ``checkify.checkify`` — ``api`` and ``graph.apps``
+                        do this automatically).
+                        "drop" — explicit opt-out: drops are silently
+                        counted in ``EngineState.overflow`` (A/B baselines
+                        and the overflow-accounting harness only).
+      audit          -- runtime conservation auditor: per level-round,
+                        checkify-assert wire mass conservation
+                        (sent == delivered + channel-lost + deferred) and
+                        per-step MIN/MAX monotonicity of the owner shard;
+                        failures also surface as a bitmask in
+                        ``StepStats.audit_fail``.
     """
 
     region_axes: Sequence[str] = ("model",)
@@ -236,6 +266,9 @@ class TascadeConfig:
     pallas_interpret: bool | None = None  # None = auto-select by backend
     wire_codec: PayloadCodec = PayloadCodec.RAW32  # packed-wire payload codec
     codec_error_budget: float = 0.0  # rel error opt-in for bf16/f16 (> 0)
+    fault_plan: FaultPlan | None = None  # wire fault injection + self-healing
+    overflow_policy: str = "spill"  # "spill" | "strict" | "drop"
+    audit: bool = False  # runtime conservation auditor (checkify)
 
     def __post_init__(self):
         object.__setattr__(self, "region_axes", tuple(self.region_axes))
@@ -253,6 +286,15 @@ class TascadeConfig:
             raise ValueError(
                 f"lane_capacity_share must be in (0, 1], got "
                 f"{self.lane_capacity_share}")
+        if self.fault_plan is not None and not isinstance(
+                self.fault_plan, FaultPlan):
+            raise TypeError(
+                f"fault_plan must be a core.faults.FaultPlan or None, got "
+                f"{type(self.fault_plan).__name__}")
+        if self.overflow_policy not in ("spill", "strict", "drop"):
+            raise ValueError(
+                f"overflow_policy must be 'spill', 'strict' or 'drop', got "
+                f"{self.overflow_policy!r}")
 
     @property
     def all_axes(self) -> tuple[str, ...]:

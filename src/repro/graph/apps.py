@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from jax.experimental import checkify
+
 from repro.core import (
     CascadeMode,
     MeshGeom,
@@ -30,6 +32,7 @@ from repro.core import (
     WritePolicy,
     compat,
 )
+from repro.core.api import _wants_checkify
 from repro.core.types import NO_IDX, UpdateStream
 from repro.graph.partition import ShardedGraph
 from repro.kernels.segment_reduce.ops import bucket_gather
@@ -47,6 +50,8 @@ class RunMetrics(NamedTuple):
     lane_epochs: jnp.ndarray  # int32[n_lanes] epoch at which each query
                               # lane went globally inactive (== epochs while
                               # a lane is still running at cutoff)
+    retransmits: jnp.ndarray  # int32 buckets re-emitted through the
+                              # at-least-once path (0 unless cfg.fault_plan)
 
 
 # Compiled-app cache: the static plan (mesh, config, shard shapes, app tag)
@@ -70,6 +75,22 @@ def _cached(key, build):
 
 def _axes(mesh):
     return tuple(mesh.axis_names)
+
+
+def _maybe_checkify(fn, cfg: TascadeConfig):
+    """Functionalize the engine's checkify assertions (runtime auditor /
+    strict overflow policy) and throw eagerly, mirroring the standalone API.
+    A no-op for configs that emit no checks."""
+    if not _wants_checkify(cfg):
+        return fn
+    checked = checkify.checkify(fn)
+
+    def wrapped(*args, _checked=checked):
+        err, out = _checked(*args)
+        err.throw()
+        return out
+
+    return wrapped
 
 
 def _graph_specs(mesh):
@@ -225,12 +246,13 @@ def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
                 acc[2] + stats.filtered,
                 acc[3] + stats.coalesced,
                 acc[4] + n_relaxed.astype(jnp.float32),
+                acc[5] + stats.retransmits,
             )
             return (state, dist, frontier, skip, active, epoch + 1,
                     lane_ep, acc)
 
         acc0 = (jnp.int32(0), jnp.float32(0), jnp.int32(0), jnp.int32(0),
-                jnp.float32(0))
+                jnp.float32(0), jnp.int32(0))
         skip0 = jnp.zeros((n_shard, lanes), jnp.int32)
         lane_ep0 = jnp.zeros((lanes,), jnp.int32)
         state, dist, _, _, active, epoch, lane_ep, acc = jax.lax.while_loop(
@@ -247,18 +269,19 @@ def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
             overflow=jax.lax.psum(state.overflow, axes),
             edges_relaxed=jax.lax.psum(acc[4], axes),
             lane_epochs=lane_ep,  # psummed lane_active => replicated
+            retransmits=jax.lax.psum(acc[5], axes),
         )
         # Single-lane callers keep the historical [shard] result shape.
         return (dist[:, 0] if lanes == 1 else dist), m
 
     a = _axes(mesh)
-    return jax.jit(compat.shard_map(
+    return _maybe_checkify(jax.jit(compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=_graph_specs(mesh) + (P(),),  # replicated seed vector
         out_specs=(P(a) if lanes == 1 else P(a, None),
-                   RunMetrics(*([P()] * 8))),
+                   RunMetrics(*([P()] * 9))),
         check_vma=False,
-    ))
+    )), cfg)
 
 
 def _sssp_init(base, shard, seeds):
@@ -389,6 +412,7 @@ def _build_pagerank(mesh, sg, cfg, iters, d, dense):
                 hopb = jnp.float32(hb)
                 filtered = coalesced = jnp.int32(0)
                 overflow = jnp.int32(0)
+                retrans = jnp.int32(0)
             else:
                 new = UpdateStream(jnp.where(ok, dst, NO_IDX),
                                   jnp.where(ok, contrib, 0.0))
@@ -404,14 +428,15 @@ def _build_pagerank(mesh, sg, cfg, iters, d, dense):
                 hopb = stats.hop_bytes
                 filtered, coalesced = stats.filtered, stats.coalesced
                 overflow = state.overflow
+                retrans = stats.retransmits
             rank = (1.0 - d) / n + d * sums
             acc = (acc[0] + stats_sent, acc[1] + hopb, acc[2] + filtered,
-                   acc[3] + coalesced, acc[4] + overflow)
+                   acc[3] + coalesced, acc[4] + overflow, acc[5] + retrans)
             return (rank, acc), None
 
         rank0 = jnp.full((n_shard,), 1.0 / n, jnp.float32)
         acc0 = (jnp.int32(0), jnp.float32(0), jnp.int32(0), jnp.int32(0),
-                jnp.int32(0))
+                jnp.int32(0), jnp.int32(0))
         (rank, acc), _ = jax.lax.scan(body, (rank0, acc0), None, length=iters)
         m = RunMetrics(
             epochs=jnp.int32(iters),
@@ -422,16 +447,17 @@ def _build_pagerank(mesh, sg, cfg, iters, d, dense):
             overflow=jax.lax.psum(acc[4], axes),
             edges_relaxed=jnp.float32(0),
             lane_epochs=jnp.full((1,), iters, jnp.int32),
+            retransmits=jax.lax.psum(acc[5], axes),
         )
         return rank, m
 
     a = _axes(mesh)
-    return jax.jit(compat.shard_map(
+    return _maybe_checkify(jax.jit(compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=_graph_specs(mesh) + (P(a, None),),
-        out_specs=(P(a), RunMetrics(*([P()] * 8))),
+        out_specs=(P(a), RunMetrics(*([P()] * 9))),
         check_vma=False,
-    ))
+    )), cfg)
 
 
 def run_spmv(mesh, sg: ShardedGraph, x: np.ndarray, cfg: TascadeConfig):
@@ -473,16 +499,17 @@ def _build_spmv(mesh, sg, cfg):
             overflow=jax.lax.psum(state.overflow, axes),
             edges_relaxed=jax.lax.psum(jnp.sum(ok.astype(jnp.float32)), axes),
             lane_epochs=jnp.ones((1,), jnp.int32),
+            retransmits=jax.lax.psum(stats.retransmits, axes),
         )
         return y, m
 
     a = _axes(mesh)
-    return jax.jit(compat.shard_map(
+    return _maybe_checkify(jax.jit(compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=_graph_specs(mesh) + (P(a),),
-        out_specs=(P(a), RunMetrics(*([P()] * 8))),
+        out_specs=(P(a), RunMetrics(*([P()] * 9))),
         check_vma=False,
-    ))
+    )), cfg)
 
 
 def run_histogram(mesh, keys: np.ndarray, num_bins: int, cfg: TascadeConfig):

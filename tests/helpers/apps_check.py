@@ -125,9 +125,12 @@ def main():
           f"edges={o_edges}, dist still exact")
 
     # ---- overflow surfacing: an undersized engine must COUNT its drops in
-    # RunMetrics.overflow, never silently clamp them away ----
+    # RunMetrics.overflow, never silently clamp them away. Needs the
+    # explicit "drop" opt-out: the default "spill" policy retries the
+    # unadmitted input across drain iterations and would drop nothing. ----
     c_tiny = TascadeConfig(**{**cfg.__dict__, "exchange_slack": 0.25,
-                              "sync_merge": True})
+                              "sync_merge": True,
+                              "overflow_policy": "drop"})
     _, m = apps.run_sssp(mesh, sg, root, c_tiny, max_epochs=32)
     assert int(m.overflow) > 0, "undersized queues must surface overflow"
     print(f"OK overflow surfaced through RunMetrics: {int(m.overflow)} drops")

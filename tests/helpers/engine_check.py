@@ -402,11 +402,16 @@ def check_wire_codecs(mesh, ndev):
 def check_overflow_accounting(mesh, ndev):
     """EngineState.overflow is an exact audit: with all-ones ADD updates and
     no coalescing (OWNER_DIRECT), every dropped update removes exactly 1.0
-    of delivered mass, so delivered + overflow == injected."""
+    of delivered mass, so delivered + overflow == injected.
+
+    Requires overflow_policy="drop" — the explicit opt-out — since the
+    default "spill" policy retries unadmitted input across drain iterations
+    and would deliver everything here."""
     vpad, u = 128, 96
     cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
                         capacity_ratio=4, policy=WritePolicy.WRITE_BACK,
-                        mode=CascadeMode.OWNER_DIRECT, exchange_slack=0.25)
+                        mode=CascadeMode.OWNER_DIRECT, exchange_slack=0.25,
+                        overflow_policy="drop")
     rng = np.random.default_rng(7)
     idx = rng.integers(0, vpad, size=(ndev, u)).astype(np.int32)
     val = np.ones((ndev, u), np.float32)

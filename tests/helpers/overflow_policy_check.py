@@ -1,0 +1,94 @@
+"""Engine-level overflow_policy checks (run in a subprocess: needs a fake
+8-device mesh, so XLA flags must be set before jax imports).
+
+  * "strict": the first dropped pending-queue update raises through checkify.
+  * "spill" (default): a workload engineered to overflow the level-0 queue
+    (exchange_slack=0.25 shrinks it to u/4) converges BIT-EQUAL to an
+    uncapped run, with a zero overflow counter — undersized queues stretch
+    the drain schedule instead of losing updates.
+
+Prints OVERFLOW_POLICY_OK on success.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    CascadeMode,
+    ReduceOp,
+    TascadeConfig,
+    WritePolicy,
+    compat,
+    tascade_scatter_reduce,
+)
+
+NDEV, VPAD, U = 8, 256, 96
+
+
+def _mesh():
+    return compat.make_mesh((2, 4), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
+
+
+def _cfg(**kw):
+    return TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                         capacity_ratio=4, policy=WritePolicy.WRITE_BACK,
+                         **kw)
+
+
+def check_spill_bit_equal(mesh):
+    rng = np.random.default_rng(3)
+    idx = rng.integers(0, VPAD, size=(NDEV, U)).astype(np.int32)
+    # Integer-valued floats: ADD re-association under the stretched spill
+    # schedule must not perturb bits.
+    val = rng.integers(1, 9, size=(NDEV, U)).astype(np.float32)
+    for mode in (CascadeMode.TASCADE, CascadeMode.FULL_CASCADE):
+        for op in (ReduceOp.ADD, ReduceOp.MIN):
+            outs = {}
+            for slack, tag in ((4.0, "uncapped"), (0.25, "tight")):
+                cfg = _cfg(mode=mode, exchange_slack=slack)
+                assert cfg.overflow_policy == "spill"  # the default
+                dest0 = jnp.zeros((VPAD,), jnp.float32) if op is ReduceOp.ADD \
+                    else jnp.full((VPAD,), jnp.inf, jnp.float32)
+                out, stats = tascade_scatter_reduce(
+                    dest0, jnp.asarray(idx), jnp.asarray(val),
+                    op=op, cfg=cfg, mesh=mesh, return_stats=True)
+                assert int(stats["overflow"]) == 0, (
+                    f"{mode.name} {op.name} slack={slack}: spill dropped "
+                    f"{int(stats['overflow'])} updates")
+                assert int(stats["residual"]) == 0
+                outs[tag] = np.asarray(out)
+            assert np.array_equal(outs["uncapped"], outs["tight"]), (
+                f"{mode.name} {op.name}: spill result != uncapped result")
+            print(f"OK spill bit-equal: {mode.name} {op.name}")
+
+
+def check_strict_raises(mesh):
+    rng = np.random.default_rng(7)
+    idx = rng.integers(0, 128, size=(NDEV, U)).astype(np.int32)
+    val = np.ones((NDEV, U), np.float32)
+    cfg = _cfg(mode=CascadeMode.OWNER_DIRECT, exchange_slack=0.25,
+               overflow_policy="strict")
+    try:
+        tascade_scatter_reduce(
+            jnp.zeros((128,), jnp.float32), jnp.asarray(idx),
+            jnp.asarray(val), op=ReduceOp.ADD, cfg=cfg, mesh=mesh)
+    except Exception as e:  # checkify surfaces as JaxRuntimeError
+        assert "strict" in str(e), f"wrong failure: {e}"
+        print("OK strict raises on first dropped update")
+        return
+    raise AssertionError("strict policy swallowed a dropped update")
+
+
+def main():
+    mesh = _mesh()
+    check_spill_bit_equal(mesh)
+    check_strict_raises(mesh)
+    print("OVERFLOW_POLICY_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,11 @@ through it ``RunMetrics.overflow`` — is an exact audit of lost updates), and
 Deterministic sweeps always run; hypothesis widens the sweep when available
 (same dependency policy as tests/test_kernels.py).
 """
+import os
+import subprocess
+import sys
+from pathlib import Path
+
 import numpy as np
 import pytest
 
@@ -157,6 +162,26 @@ def test_wire_roundtrip_bit_exact(packed):
         np.testing.assert_array_equal(
             np.float32(v).view(np.uint32), np.float32(got[int(i)]).view(np.uint32),
             err_msg=f"idx {i} value bits changed on the wire")
+
+
+def test_overflow_policy_engine_semantics():
+    """Engine-level overflow_policy contract, on a fake 8-device mesh (hence
+    subprocess: device count is fixed at jax import):
+
+      * "strict" raises through checkify on the FIRST dropped update;
+      * "spill" (the default) converges bit-equal to an uncapped run on a
+        workload engineered to overflow the level-0 pending queue, with the
+        overflow counter staying zero.
+    """
+    repo = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(repo / "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run(
+        [sys.executable, str(repo / "tests/helpers/overflow_policy_check.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "OVERFLOW_POLICY_OK" in r.stdout
 
 
 if HAVE_HYP:

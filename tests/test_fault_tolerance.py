@@ -47,6 +47,60 @@ def test_ckpt_roundtrip_and_keep_n(tmp_path):
     np.testing.assert_array_equal(np.asarray(restored["b"][0]), np.ones(4))
 
 
+def test_ckpt_background_write_failure_reraises(tmp_path):
+    """A failed background write must NOT be swallowed by the daemon thread:
+    the captured exception re-raises at the next wait()/save(), and the
+    manager stays usable afterwards."""
+    mgr = CheckpointManager(str(tmp_path), keep_n=2)
+    tree = {"a": jnp.arange(4.0)}
+    # Point the write at a path whose parent is a FILE -> os.makedirs fails
+    # inside the background thread.
+    blocker = tmp_path / "blocked"
+    blocker.write_text("not a directory")
+    mgr.dir = str(blocker / "sub")
+    mgr.save(1, tree)  # async: error lands in the thread
+    with pytest.raises(OSError):
+        mgr.wait()
+    # error is delivered exactly once, then cleared
+    mgr.wait()
+    # save() itself surfaces a prior failure (it syncs via wait() first)
+    mgr.save(2, tree)
+    with pytest.raises(OSError):
+        mgr.save(3, tree)
+    # manager still usable once the obstruction is gone
+    mgr.dir = str(tmp_path)
+    mgr.save(4, tree, blocking=True)
+    assert mgr.all_steps() == [4]
+
+
+def test_ckpt_restore_latest_skips_corrupt_step(tmp_path):
+    """restore_latest falls back to the newest READABLE step when the latest
+    checkpoint is truncated or missing its metadata (crash mid-publish)."""
+    mgr = CheckpointManager(str(tmp_path), keep_n=3)
+    tree = {"w": jnp.arange(8.0)}
+    mgr.save(1, {"w": jnp.arange(8.0)}, blocking=True)
+    mgr.save(2, {"w": jnp.arange(8.0) * 2}, blocking=True)
+    mgr.save(3, {"w": jnp.arange(8.0) * 3}, blocking=True)
+
+    # Truncate the newest step's arrays.npz to garbage...
+    step3 = tmp_path / "step_0000000003"
+    data = (step3 / "arrays.npz").read_bytes()
+    (step3 / "arrays.npz").write_bytes(data[: len(data) // 2])
+    # ...and knock the meta out of step 2 as a second corruption mode.
+    (tmp_path / "step_0000000002" / "meta.json").unlink()
+
+    restored, meta = mgr.restore_latest(tree)
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(8.0))
+
+    # All steps corrupt -> (None, None), not an exception.
+    (tmp_path / "step_0000000001" / "meta.json").unlink()
+    with pytest.warns(RuntimeWarning, match="no readable checkpoint"):
+        restored, meta = mgr.restore_latest(tree)
+    assert restored is None and meta is None
+
+
 def test_kill_resume_bit_exact(tmp_path):
     """A preempted run (SIGTERM -> exit 17) resumed from its checkpoint must
     produce exactly the loss trace of an uninterrupted run."""
