@@ -1,0 +1,203 @@
+"""Serving benchmark: the always-on query service under Poisson load,
+run inside one 8-fake-device process (spawned by benchmarks.run, or
+standalone as the CI smoke job: SERVE_SMOKE=1 shrinks the load).
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  serve/sssp/solo      -- sequential single-lane baseline (epochs/query)
+  serve/sssp/clean     -- K=8 lanes, Poisson arrivals at 3x the solo
+                          service rate
+  serve/sssp/faulted   -- same load under FaultPlan(drop 5%, corrupt 2%)
+  serve/sssp/overload  -- 12x arrivals into a 2-deep queue + tiny budgets:
+                          shedding, preemption and retry accounting
+
+All serving gates are MACHINE-INDEPENDENT (latency is measured in ticks,
+one tick == one engine epoch) and self-asserted here as well as in
+``benchmarks.run``'s serve_row_gates:
+
+  * zero lost queries, accounting identity holds (accounted=1),
+  * completed results bit-equal to solo runs (bitequal=1),
+  * clean throughput >= 2x the single-lane baseline (qps_x),
+  * p99 latency within the configured SLO, clean AND faulted (slo_ok=1),
+  * no starvation ticks (starved=0),
+  * overload actually sheds AND still accounts for every query.
+
+Ends with SERVE_BENCH_DONE on success.
+"""
+import os
+import sys
+
+ndev = int(os.environ.get("BENCH_DEVICES", "8"))
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import CascadeMode, FaultPlan, TascadeConfig, compat
+from repro.graph import apps
+from repro.graph.partition import shard_graph
+from repro.graph.rmat import rmat_graph
+from repro.serve import ServeConfig, TascadeService
+from repro.serve.types import COMPLETED
+
+SMOKE = os.environ.get("SERVE_SMOKE", "0") == "1"
+FAILURES: list[str] = []
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def gate(cond, msg):
+    if not cond:
+        FAILURES.append(msg)
+        print(f"SERVE_GATE_FAIL {msg}", flush=True)
+
+
+def poisson_arrivals(rng, rate, n):
+    """Submission ticks of n queries with Exp(1/rate) inter-arrivals."""
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return np.maximum(1, np.ceil(np.cumsum(gaps))).astype(np.int64)
+
+
+def drive(svc, arrivals, roots_seq):
+    """Feed the Poisson schedule tick by tick, then drain; returns
+    (results, wall_seconds_in_step)."""
+    i, t, wall = 0, 0, 0.0
+    results = []
+    while i < len(arrivals) or svc.in_flight > 0:
+        t += 1
+        while i < len(arrivals) and arrivals[i] <= t:
+            svc.submit(int(roots_seq[i]))
+            i += 1
+        t0 = time.perf_counter()
+        results.extend(svc.step())
+        wall += time.perf_counter() - t0
+        assert svc.accounted, f"accounting broke at tick {t}"
+        if svc.metrics.ticks > svc.serve_cfg.max_ticks:
+            break
+    results.extend(svc.run_until_idle())
+    return results, wall
+
+
+def serve_metrics_derived(svc, extra=""):
+    m = svc.metrics
+    d = (f"submitted={m.submitted};completed={m.completed};"
+         f"partial={m.partial};failed={m.failed};lost={m.lost};"
+         f"shed={m.rejected_new + m.shed_oldest};retried={m.retries};"
+         f"preempted={m.preemptions};p50_ticks={m.p50_ticks:.0f};"
+         f"p99_ticks={m.p99_ticks:.0f};epochs={m.engine_epochs};"
+         f"starved={m.starvation_ticks};"
+         f"accounted={int(svc.accounted and m.lost == 0)}")
+    return d + (";" + extra if extra else "")
+
+
+def main():
+    scale = int(os.environ.get("BENCH_SCALE", "9" if SMOKE else "10"))
+    mesh = compat.make_mesh((2, ndev // 2), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
+    g = rmat_graph(scale, edge_factor=8, seed=1, weighted=True)
+    sg = shard_graph(g, ndev)
+    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                        capacity_ratio=8, mode=CascadeMode.TASCADE,
+                        exchange_slack=2.0, lane_capacity_share=0.25)
+    wcap = max(3 * sg.emax // 16, 8)
+    rng = np.random.default_rng(23)
+
+    # Root pool + solo baseline (also the bit-equality references).
+    n_pool = 4 if SMOKE else 6
+    n_queries = 12 if SMOKE else 24
+    pool = [int(r) for r in np.argsort(-g.degrees)[:n_pool]]
+    refs, solo_epochs = {}, []
+    t0 = time.perf_counter()
+    for r in pool:
+        d, m = apps.run_sssp(mesh, sg, r, cfg, worklist_cap=wcap)
+        assert int(m.completed) == 1
+        refs[r] = np.asarray(d)
+        solo_epochs.append(int(m.epochs))
+    solo_wall = time.perf_counter() - t0
+    e_solo = float(np.mean(solo_epochs))
+    row("serve/sssp/solo", solo_wall / len(pool) * 1e6,
+        f"epochs={e_solo:.1f};queries={len(pool)}")
+
+    roots_seq = rng.choice(pool, size=n_queries)
+    slo = int(8 * e_solo)
+
+    def check_bitequal(results):
+        ok = 1
+        for res in results:
+            if res.status != COMPLETED:
+                continue
+            if not np.array_equal(res.dist, refs[res.root]):
+                ok = 0
+        return ok
+
+    def run_case(name, fault_plan, rate_x, scfg, *, want_all_completed):
+        ecfg = (cfg if fault_plan is None
+                else dataclasses.replace(cfg, fault_plan=fault_plan))
+        svc = TascadeService(mesh, sg, ecfg, scfg, worklist_cap=wcap)
+        arrivals = poisson_arrivals(rng, rate_x / e_solo, n_queries)
+        results, wall = drive(svc, arrivals, roots_seq)
+        m = svc.metrics
+        bitequal = check_bitequal(results)
+        # Throughput multiple over the sequential single-lane baseline,
+        # in the machine-independent tick domain: completed queries per
+        # engine epoch vs 1/e_solo.
+        qps_x = (m.completed * e_solo / max(m.engine_epochs, 1))
+        slo_ok = int(not results
+                     or m.p99_ticks <= scfg.slo_ticks)
+        extra = (f"bitequal={bitequal};qps_x={qps_x:.2f};"
+                 f"slo={scfg.slo_ticks};slo_ok={slo_ok};"
+                 f"arrival_x={rate_x:.1f}")
+        row(name, wall / max(m.engine_epochs, 1) * 1e6,
+            serve_metrics_derived(svc, extra))
+        gate(m.lost == 0 and svc.accounted, f"{name}: queries lost")
+        gate(bitequal == 1, f"{name}: completed results not bit-equal")
+        gate(m.starvation_ticks == 0, f"{name}: starvation ticks")
+        gate(m.overflow == 0, f"{name}: engine overflow")
+        if want_all_completed:
+            gate(m.completed == m.submitted,
+                 f"{name}: {m.submitted - m.completed} queries not "
+                 "completed under nominal load")
+            gate(slo_ok == 1,
+                 f"{name}: p99={m.p99_ticks:.0f} ticks > SLO {slo}")
+        return svc, qps_x
+
+    # Nominal Poisson load, clean: 3x the solo service rate into 8 lanes.
+    nominal = ServeConfig(n_lanes=8, epoch_budget=64 * max(1, int(e_solo)),
+                          quiesce_patience=8, slo_ticks=slo)
+    svc, qps_x = run_case("serve/sssp/clean", None, 3.0, nominal,
+                          want_all_completed=True)
+    gate(qps_x >= 2.0,
+         f"serve/sssp/clean: qps_x={qps_x:.2f} < 2x single-lane")
+
+    # Same load under the PR 7 fault plan: recovery stretches epochs but
+    # every completion must stay bit-equal and inside the SLO.
+    plan = FaultPlan(seed=7, drop_rate=0.05, corrupt_rate=0.02)
+    run_case("serve/sssp/faulted", plan, 3.0, nominal,
+             want_all_completed=True)
+
+    # Overload: 12x arrivals into a 2-deep queue with tiny budgets —
+    # shedding, preemption and retries must all fire and still account.
+    over = ServeConfig(n_lanes=8, epoch_budget=max(2, int(e_solo) // 2),
+                       quiesce_patience=1, max_pending=2,
+                       admission="drop_oldest", max_retries=1,
+                       slo_ticks=slo)
+    svc_o, _ = run_case("serve/sssp/overload", None, 12.0, over,
+                        want_all_completed=False)
+    mo = svc_o.metrics
+    gate(mo.shed_oldest + mo.rejected_new > 0,
+         "serve/sssp/overload: overload never shed")
+    gate(mo.terminal == mo.submitted,
+         "serve/sssp/overload: not every query reached a terminal state")
+
+    if FAILURES:
+        print(f"{len(FAILURES)} serving gate(s) failed", flush=True)
+        sys.exit(1)
+    print("SERVE_BENCH_DONE", flush=True)
+
+
+if __name__ == "__main__":
+    main()

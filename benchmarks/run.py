@@ -1,9 +1,12 @@
 """Benchmark harness: one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Multi-device engine benchmarks
-(paper Figs. 3-7 + Histogram) run in a spawned 8-fake-device subprocess;
-kernel microbenchmarks and the strong-scaling / storage models run
-in-process (1 device).
+(paper Figs. 3-7 + Histogram) and the serving benchmark (Poisson load on
+the always-on query service) each run in a spawned 8-fake-device
+subprocess with a per-ROW wall-clock timeout (``BENCH_ROW_TIMEOUT``, a
+wedged bench is killed as soon as it stops producing rows); kernel
+microbenchmarks and the strong-scaling / storage models run in-process
+(1 device).
 
   PYTHONPATH=src python -m benchmarks.run [--json [PATH]]
 
@@ -11,13 +14,17 @@ in-process (1 device).
 (default ``BENCH_engine.json``: us_per_call + sent/hop_bytes per row, plus
 ``table_elems`` — the engine plan's per-round idx-table work, which the
 coverage compaction shrinks) so the perf trajectory is tracked across PRs
-(see DESIGN.md §5).
+(see DESIGN.md §5). The snapshot is flushed after every section and from
+the SIGTERM/SIGINT handler, so a cancelled CI job still leaves a
+marked-partial snapshot of the rows it finished.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import selectors
+import signal
 import subprocess
 import sys
 import time
@@ -28,6 +35,38 @@ import numpy as np
 REPO = Path(__file__).resolve().parent.parent
 
 ROWS: list[dict] = []  # collected (name, us_per_call, derived) for --json
+
+# Where --json will land; set early so the signal handler and per-section
+# flushes can write partial snapshots if the run dies mid-way.
+_JSON_PATH: str | None = None
+
+
+def _snapshot_dict(ok: bool, partial: bool = False) -> dict:
+    return {
+        "meta": {
+            "devices": int(os.environ.get("BENCH_DEVICES", "8")),
+            "scale": int(os.environ.get("BENCH_SCALE", "10")),
+            "engine_ok": ok,
+            **({"partial": True} if partial else {}),
+        },
+        "rows": ROWS,
+    }
+
+
+def flush_snapshot(ok: bool = False, partial: bool = True) -> None:
+    """Write whatever rows exist so far. Called after every section and
+    from the signal handler, so a wedged or killed run still leaves a
+    usable (marked-partial) snapshot instead of nothing."""
+    if _JSON_PATH is not None:
+        Path(_JSON_PATH).write_text(
+            json.dumps(_snapshot_dict(ok, partial), indent=1))
+
+
+def _on_signal(signum, frame):
+    flush_snapshot()
+    print(f"bench interrupted by signal {signum}; partial snapshot "
+          f"flushed to {_JSON_PATH}", flush=True)
+    raise SystemExit(128 + signum)
 
 
 def _parse_derived(derived: str) -> dict:
@@ -43,7 +82,12 @@ def _parse_derived(derived: str) -> dict:
                        ("within_budget", "within_budget"),
                        ("max_rel_err", "max_rel_err"),
                        ("extra_epochs", "extra_epochs"),
-                       ("retransmits", "retransmits")):
+                       ("retransmits", "retransmits"),
+                       ("qps_x", "qps_x"), ("p50_ticks", "p50_ticks"),
+                       ("p99_ticks", "p99_ticks"), ("lost", "lost"),
+                       ("shed", "shed"), ("submitted", "submitted"),
+                       ("completed", "completed"), ("slo_ok", "slo_ok"),
+                       ("starved", "starved"), ("accounted", "accounted")):
         m = re.search(rf"{key}=(-?[\d.]+(?:e[+-]?\d+)?)", derived)
         if m:
             out[alias] = float(m.group(1))
@@ -56,27 +100,67 @@ def row(name, us, derived=""):
                  "derived": derived, **_parse_derived(derived)})
 
 
-def engine_benchmarks():
+def _sub_bench(script: str, done_marker: str, skip_prefixes: tuple,
+               fail_name: str) -> bool:
+    """Run one bench subprocess, streaming its CSV rows as they arrive.
+
+    The timeout is per ROW (``BENCH_ROW_TIMEOUT`` seconds, default 600,
+    measured between stdout lines), not per process: a wedged benchmark is
+    killed as soon as it stops producing rows, while a long run that keeps
+    reporting progress is left alone. Rows emitted before a timeout or
+    crash are kept and flushed to the partial snapshot."""
     env = dict(os.environ)
     env["PYTHONPATH"] = str(REPO / "src")
     env.setdefault("BENCH_DEVICES", "8")
     env.setdefault("BENCH_SCALE", "10")
-    proc = subprocess.run(
-        [sys.executable, str(REPO / "benchmarks" / "_engine_bench.py")],
-        env=env, capture_output=True, text=True, timeout=3600)
-    ok = "ENGINE_BENCH_DONE" in proc.stdout
-    for line in proc.stdout.splitlines():
-        if "," in line and not line.startswith("ENGINE"):
+    row_timeout = float(os.environ.get("BENCH_ROW_TIMEOUT", "600"))
+    proc = subprocess.Popen(
+        [sys.executable, str(REPO / "benchmarks" / script)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+    sel = selectors.DefaultSelector()
+    sel.register(proc.stdout, selectors.EVENT_READ)
+    ok, timed_out, buf = False, False, []
+    while True:
+        if not sel.select(timeout=row_timeout):
+            timed_out = True
+            proc.kill()
+            break
+        line = proc.stdout.readline()
+        if not line:
+            break
+        line = line.rstrip("\n")
+        buf.append(line)
+        if done_marker in line:
+            ok = True
+        elif "," in line and not line.startswith(skip_prefixes):
             name, us, derived = (line.split(",", 2) + ["", ""])[:3]
             try:
                 row(name, float(us), derived)
             except ValueError:
                 print(line, flush=True)
+    stderr = ""
+    try:
+        _, stderr = proc.communicate(timeout=30)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+    if timed_out:
+        print(f"{fail_name},0.0,TIMEOUT after {row_timeout:.0f}s with no "
+              "new row", flush=True)
     if not ok:
-        print("engine_bench,0.0,FAILED", flush=True)
-        sys.stderr.write(proc.stdout[-2000:] + proc.stderr[-4000:])
-        return False
-    return True
+        print(f"{fail_name},0.0,FAILED", flush=True)
+        sys.stderr.write("\n".join(buf[-20:]) + "\n" + stderr[-4000:])
+    flush_snapshot()
+    return ok
+
+
+def engine_benchmarks():
+    return _sub_bench("_engine_bench.py", "ENGINE_BENCH_DONE",
+                      ("ENGINE",), "engine_bench")
+
+
+def serve_benchmarks():
+    return _sub_bench("_serve_bench.py", "SERVE_BENCH_DONE",
+                      ("SERVE",), "serve_bench")
 
 
 def kernel_benchmarks():
@@ -291,6 +375,51 @@ def fault_row_gates(rows: list[dict]) -> list[str]:
     return out
 
 
+def serve_row_gates(rows: list[dict]) -> list[str]:
+    """Cross-row gates for the serving rows (``serve/*``), all
+    machine-independent — latency is measured in ticks (1 tick == 1
+    engine epoch) and throughput as a multiple of the single-lane
+    baseline, so they hold on any runner:
+
+      * every serve row must account for every query: ``lost=0`` and
+        ``accounted=1`` (submitted == completed + partial + failed),
+        with zero starvation ticks (a free lane never idles while a
+        ready query waits),
+      * completed results must be bit-equal to solo runs (``bitequal=1``),
+      * the clean Poisson row must clear 2x single-lane throughput
+        (``qps_x >= 2``) and its p99 must sit inside the configured SLO
+        (``slo_ok=1``) — and so must the faulted row: graceful
+        degradation under drop/corrupt faults, not a latency cliff,
+      * the overload row must have actually shed (``shed > 0``) — an
+        overload sweep that never sheds exercised nothing.
+    """
+    out: list[str] = []
+    for r in rows:
+        if not r["name"].startswith("serve/") or r["name"].endswith("/solo"):
+            continue
+        d = r.get("derived", "")
+        if "lost=0" not in d or "accounted=1" not in d:
+            out.append(f"{r['name']}: queries lost or unaccounted")
+        if "starved=0" not in d:
+            out.append(f"{r['name']}: starvation ticks recorded")
+        if "bitequal=0" in d:
+            out.append(f"{r['name']}: completed results not bit-equal "
+                       "to solo runs")
+        if r["name"].endswith(("/clean", "/faulted")):
+            if "slo_ok=1" not in d:
+                out.append(f"{r['name']}: p99 outside the configured SLO")
+        if r["name"].endswith("/clean"):
+            m = re.search(r"qps_x=([\d.]+)", d)
+            if not m or float(m.group(1)) < 2.0:
+                out.append(f"{r['name']}: throughput below 2x the "
+                           "single-lane baseline")
+        if r["name"].endswith("/overload"):
+            m = re.search(r"shed=(\d+)", d)
+            if not m or int(m.group(1)) == 0:
+                out.append(f"{r['name']}: overload never shed")
+    return out
+
+
 def compare_snapshots(old_path: str, rows: list[dict],
                       wall_tol: float = 0.25,
                       traffic_tol: float = 0.01) -> list[str]:
@@ -395,51 +524,50 @@ def compare_snapshots(old_path: str, rows: list[dict],
 
 
 def main(argv=None) -> None:
+    global _JSON_PATH
     argv = sys.argv[1:] if argv is None else argv
-    json_path = None
     if "--json" in argv:
         i = argv.index("--json")
-        json_path = (argv[i + 1] if i + 1 < len(argv)
-                     and not argv[i + 1].startswith("-") else "BENCH_engine.json")
+        _JSON_PATH = (argv[i + 1] if i + 1 < len(argv)
+                      and not argv[i + 1].startswith("-")
+                      else "BENCH_engine.json")
     compare_path = None
     if "--compare" in argv:
         i = argv.index("--compare")
         compare_path = (argv[i + 1] if i + 1 < len(argv)
                         and not argv[i + 1].startswith("-")
                         else "BENCH_engine.json")
+    # A SIGTERM/SIGINT mid-run (CI job cancelled, runner evicted) still
+    # flushes the rows collected so far as a marked-partial snapshot.
+    signal.signal(signal.SIGTERM, _on_signal)
+    signal.signal(signal.SIGINT, _on_signal)
     print("name,us_per_call,derived")
     ok = engine_benchmarks()
+    ok = serve_benchmarks() and ok
     kernel_benchmarks()
+    flush_snapshot()
     strong_scaling_model()
     storage_model()
-    if json_path is not None:
-        snapshot = {
-            "meta": {
-                "devices": int(os.environ.get("BENCH_DEVICES", "8")),
-                "scale": int(os.environ.get("BENCH_SCALE", "10")),
-                "engine_ok": ok,
-            },
-            "rows": ROWS,
-        }
-        Path(json_path).write_text(json.dumps(snapshot, indent=1))
-        print(f"wrote {json_path} ({len(ROWS)} rows)", flush=True)
+    if _JSON_PATH is not None:
+        Path(_JSON_PATH).write_text(
+            json.dumps(_snapshot_dict(ok, partial=False), indent=1))
+        print(f"wrote {_JSON_PATH} ({len(ROWS)} rows)", flush=True)
     regressions = []
     if compare_path is not None and Path(compare_path).exists():
         regressions = compare_snapshots(compare_path, ROWS)
     if compare_path is not None:
-        for line in codec_row_gates(ROWS):
-            print(f"REGRESSION {line}", flush=True)
-            regressions.append(line)
-        for line in fault_row_gates(ROWS):
-            print(f"REGRESSION {line}", flush=True)
-            regressions.append(line)
+        for gates in (codec_row_gates, fault_row_gates, serve_row_gates):
+            for line in gates(ROWS):
+                print(f"REGRESSION {line}", flush=True)
+                regressions.append(line)
     if not ok:
         raise SystemExit(1)
     if regressions:
         raise SystemExit(
             f"{len(regressions)} regression(s) — see REGRESSION lines above "
             "(wall-clock past tolerance, traffic drift, a codec-row "
-            "fidelity/width gate, or a fig_faults recovery gate)")
+            "fidelity/width gate, a fig_faults recovery gate, or a "
+            "serve/* serving gate)")
 
 
 if __name__ == "__main__":

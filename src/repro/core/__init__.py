@@ -4,6 +4,7 @@ from repro.core.api import (
     CascadeMode,
     MeshGeom,
     ReduceOp,
+    ResultQuality,
     TascadeConfig,
     TascadeEngine,
     WritePolicy,
@@ -24,6 +25,7 @@ __all__ = [
     "PayloadCodec",
     "PCacheState",
     "ReduceOp",
+    "ResultQuality",
     "TascadeConfig",
     "TascadeEngine",
     "UpdateStream",

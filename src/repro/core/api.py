@@ -27,6 +27,7 @@ from repro.core.types import (
     NO_IDX,
     CascadeMode,
     ReduceOp,
+    ResultQuality,
     TascadeConfig,
     UpdateStream,
     WritePolicy,
@@ -36,6 +37,7 @@ __all__ = [
     "TascadeEngine",
     "TascadeConfig",
     "ReduceOp",
+    "ResultQuality",
     "WritePolicy",
     "CascadeMode",
     "MeshGeom",

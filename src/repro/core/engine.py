@@ -1063,21 +1063,7 @@ class TascadeEngine:
                 backlog = backlog + lvl.net.backlog
             inflight = inflight + backlog
 
-        # Per-lane pending occupancy: one scatter-count of (extended idx
-        # mod L) per queue. With a single lane it is just the total.
-        if self.lanes == 1:
-            lane_inflight = inflight[None]
-        else:
-            lane_inflight = jnp.zeros((self.lanes + 1,), jnp.int32)
-            for lvl in levels:
-                lane = jnp.where(lvl.pending.idx != NO_IDX,
-                                 lvl.pending.idx % self.lanes, self.lanes)
-                lane_inflight = lane_inflight.at[lane].add(1)
-            lane_inflight = lane_inflight[: self.lanes]
-            # Backlog rows are packed wire, not lane-attributable without a
-            # decode; charge lane 0 so any lane-liveness sum stays positive
-            # while recovery is in flight.
-            lane_inflight = lane_inflight.at[0].add(backlog)
+        lane_inflight = self._lane_occupancy(levels, inflight, backlog)
 
         # NoC traffic proxy: bytes derive from the ACTUAL per-level wire
         # layout — 4-byte routing key + codec-width payload on packed
@@ -1126,6 +1112,116 @@ class TascadeEngine:
             audit_fail=afail,
         )
         return new_state, dest_shard, stats
+
+    def _lane_occupancy(self, levels, inflight, backlog) -> jnp.ndarray:
+        """Per-lane pending occupancy [n_lanes]: one scatter-count of
+        (extended idx mod L) per queue. With a single lane it is just the
+        total. ``inflight``/``backlog`` are the already-summed totals (the
+        backlog is included in ``inflight``)."""
+        if self.lanes == 1:
+            return inflight[None]
+        lane_inflight = jnp.zeros((self.lanes + 1,), jnp.int32)
+        for lvl in levels:
+            lane = jnp.where(lvl.pending.idx != NO_IDX,
+                             lvl.pending.idx % self.lanes, self.lanes)
+            lane_inflight = lane_inflight.at[lane].add(1)
+        lane_inflight = lane_inflight[: self.lanes]
+        # Backlog rows are packed wire, not lane-attributable without a
+        # decode; charge lane 0 so any lane-liveness sum stays positive
+        # while recovery is in flight.
+        return lane_inflight.at[0].add(backlog)
+
+    def lane_occupancy(self, state: EngineState) -> jnp.ndarray:
+        """Standalone per-device per-lane queue occupancy int32[n_lanes]
+        (psum across the mesh for the global count). Mirrors
+        ``StepStats.lane_inflight`` exactly — serving layers use it to
+        measure residual in-tree work without running a step."""
+        inflight = jnp.int32(0)
+        backlog = jnp.int32(0)
+        for lvl in state.levels:
+            inflight = inflight + lvl.pending.count()
+            if lvl.net is not None:
+                backlog = backlog + lvl.net.backlog
+        return self._lane_occupancy(list(state.levels),
+                                    inflight + backlog, backlog)
+
+    # ------------------------------------------------------- lane preemption
+
+    def quiesce_lane(self, state: EngineState, lane) -> tuple[
+            EngineState, jnp.ndarray]:
+        """Lane-preemption path: purge every queue entry, cache line and
+        (under a FaultPlan) retransmit/replay wire slot belonging to one
+        query lane, leaving the other K-1 lanes' state untouched.
+
+        The lane-minor extended layout makes ownership a congruence:
+        extended index ``idx = element * L + lane`` satisfies
+        ``idx % L == lane`` everywhere an index is stored —
+
+          * pending queues / cache tags hold extended indices directly;
+          * packed wire keys at compacted levels hold
+            ``ckey = rem * shard_ext + off`` with ``off = idx % shard_ext``
+            and ``shard_ext = elem_shard * L`` a multiple of L, so
+            ``ckey % L == idx % L == lane`` (``geom.CompactPlan``).
+
+        The retransmit slot (``net.sent_wire``) and the channel replay
+        buffer are purged by overwriting matching key slots with
+        ``invalid_key`` — both buffers are only ever decoded locally by
+        ``exchange.wire_to_stream`` (which drops invalid-key slots and
+        never re-validates a checksum), so in-place editing is safe. The
+        ``backlog`` scalar may transiently overcount the purged lane's
+        rows; it is recomputed from scratch on the next exchange round, so
+        liveness accounting self-corrects within one step.
+
+        ``lane`` may be a traced int32 scalar: ONE compiled program serves
+        preemption on any lane. Returns ``(new_state, purged)`` with
+        ``purged`` the per-device count of discarded entries (updates +
+        cache lines + wire slots) — a preempted query's lost work is
+        counted, never silently dropped.
+        """
+        L = self.lanes
+        lane = jnp.asarray(lane, jnp.int32)
+        purged = jnp.int32(0)
+        new_levels = []
+        for spec, lvl in zip(self.levels, state.levels):
+            pend = lvl.pending
+            hit = (pend.idx != NO_IDX) & (pend.idx % L == lane)
+            purged = purged + jnp.sum(hit, dtype=jnp.int32)
+            pend = ex.compact(UpdateStream(
+                jnp.where(hit, NO_IDX, pend.idx),
+                jnp.where(hit, 0.0, pend.val).astype(pend.val.dtype)))
+            cache = lvl.cache
+            if spec.merge:
+                chit = (cache.tags != NO_IDX) & (cache.tags % L == lane)
+                purged = purged + jnp.sum(chit, dtype=jnp.int32)
+                cache = PCacheState(
+                    tags=jnp.where(chit, NO_IDX, cache.tags),
+                    vals=jnp.where(
+                        chit,
+                        jnp.asarray(self.op.identity, cache.vals.dtype),
+                        cache.vals))
+            net = lvl.net
+            if net is not None:
+                sent_wire, p1 = self._purge_wire_lane(spec, net.sent_wire,
+                                                      lane)
+                replay, p2 = self._purge_wire_lane(spec, net.replay, lane)
+                purged = purged + p1 + p2
+                net = net._replace(sent_wire=sent_wire, replay=replay)
+            new_levels.append(LevelState(cache=cache, pending=pend, net=net))
+        return EngineState(levels=tuple(new_levels),
+                           overflow=state.overflow), purged
+
+    def _purge_wire_lane(self, spec: LevelSpec, body: jnp.ndarray, lane):
+        """Invalidate one lane's key slots in a packed wire body [P, Wc]
+        (retransmit slot / replay buffer). Payload words are left in place:
+        a slot whose key is ``invalid_key`` is dropped by
+        ``wire_to_stream`` regardless of payload."""
+        k = spec.bucket_cap
+        keys = body[:, :k]
+        kidx = keys & spec.fmt.idx_mask
+        hit = (keys < spec.fmt.invalid_key) & (kidx % self.lanes == lane)
+        n = jnp.sum(hit, dtype=jnp.int32)
+        keys = jnp.where(hit, spec.fmt.invalid_key, keys)
+        return jnp.concatenate([keys, body[:, k:]], axis=1), n
 
     # ------------------------------------------------------------ dense path
 

@@ -229,6 +229,18 @@ class TascadeConfig:
                         epoch-based duplicate suppression for ADD.
                         None (default) keeps the wire byte-identical to
                         the fault-free engine.
+      max_epochs     -- global run watchdog: a hard bound on the outer
+                        epoch/iteration loop of every ``graph.apps`` run
+                        (label-correcting sweeps AND the PageRank power
+                        iteration). 0 (default) leaves each app's own
+                        per-call bound in charge; a positive value caps it,
+                        so a miswired graph or an adversarial fault rate
+                        terminates with a *flagged* partial result
+                        (``RunMetrics.completed == 0``) instead of hanging
+                        a CI job until the runner budget trips. The
+                        interleaved drain's per-step progress limit still
+                        bounds work *within* an epoch; this bounds the
+                        number of epochs.
       overflow_policy -- what a pending-queue drop means:
                         "spill" (default) — leftovers retry on later drain
                         iterations and the geometric capacity plan makes
@@ -259,6 +271,7 @@ class TascadeConfig:
     dense_threshold: float = 0.25
     max_exchange_rounds: int = 8
     n_lanes: int = 1  # batched query lanes sharing the tree (>= 1)
+    max_epochs: int = 0  # global run watchdog on app epoch loops (0 = off)
     lane_capacity_share: float = 1.0  # coverage fraction the plan sizes for
     compact_tables: bool = True  # owner-digit coverage compaction (§2.1)
     batch_cache_passes: bool = False  # staged drain, one cache launch/iter
@@ -282,6 +295,10 @@ class TascadeConfig:
                 f"{self.codec_error_budget}")
         if self.n_lanes < 1:
             raise ValueError(f"n_lanes must be >= 1, got {self.n_lanes}")
+        if self.max_epochs < 0:
+            raise ValueError(
+                f"max_epochs must be >= 0 (0 disables the watchdog), got "
+                f"{self.max_epochs}")
         if not 0.0 < self.lane_capacity_share <= 1.0:
             raise ValueError(
                 f"lane_capacity_share must be in (0, 1], got "
@@ -300,6 +317,29 @@ class TascadeConfig:
     def all_axes(self) -> tuple[str, ...]:
         """Leaf-to-root order of exchange axes."""
         return tuple(self.region_axes) + tuple(self.cascade_axes)
+
+
+class ResultQuality(NamedTuple):
+    """Quality metadata tagged onto every (possibly partial) query result.
+
+    A preempted or watchdog-terminated run no longer converged to the
+    reduction fixed point; instead of silently returning the array, callers
+    surface HOW partial it is:
+
+      settled   -- elements holding a non-identity value (for seeded
+                   label-correcting queries: vertices reached so far).
+      residual  -- un-drained work at harvest time: frontier rows still to
+                   relax plus updates pending inside the reduction tree
+                   (both zero iff the run converged).
+      epochs    -- engine epochs the query consumed.
+      completed -- True: converged result (bit-equal to an unbounded run);
+                   False: deadline/watchdog-preempted partial.
+    """
+
+    settled: int
+    residual: int
+    epochs: int
+    completed: bool
 
 
 # --------------------------------------------------------------- wire format

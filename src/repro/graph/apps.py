@@ -52,6 +52,14 @@ class RunMetrics(NamedTuple):
                               # a lane is still running at cutoff)
     retransmits: jnp.ndarray  # int32 buckets re-emitted through the
                               # at-least-once path (0 unless cfg.fault_plan)
+    completed: jnp.ndarray    # int32 1 iff the run converged / ran its full
+                              # iteration count; 0 flags a partial result
+                              # cut off by an epoch bound (the
+                              # TascadeConfig.max_epochs watchdog or the
+                              # caller's own max_epochs/iters)
+
+
+_N_METRICS = len(RunMetrics._fields)
 
 
 # Compiled-app cache: the static plan (mesh, config, shard shapes, app tag)
@@ -155,17 +163,118 @@ def _label_correcting(mesh, sg: ShardedGraph, cfg: TascadeConfig, *,
                     sg.emax, max_epochs, wcap), build)
 
 
+class EpochStats(NamedTuple):
+    """Per-epoch traffic/work readings of one label-correcting epoch
+    (``_make_epoch_fn``) — the summands behind ``RunMetrics``."""
+
+    n_relaxed: jnp.ndarray    # f32 worklist rows relaxed this epoch (local)
+    sent: jnp.ndarray         # int32 messages exchanged, all levels (local)
+    hop_bytes: jnp.ndarray    # f32 traffic proxy (local)
+    filtered: jnp.ndarray     # int32 P-cache-filtered updates (local)
+    coalesced: jnp.ndarray    # int32 coalesced updates (local)
+    retransmits: jnp.ndarray  # int32 at-least-once re-emissions (local)
+
+
+def _make_epoch_fn(engine: TascadeEngine, *, cand_fn, n_shard, n_emax,
+                   lanes, wtot, axes, sync):
+    """ONE label-correcting epoch as a reusable per-device function.
+
+    ``epoch(row_ptr, dst, weight, state, dist, frontier, skip)`` performs
+    the CSR worklist gather, one engine step, and the frontier/cursor
+    update, returning ``(state, dist, frontier, skip, lane_active,
+    EpochStats)`` with ``lane_active`` the globally-psummed per-lane
+    liveness (frontier rows still to relax + updates pending inside the
+    tree). The batch apps iterate it under ``lax.while_loop``
+    (``_build_label_correcting``); the serving layer
+    (``repro.serve.service``) calls it once per service tick so queries
+    can attach to / detach from live lanes between epochs. Must run inside
+    ``shard_map`` over ``axes``.
+    """
+
+    def epoch(row_ptr, dst, weight, state, dist, frontier, skip):
+        # CSR-driven active-edge gather over the flattened
+        # (vertex, lane) rows: prefix-sum the frontier rows' REMAINING
+        # degrees (the cursor ``skip`` marks edges already relaxed on
+        # carried rows), then map each worklist slot back to its
+        # (vertex, lane, edge) triple with the vectorized bucket-gather
+        # (scatter row heads + running max — O(wtot + shard*L), no
+        # per-slot binary search; bit-equal to
+        # ``searchsorted(cum, slot, "right")`` on every slot < total,
+        # and slots past the total are masked by ``ok``).
+        deg_v = row_ptr[1:] - row_ptr[:-1]   # int32[shard] local out-degrees
+        slots = jnp.arange(wtot, dtype=jnp.int32)
+        adeg = jnp.where(frontier, deg_v[:, None] - skip, 0)
+        flat = adeg.reshape(-1)              # row r = vertex * L + lane
+        cum = jnp.cumsum(flat)               # inclusive; cum[-1] = total
+        total = cum[-1]
+        start = cum - flat                   # worklist offset per row
+        r = bucket_gather(cum, wtot)
+        rc = jnp.clip(r, 0, n_shard * lanes - 1)
+        uc = rc // lanes
+        ln = rc % lanes
+        skip_flat = skip.reshape(-1)
+        e = jnp.clip(row_ptr[uc] + skip_flat[rc] + (slots - start[rc]),
+                     0, n_emax - 1)
+        ok = slots < total
+        cand = cand_fn(dist, uc, ln, weight[e])
+        new = UpdateStream(
+            jnp.where(ok, dst[e] * lanes + ln, NO_IDX),
+            jnp.where(ok, cand, 0.0),
+        )
+        # Rows whose edge range spilled past the worklist stay in the
+        # frontier and resume at their cursor next epoch.
+        cum2 = cum.reshape(n_shard, lanes)
+        carried = frontier & (cum2 > wtot)
+        processed = jnp.clip(jnp.minimum(cum, wtot) - start,
+                             0, None).reshape(n_shard, lanes)
+        old = dist
+        state, dist_flat, stats = engine.step(
+            state, dist.reshape(-1), new, drain=sync, flush=False
+        )
+        dist = dist_flat.reshape(n_shard, lanes)
+        improved = dist < old
+        # An improved row must re-relax ALL its edges with the new
+        # label, so its cursor resets; an untouched carried row
+        # advances past what this epoch covered.
+        skip = jnp.where(carried & ~improved, skip + processed, 0)
+        frontier = improved | carried
+        # Per-lane liveness: frontier rows still to relax + updates
+        # pending inside the tree (the engine's per-lane occupancy
+        # counters). A finished lane stops contributing worklist rows.
+        lane_active = jax.lax.psum(
+            jnp.sum(frontier, axis=0, dtype=jnp.int32)
+            + stats.lane_inflight, axes)
+        es = EpochStats(
+            n_relaxed=jnp.minimum(total, wtot).astype(jnp.float32),
+            sent=jnp.sum(stats.sent, dtype=jnp.int32),
+            hop_bytes=stats.hop_bytes,
+            filtered=stats.filtered,
+            coalesced=stats.coalesced,
+            retransmits=stats.retransmits,
+        )
+        return state, dist, frontier, skip, lane_active, es
+
+    return epoch
+
+
 def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
                             wcap):
     geom = MeshGeom.from_mesh(mesh, sg.vpad)
     lanes = cfg.n_lanes
     engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=wcap * lanes)
     axes = _axes(mesh)
-    sync = cfg.sync_merge
     # Close over shape scalars only: capturing ``sg`` itself would pin the
     # full numpy edge arrays inside the long-lived _JIT_CACHE entry.
     n_shard, n_emax = sg.shard, sg.emax
     wtot = wcap * lanes
+    if cfg.max_epochs > 0:
+        # Global run watchdog: the config bound caps every app's own epoch
+        # budget, so a miswired graph terminates with completed == 0
+        # instead of hanging a CI job.
+        max_epochs = min(max_epochs, cfg.max_epochs)
+    epoch_fn = _make_epoch_fn(engine, cand_fn=cand_fn, n_shard=n_shard,
+                              n_emax=n_emax, lanes=lanes, wtot=wtot,
+                              axes=axes, sync=cfg.sync_merge)
 
     def shard_fn(row_ptr, dst, weight, seeds):
         # ``seeds`` (one root/source vertex per lane) is a traced vector,
@@ -174,8 +283,6 @@ def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
         row_ptr = row_ptr.reshape(-1)
         dst = dst.reshape(-1)
         weight = weight.reshape(-1)
-        deg_v = row_ptr[1:] - row_ptr[:-1]  # int32[shard] local out-degrees
-        slots = jnp.arange(wtot, dtype=jnp.int32)
         base = geom.my_base()
         dist0, frontier0 = init_fn(base, n_shard, seeds)  # [shard, L]
         state0 = engine.init_state()
@@ -186,67 +293,17 @@ def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
 
         def body(c):
             state, dist, frontier, skip, _, epoch, lane_ep, acc = c
-            # CSR-driven active-edge gather over the flattened
-            # (vertex, lane) rows: prefix-sum the frontier rows' REMAINING
-            # degrees (the cursor ``skip`` marks edges already relaxed on
-            # carried rows), then map each worklist slot back to its
-            # (vertex, lane, edge) triple with the vectorized bucket-gather
-            # (scatter row heads + running max — O(wtot + shard*L), no
-            # per-slot binary search; bit-equal to
-            # ``searchsorted(cum, slot, "right")`` on every slot < total,
-            # and slots past the total are masked by ``ok``).
-            adeg = jnp.where(frontier, deg_v[:, None] - skip, 0)
-            flat = adeg.reshape(-1)              # row r = vertex * L + lane
-            cum = jnp.cumsum(flat)               # inclusive; cum[-1] = total
-            total = cum[-1]
-            start = cum - flat                   # worklist offset per row
-            r = bucket_gather(cum, wtot)
-            rc = jnp.clip(r, 0, n_shard * lanes - 1)
-            uc = rc // lanes
-            ln = rc % lanes
-            skip_flat = skip.reshape(-1)
-            e = jnp.clip(row_ptr[uc] + skip_flat[rc] + (slots - start[rc]),
-                         0, n_emax - 1)
-            ok = slots < total
-            cand = cand_fn(dist, uc, ln, weight[e])
-            new = UpdateStream(
-                jnp.where(ok, dst[e] * lanes + ln, NO_IDX),
-                jnp.where(ok, cand, 0.0),
-            )
-            # Rows whose edge range spilled past the worklist stay in the
-            # frontier and resume at their cursor next epoch.
-            cum2 = cum.reshape(n_shard, lanes)
-            carried = frontier & (cum2 > wtot)
-            processed = jnp.clip(jnp.minimum(cum, wtot) - start,
-                                 0, None).reshape(n_shard, lanes)
-            old = dist
-            dist_flat, = (dist.reshape(-1),)
-            state, dist_flat, stats = engine.step(
-                state, dist_flat, new, drain=sync, flush=False
-            )
-            dist = dist_flat.reshape(n_shard, lanes)
-            improved = dist < old
-            # An improved row must re-relax ALL its edges with the new
-            # label, so its cursor resets; an untouched carried row
-            # advances past what this epoch covered.
-            skip = jnp.where(carried & ~improved, skip + processed, 0)
-            frontier = improved | carried
-            n_relaxed = jnp.minimum(total, wtot)
-            # Per-lane liveness: frontier rows still to relax + updates
-            # pending inside the tree (the engine's per-lane occupancy
-            # counters). A finished lane stops contributing worklist rows.
-            lane_active = jax.lax.psum(
-                jnp.sum(frontier, axis=0, dtype=jnp.int32)
-                + stats.lane_inflight, axes)
+            state, dist, frontier, skip, lane_active, es = epoch_fn(
+                row_ptr, dst, weight, state, dist, frontier, skip)
             active = jnp.sum(lane_active, dtype=jnp.int32)
             lane_ep = jnp.where(lane_active > 0, epoch + 1, lane_ep)
             acc = (
-                acc[0] + jnp.sum(stats.sent, dtype=jnp.int32),
-                acc[1] + stats.hop_bytes,
-                acc[2] + stats.filtered,
-                acc[3] + stats.coalesced,
-                acc[4] + n_relaxed.astype(jnp.float32),
-                acc[5] + stats.retransmits,
+                acc[0] + es.sent,
+                acc[1] + es.hop_bytes,
+                acc[2] + es.filtered,
+                acc[3] + es.coalesced,
+                acc[4] + es.n_relaxed,
+                acc[5] + es.retransmits,
             )
             return (state, dist, frontier, skip, active, epoch + 1,
                     lane_ep, acc)
@@ -270,6 +327,7 @@ def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
             edges_relaxed=jax.lax.psum(acc[4], axes),
             lane_epochs=lane_ep,  # psummed lane_active => replicated
             retransmits=jax.lax.psum(acc[5], axes),
+            completed=(active == 0).astype(jnp.int32),
         )
         # Single-lane callers keep the historical [shard] result shape.
         return (dist[:, 0] if lanes == 1 else dist), m
@@ -279,7 +337,7 @@ def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
         shard_fn, mesh=mesh,
         in_specs=_graph_specs(mesh) + (P(),),  # replicated seed vector
         out_specs=(P(a) if lanes == 1 else P(a, None),
-                   RunMetrics(*([P()] * 9))),
+                   RunMetrics(*([P()] * _N_METRICS))),
         check_vma=False,
     )), cfg)
 
@@ -381,6 +439,11 @@ def _build_pagerank(mesh, sg, cfg, iters, d, dense):
     axes = _axes(mesh)
     n = sg.num_vertices
     n_shard, n_vpad = sg.shard, sg.vpad  # scalars only; don't capture sg
+    iters_req = iters
+    if cfg.max_epochs > 0:
+        # Global run watchdog: cap the power iteration; a capped run is
+        # flagged (completed == 0) — the ranks are a partial fixed point.
+        iters = min(iters, cfg.max_epochs)
 
     def shard_fn(src_local, dst, weight, deg):
         src_local = src_local.reshape(-1)
@@ -448,6 +511,7 @@ def _build_pagerank(mesh, sg, cfg, iters, d, dense):
             edges_relaxed=jnp.float32(0),
             lane_epochs=jnp.full((1,), iters, jnp.int32),
             retransmits=jax.lax.psum(acc[5], axes),
+            completed=jnp.int32(1 if iters == iters_req else 0),
         )
         return rank, m
 
@@ -455,7 +519,7 @@ def _build_pagerank(mesh, sg, cfg, iters, d, dense):
     return _maybe_checkify(jax.jit(compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=_graph_specs(mesh) + (P(a, None),),
-        out_specs=(P(a), RunMetrics(*([P()] * 9))),
+        out_specs=(P(a), RunMetrics(*([P()] * _N_METRICS))),
         check_vma=False,
     )), cfg)
 
@@ -500,6 +564,7 @@ def _build_spmv(mesh, sg, cfg):
             edges_relaxed=jax.lax.psum(jnp.sum(ok.astype(jnp.float32)), axes),
             lane_epochs=jnp.ones((1,), jnp.int32),
             retransmits=jax.lax.psum(stats.retransmits, axes),
+            completed=jnp.int32(1),  # single drain+flush delivery
         )
         return y, m
 
@@ -507,7 +572,7 @@ def _build_spmv(mesh, sg, cfg):
     return _maybe_checkify(jax.jit(compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=_graph_specs(mesh) + (P(a),),
-        out_specs=(P(a), RunMetrics(*([P()] * 9))),
+        out_specs=(P(a), RunMetrics(*([P()] * _N_METRICS))),
         check_vma=False,
     )), cfg)
 

@@ -1,0 +1,35 @@
+"""Always-on query service over the lane-batched Tascade engine.
+
+Queries attach to and detach from live lanes of ONE compiled engine
+program (no recompilation): free lanes are detected via the engine's
+per-lane occupancy counters, attach re-seeds a lane's frontier/dist
+slices in place, and detach harvests the lane's result while the other
+K-1 lanes keep draining. Robustness machinery rides on top: admission
+control with a bounded pending queue (``admission``), per-query epoch
+budgets enforced by a deadline watchdog with a lane-preemption path that
+returns quality-tagged partial results (``deadline`` / the engine's
+``quiesce_lane``), overload shedding and retry-with-backoff (``retry``),
+all orchestrated by ``service.TascadeService``.
+"""
+from repro.serve.admission import AdmissionController
+from repro.serve.deadline import DeadlineWatchdog
+from repro.serve.retry import RetryPolicy
+from repro.serve.service import LaneProgram, TascadeService
+from repro.serve.types import (
+    Query,
+    QueryResult,
+    ServeConfig,
+    ServeMetrics,
+)
+
+__all__ = [
+    "AdmissionController",
+    "DeadlineWatchdog",
+    "LaneProgram",
+    "Query",
+    "QueryResult",
+    "RetryPolicy",
+    "ServeConfig",
+    "ServeMetrics",
+    "TascadeService",
+]

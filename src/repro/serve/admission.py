@@ -1,0 +1,66 @@
+"""Admission control: a bounded pending queue with overload shedding.
+
+The queue is the service's *backpressure buffer* between Poisson arrivals
+and the K engine lanes; its depth derives from the engine's
+``lane_capacity_share`` unless pinned (``ServeConfig.max_pending``).
+When it is full the configured policy sheds — either the arriving query
+("reject_new") or the queue head ("drop_oldest") — and every shed event
+is counted and routed through the retry policy by the service: shedding
+degrades latency, never accounting.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+from repro.serve.types import Query, ServeConfig
+
+
+class AdmissionController:
+    """FIFO pending queue with a hard depth bound.
+
+    ``offer`` admits or sheds; ``next_ready`` pops the oldest query whose
+    retry backoff has expired (FIFO among ready queries, so no ready query
+    can be overtaken indefinitely — the starvation-freedom property the
+    liveness test pins down).
+    """
+
+    def __init__(self, cfg: ServeConfig, *,
+                 lane_capacity_share: float = 1.0):
+        self.policy = cfg.admission
+        self.max_pending = cfg.derived_max_pending(lane_capacity_share)
+        self.pending: deque[Query] = deque()
+        self.admitted = 0
+
+    def __len__(self) -> int:
+        return len(self.pending)
+
+    def offer(self, q: Query) -> tuple[bool, Optional[Query]]:
+        """Try to enqueue ``q``. Returns ``(admitted, shed)``:
+
+        (True, None)    -- queued, nobody shed.
+        (True, victim)  -- queued after shedding the queue head
+                           (drop_oldest).
+        (False, None)   -- queue full, ``q`` itself shed (reject_new).
+        """
+        if len(self.pending) < self.max_pending:
+            self.pending.append(q)
+            self.admitted += 1
+            return True, None
+        if self.policy == "drop_oldest":
+            victim = self.pending.popleft()
+            self.pending.append(q)
+            self.admitted += 1
+            return True, victim
+        return False, None
+
+    def has_ready(self, tick: int) -> bool:
+        return any(q.ready_tick <= tick for q in self.pending)
+
+    def next_ready(self, tick: int) -> Optional[Query]:
+        """Pop the oldest query whose backoff has expired, or None."""
+        for i, q in enumerate(self.pending):
+            if q.ready_tick <= tick:
+                del self.pending[i]
+                return q
+        return None

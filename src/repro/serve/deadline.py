@@ -1,0 +1,70 @@
+"""Deadline watchdog: per-query epoch budgets inside the drain loop.
+
+Enforcement is two-staged to preserve result quality:
+
+  1. PARK — an over-budget lane stops generating work (its frontier is
+     cleared) but its updates already inside the reduction tree keep
+     draining; if they settle within ``quiesce_patience`` ticks, the
+     harvested partial reflects every relaxation the budget paid for.
+  2. PURGE — a parked lane that still shows in-tree occupancy after the
+     patience window is force-quiesced (``TascadeEngine.quiesce_lane``):
+     its queue entries, cache lines and retransmit slots are discarded
+     (counted), and the partial result is harvested immediately.
+
+The watchdog itself is pure policy over the service's lane table; the
+service applies the verdicts so this stays trivially unit-testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.serve.types import Query
+
+
+@dataclasses.dataclass
+class LaneSlot:
+    """Host-side bookkeeping for one engine lane."""
+
+    query: Optional[Query] = None
+    epochs_used: int = 0     # engine epochs this attempt has consumed
+    parked: bool = False     # frontier cleared, draining toward harvest
+    parked_ticks: int = 0    # ticks spent parked (patience counter)
+
+    @property
+    def free(self) -> bool:
+        return self.query is None
+
+    def reset(self):
+        self.query = None
+        self.epochs_used = 0
+        self.parked = False
+        self.parked_ticks = 0
+
+
+class DeadlineWatchdog:
+    """Scans the lane table each tick and names lanes to park / purge."""
+
+    def __init__(self, quiesce_patience: int):
+        self.patience = quiesce_patience
+
+    def note_epoch(self, slots: list[LaneSlot]):
+        """Charge one engine epoch to every occupied lane (parked lanes
+        too: their drain time is part of the query's footprint)."""
+        for s in slots:
+            if s.query is not None:
+                s.epochs_used += 1
+                if s.parked:
+                    s.parked_ticks += 1
+
+    def to_park(self, slots: list[LaneSlot]) -> list[int]:
+        """Busy lanes whose attempt just exhausted its epoch budget."""
+        return [i for i, s in enumerate(slots)
+                if s.query is not None and not s.parked
+                and s.epochs_used >= s.query.budget]
+
+    def to_purge(self, slots: list[LaneSlot]) -> list[int]:
+        """Parked lanes past the quiesce patience window."""
+        return [i for i, s in enumerate(slots)
+                if s.query is not None and s.parked
+                and s.parked_ticks > self.patience]

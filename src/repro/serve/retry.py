@@ -1,0 +1,42 @@
+"""Retry-with-backoff for shed and deadline-preempted queries.
+
+Backoff is exponential in ticks (``backoff_base * 2**(attempt-1)``) so a
+burst that overflowed the admission queue spreads out instead of
+re-colliding; a deadline-preempted retry additionally escalates its epoch
+budget (``budget_escalation``) — the query was making progress, it needs
+time, not another identical attempt. When retries are exhausted the
+service finalizes the query (quality-tagged partial for preemptions,
+failed for sheds); the policy only ever answers "retry or not, and when".
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.serve.types import DEADLINE, Query, ServeConfig
+
+
+class RetryPolicy:
+    def __init__(self, cfg: ServeConfig):
+        self.max_retries = cfg.max_retries
+        self.backoff_base = cfg.backoff_base
+        self.budget_escalation = cfg.budget_escalation
+
+    def backoff_ticks(self, attempt: int) -> int:
+        """Delay before attempt ``attempt`` (1-based retry count)."""
+        return self.backoff_base * (2 ** (attempt - 1))
+
+    def reschedule(self, q: Query, cause: str, tick: int) -> Optional[Query]:
+        """Grant ``q`` another attempt, or None when retries are exhausted.
+
+        Mutates the query in place: bumps ``attempts``, sets
+        ``ready_tick`` past the backoff window, and escalates the epoch
+        budget for deadline preemptions.
+        """
+        if q.attempts >= self.max_retries:
+            return None
+        q.attempts += 1
+        q.ready_tick = tick + self.backoff_ticks(q.attempts)
+        if cause == DEADLINE:
+            q.budget = int(math.ceil(q.budget * self.budget_escalation))
+        return q

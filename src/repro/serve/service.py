@@ -1,0 +1,504 @@
+"""The serving loop: live lane attach/detach over one compiled engine.
+
+Two layers:
+
+``LaneProgram`` — the compiled surface. ONE TascadeEngine with K query
+lanes is closed over by a small set of jitted ``shard_map`` programs
+(init / step / attach / park / quiesce / harvest). Lane id and seed
+vertex are *traced* scalars, so every program is compiled exactly once
+per (mesh, graph shapes, config) and queries attach to any lane of the
+live executable with zero recompilation. The engine/label state crosses
+the jit boundary as an explicit carry pytree: every per-device leaf gains
+a leading device axis (``x[None]`` inside, ``P(axes, ...)`` specs
+outside), the same trick the fault-injection harness uses.
+
+``TascadeService`` — the host-side always-on loop. One ``step()`` call is
+one service *tick*: re-offer backoff retries, advance the shared engine
+one epoch (all busy lanes progress together — the K-1 others keep
+draining while any lane attaches/detaches), detect completions from the
+per-lane liveness counters, enforce deadlines (park -> purge), and fill
+free lanes from the admission queue. Completed results are bit-equal to
+solo runs (the MIN label-correcting fixed point is schedule-independent);
+preempted results carry ``ResultQuality`` metadata instead of wedging
+the lane.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import MeshGeom, ReduceOp, TascadeConfig, TascadeEngine
+from repro.core.engine import EngineState
+from repro.core.types import ResultQuality, WritePolicy
+from repro.core import compat
+from repro.graph.apps import _make_epoch_fn, _maybe_checkify, _sssp_cand
+from repro.graph.partition import ShardedGraph
+from repro.serve.admission import AdmissionController
+from repro.serve.deadline import DeadlineWatchdog, LaneSlot
+from repro.serve.retry import RetryPolicy
+from repro.serve.types import (
+    COMPLETED,
+    CONVERGED,
+    DEADLINE,
+    FAILED,
+    PARTIAL,
+    Query,
+    QueryResult,
+    SHED,
+    ServeConfig,
+    ServeMetrics,
+    WATCHDOG,
+)
+
+# Apps servable through lanes: seeded label-correcting MIN reductions
+# (BFS is SSSP on unit weights — same executable family as graph.apps).
+_APPS = ("sssp", "bfs")
+
+
+class LaneProgram:
+    """Compiled attach/step/harvest/quiesce programs over one K-lane engine.
+
+    All programs share the engine plan; the per-tick hot path is
+    ``step(carry)`` — one label-correcting epoch over every lane,
+    returning the globally-psummed per-lane liveness vector that drives
+    completion detection and the watchdog.
+    """
+
+    def __init__(self, mesh, sg: ShardedGraph, cfg: TascadeConfig, *,
+                 app: str = "sssp", worklist_cap: Optional[int] = None):
+        if app not in _APPS:
+            raise ValueError(f"app must be one of {_APPS}, got {app!r}")
+        # Label-correcting lanes are write-through MIN by construction.
+        cfg = dataclasses.replace(cfg, policy=WritePolicy.WRITE_THROUGH)
+        self.cfg = cfg
+        self.lanes = cfg.n_lanes
+        self.mesh = mesh
+        self.vpad = sg.vpad
+        axes = tuple(mesh.axis_names)
+        self.axes = axes
+        geom = MeshGeom.from_mesh(mesh, sg.vpad)
+        wcap = sg.emax if worklist_cap is None else min(worklist_cap,
+                                                        sg.emax)
+        lanes = self.lanes
+        wtot = wcap * lanes
+        engine = TascadeEngine(cfg, geom, ReduceOp.MIN,
+                               update_cap=wtot)
+        self.engine = engine
+        n_shard, n_emax = sg.shard, sg.emax
+        epoch_fn = _make_epoch_fn(engine, cand_fn=_sssp_cand,
+                                  n_shard=n_shard, n_emax=n_emax,
+                                  lanes=lanes, wtot=wtot, axes=axes,
+                                  sync=cfg.sync_merge)
+
+        # Graph payload: device-put ONCE with the run sharding so the
+        # per-tick step call never re-transfers the edge arrays.
+        gsharding = NamedSharding(mesh, P(axes, None))
+        weight = sg.weight if app == "sssp" else np.ones_like(sg.weight)
+        self._graph = tuple(
+            jax.device_put(jnp.asarray(a), gsharding)
+            for a in (sg.row_ptr, sg.dst, weight))
+
+        # Carry pytree specs: engine state leaves gain a leading device
+        # axis; label-state arrays are [shard, K] vertex-sharded.
+        state_t = engine.init_state()
+        state_spec = jax.tree.map(
+            lambda x: P(axes, *([None] * x.ndim)), state_t)
+        col_spec = P(axes, None)
+        carry_spec = (state_spec, col_spec, col_spec, col_spec)
+        inf = jnp.float32(jnp.inf)
+
+        def _wrap(state):
+            return jax.tree.map(lambda x: x[None], state)
+
+        def _unwrap(state):
+            return jax.tree.map(lambda x: x[0], state)
+
+        def _residual(state: EngineState, frontier, lane):
+            """Un-drained mass of one lane: frontier rows + in-tree
+            occupancy (globally psummed by callers)."""
+            occ = engine.lane_occupancy(state)
+            return (jnp.sum(frontier[:, lane], dtype=jnp.int32)
+                    + occ[lane])
+
+        def init_fn():
+            state = engine.init_state()
+            dist = jnp.full((n_shard, lanes), inf, jnp.float32)
+            frontier = jnp.zeros((n_shard, lanes), bool)
+            skip = jnp.zeros((n_shard, lanes), jnp.int32)
+            return _wrap(state), dist, frontier, skip
+
+        def step_fn(row_ptr, dst, weight, carry, parked):
+            state, dist, frontier, skip = carry
+            state = _unwrap(state)
+            row_ptr = row_ptr.reshape(-1)
+            dst = dst.reshape(-1)
+            weight = weight.reshape(-1)
+            state, dist, frontier, skip, lane_active, es = epoch_fn(
+                row_ptr, dst, weight, state, dist, frontier, skip)
+            # Sticky parking: label improvements draining out of the tree
+            # re-ignite the frontier (improved | carried), so a parked
+            # lane would resume generating work one epoch after its
+            # frontier was cleared. Mask it out every epoch — the drain
+            # still lands (partials keep every relaxation the budget
+            # paid for) but generates nothing new.
+            masked = jnp.sum(frontier & parked[None, :], axis=0,
+                             dtype=jnp.int32)
+            lane_active = lane_active - jax.lax.psum(masked, axes)
+            frontier = frontier & ~parked[None, :]
+            skip = jnp.where(parked[None, :], 0, skip)
+            backlog = jnp.int32(0)
+            for lvl in state.levels:
+                if lvl.net is not None:
+                    backlog = backlog + lvl.net.backlog
+            scalars = jax.tree.map(
+                lambda x: jax.lax.psum(x, axes),
+                (es.sent, es.hop_bytes, es.retransmits, es.n_relaxed,
+                 state.overflow, backlog))
+            return (_wrap(state), dist, frontier, skip), lane_active, \
+                scalars
+
+        def attach_fn(carry, lane, seed):
+            """Re-seed one lane in place: quiesce any residue (recycled
+            lanes may hold stale cache lines that would filter the new
+            query's labels), then write the seed's dist/frontier column."""
+            state, dist, frontier, skip = carry
+            state = _unwrap(state)
+            state, purged = engine.quiesce_lane(state, lane)
+            local = jnp.arange(n_shard, dtype=jnp.int32) + geom.my_base()
+            hit = local == seed
+            dist = dist.at[:, lane].set(jnp.where(hit, 0.0, inf))
+            frontier = frontier.at[:, lane].set(hit)
+            skip = skip.at[:, lane].set(0)
+            return (_wrap(state), dist, frontier, skip), \
+                jax.lax.psum(purged, axes)
+
+        def park_fn(carry, lane):
+            """Graceful preemption: stop generating work (frontier off);
+            updates already in the tree keep draining."""
+            state, dist, frontier, skip = carry
+            frontier = frontier.at[:, lane].set(False)
+            skip = skip.at[:, lane].set(0)
+            return state, dist, frontier, skip
+
+        def quiesce_fn(carry, lane):
+            """Forced preemption: park + purge the lane's queues, cache
+            lines and retransmit slots (counted)."""
+            state, dist, frontier, skip = carry
+            state = _unwrap(state)
+            state, purged = engine.quiesce_lane(state, lane)
+            frontier = frontier.at[:, lane].set(False)
+            skip = skip.at[:, lane].set(0)
+            return (_wrap(state), dist, frontier, skip), \
+                jax.lax.psum(purged, axes)
+
+        def harvest_fn(carry, lane):
+            """Read one lane's result without touching it: the global
+            label column plus quality readings (settled labels, residual
+            un-drained mass — zero iff converged)."""
+            state, dist, frontier, skip = carry
+            state = _unwrap(state)
+            col = dist[:, lane]
+            settled = jax.lax.psum(
+                jnp.sum(col != inf, dtype=jnp.int32), axes)
+            residual = jax.lax.psum(_residual(state, frontier, lane), axes)
+            return col, settled, residual
+
+        def _build(fn, in_specs, out_specs):
+            mapped = jax.jit(compat.shard_map(
+                fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=False))
+            return _maybe_checkify(mapped, cfg)
+
+        gspec = (P(axes, None),) * 3
+        scal = (P(),) * 6
+        self._init = _build(init_fn, (), carry_spec)
+        self._step = _build(step_fn, gspec + (carry_spec, P()),
+                            (carry_spec, P(), scal))
+        self._attach = _build(attach_fn, (carry_spec, P(), P()),
+                              (carry_spec, P()))
+        self._park = _build(park_fn, (carry_spec, P()), carry_spec)
+        self._quiesce = _build(quiesce_fn, (carry_spec, P()),
+                               (carry_spec, P()))
+        self._harvest = _build(harvest_fn, (carry_spec, P()),
+                               (P(axes), P(), P()))
+
+    # Thin host-facing wrappers (lane/seed ride as traced int32 scalars).
+
+    def init(self):
+        return self._init()
+
+    def step(self, carry, parked):
+        """One epoch across all lanes (``parked``: bool[K] lanes that must
+        not generate new work). Returns (carry, lane_active[K],
+        (sent, hop_bytes, retransmits, n_relaxed, overflow, backlog))."""
+        return self._step(*self._graph, carry,
+                          jnp.asarray(parked, bool))
+
+    def attach(self, carry, lane: int, seed: int):
+        return self._attach(carry, jnp.int32(lane), jnp.int32(seed))
+
+    def park(self, carry, lane: int):
+        return self._park(carry, jnp.int32(lane))
+
+    def quiesce(self, carry, lane: int):
+        return self._quiesce(carry, jnp.int32(lane))
+
+    def harvest(self, carry, lane: int):
+        return self._harvest(carry, jnp.int32(lane))
+
+
+class TascadeService:
+    """Always-on query service: submit seeded queries, run ticks, collect
+    terminal ``QueryResult``s. See the module docstring for the loop
+    anatomy; ``ServeConfig`` documents every policy knob."""
+
+    def __init__(self, mesh, sg: ShardedGraph, engine_cfg: TascadeConfig,
+                 serve_cfg: ServeConfig, *, app: str = "sssp",
+                 worklist_cap: Optional[int] = None):
+        engine_cfg = dataclasses.replace(engine_cfg,
+                                         n_lanes=serve_cfg.n_lanes)
+        self.serve_cfg = serve_cfg
+        self.prog = LaneProgram(mesh, sg, engine_cfg, app=app,
+                                worklist_cap=worklist_cap)
+        self.carry = self.prog.init()
+        self.admission = AdmissionController(
+            serve_cfg,
+            lane_capacity_share=engine_cfg.lane_capacity_share)
+        self.watchdog = DeadlineWatchdog(serve_cfg.quiesce_patience)
+        self.retry = RetryPolicy(serve_cfg)
+        self.slots = [LaneSlot() for _ in range(serve_cfg.n_lanes)]
+        self.backoff: list[Query] = []   # shed/preempted, awaiting retry
+        self.metrics = ServeMetrics()
+        self.results: dict[int, QueryResult] = {}
+        self.now = 0
+        self._next_qid = 0
+        self._faulted = engine_cfg.fault_plan is not None
+
+    # ------------------------------------------------------------- submit
+
+    def submit(self, root: int, budget: Optional[int] = None) -> int:
+        """Submit a query; returns its qid. The query enters admission
+        immediately (attachment happens on the next tick)."""
+        q = Query(qid=self._next_qid, root=int(root),
+                  budget=int(budget or self.serve_cfg.epoch_budget),
+                  submit_tick=self.now, ready_tick=self.now)
+        self._next_qid += 1
+        self.metrics.submitted += 1
+        self._offer(q)
+        return q.qid
+
+    def _offer(self, q: Query):
+        admitted, victim = self.admission.offer(q)
+        if victim is not None:
+            self.metrics.shed_oldest += 1
+            self._retry_or_fail(victim, SHED)
+        if not admitted:
+            self.metrics.rejected_new += 1
+            self._retry_or_fail(q, SHED)
+
+    def _retry_or_fail(self, q: Query, cause: str):
+        r = self.retry.reschedule(q, cause, self.now)
+        if r is not None:
+            self.metrics.retries += 1
+            self.backoff.append(r)
+            return
+        self._finalize(q, FAILED, cause, lane=-1, dist=None,
+                       quality=ResultQuality(settled=0, residual=0,
+                                             epochs=q.total_epochs,
+                                             completed=False))
+
+    # ---------------------------------------------------------- lifecycle
+
+    def _finalize(self, q: Query, status: str, cause: str, *, lane: int,
+                  dist, quality: ResultQuality):
+        res = QueryResult(qid=q.qid, root=q.root, status=status,
+                          cause=cause, quality=quality,
+                          submit_tick=q.submit_tick, finish_tick=self.now,
+                          attempts=q.attempts, lane=lane, dist=dist)
+        self.results[q.qid] = res
+        self.metrics.record_latency(res.latency_ticks)
+        if status == COMPLETED:
+            self.metrics.completed += 1
+        elif status == PARTIAL:
+            self.metrics.partial += 1
+        else:
+            self.metrics.failed += 1
+        return res
+
+    def _attach(self, lane: int, q: Query):
+        self.carry, purged = self.prog.attach(self.carry, lane, q.root)
+        self.metrics.purged_entries += int(purged)
+        s = self.slots[lane]
+        s.reset()
+        s.query = q
+
+    def _park(self, lane: int):
+        self.carry = self.prog.park(self.carry, lane)
+        self.slots[lane].parked = True
+        self.slots[lane].parked_ticks = 0
+        self.metrics.preemptions += 1
+
+    def _harvest_quality(self, lane: int, s: LaneSlot, completed: bool):
+        dist_col, settled, residual = self.prog.harvest(self.carry, lane)
+        quality = ResultQuality(settled=int(settled),
+                                residual=int(residual),
+                                epochs=s.query.total_epochs
+                                + s.epochs_used,
+                                completed=completed)
+        return np.asarray(dist_col), quality
+
+    def _detach(self, lane: int, converged: bool, *, force: bool = False,
+                allow_retry: bool = True):
+        """Harvest a lane and free it. Returns a terminal QueryResult, or
+        None when the query went back to the retry queue."""
+        s = self.slots[lane]
+        q = s.query
+        dist, quality = self._harvest_quality(lane, s, converged)
+        if force:
+            # Purge whatever the parked drain never settled; the harvest
+            # above already recorded it as residual.
+            self.carry, purged = self.prog.quiesce(self.carry, lane)
+            self.metrics.forced_purges += 1
+            self.metrics.purged_entries += int(purged)
+        q.total_epochs += s.epochs_used
+        s.reset()
+        if converged:
+            return self._finalize(q, COMPLETED, CONVERGED, lane=lane,
+                                  dist=dist, quality=quality)
+        if allow_retry:
+            r = self.retry.reschedule(q, DEADLINE, self.now)
+            if r is not None:
+                self.metrics.retries += 1
+                self.backoff.append(r)
+                return None
+            cause = DEADLINE
+        else:
+            cause = WATCHDOG
+        return self._finalize(q, PARTIAL, cause, lane=lane, dist=dist,
+                              quality=quality)
+
+    # ---------------------------------------------------------------- tick
+
+    def step(self) -> list[QueryResult]:
+        """One service tick; returns queries that went terminal."""
+        self.now += 1
+        m = self.metrics
+        m.ticks += 1
+        done: list[QueryResult] = []
+
+        # 1. Backoff retries whose window expired re-enter admission.
+        ready = [q for q in self.backoff if q.ready_tick <= self.now]
+        if ready:
+            self.backoff = [q for q in self.backoff
+                            if q.ready_tick > self.now]
+            for q in ready:
+                self._offer(q)
+
+        # 2. Advance the shared engine one epoch when any lane is live.
+        busy = any(not s.free for s in self.slots)
+        if busy:
+            parked = np.array([s.parked for s in self.slots], bool)
+            self.carry, lane_active, scal = self.prog.step(self.carry,
+                                                           parked)
+            lane_active = np.asarray(lane_active)
+            sent, hop_bytes, retrans, _, overflow, backlog = \
+                (int(scal[0]), float(scal[1]), int(scal[2]),
+                 float(scal[3]), int(scal[4]), int(scal[5]))
+            m.engine_epochs += 1
+            m.sent_total += sent
+            m.hop_bytes += hop_bytes
+            m.retransmits += retrans
+            m.overflow = overflow
+            self.watchdog.note_epoch(self.slots)
+        else:
+            lane_active = np.zeros((len(self.slots),), np.int32)
+            backlog = 0
+
+        # 3. Completion detection + parked-lane resolution. Under a
+        # FaultPlan a lane is only settled once the recovery backlog is
+        # empty too: a just-dropped wire row is not lane-attributable, so
+        # the per-lane counter alone could read zero while the lane's
+        # last update sits in a retransmit slot.
+        settled_ok = (not self._faulted) or backlog == 0
+        for lane, s in enumerate(self.slots):
+            if s.free:
+                continue
+            if lane_active[lane] == 0 and settled_ok:
+                r = self._detach(lane, converged=not s.parked)
+                if r is not None:
+                    done.append(r)
+
+        # 4. Deadline watchdog: park over-budget lanes; force-purge lanes
+        # parked past the quiesce patience window.
+        for lane in self.watchdog.to_purge(self.slots):
+            r = self._detach(lane, converged=False, force=True)
+            if r is not None:
+                done.append(r)
+        for lane in self.watchdog.to_park(self.slots):
+            self._park(lane)
+
+        # 5. Fill free lanes from the admission queue (FIFO among ready).
+        for lane, s in enumerate(self.slots):
+            if not s.free:
+                continue
+            q = self.admission.next_ready(self.now)
+            if q is None:
+                break
+            self._attach(lane, q)
+
+        # 6. Liveness accounting: a tick may never end with a free lane
+        # AND a ready pending query (the starvation property test).
+        if any(s.free for s in self.slots) and \
+                self.admission.has_ready(self.now):
+            m.starvation_ticks += 1
+        return done
+
+    # ------------------------------------------------------------- driving
+
+    @property
+    def in_flight(self) -> int:
+        return (sum(1 for s in self.slots if not s.free)
+                + len(self.admission) + len(self.backoff))
+
+    @property
+    def accounted(self) -> bool:
+        """The conservation identity every tick must satisfy."""
+        m = self.metrics
+        return m.submitted == m.terminal + self.in_flight
+
+    def run_until_idle(self, max_ticks: Optional[int] = None) \
+            -> list[QueryResult]:
+        """Tick until every submitted query is terminal. The global
+        watchdog (``ServeConfig.max_ticks``) guarantees termination: on
+        trip, busy lanes finalize as quality-tagged partials and queued
+        queries fail with cause "watchdog" — graceful degradation, never
+        a hang."""
+        limit = self.serve_cfg.max_ticks if max_ticks is None else max_ticks
+        start = self.metrics.ticks
+        done: list[QueryResult] = []
+        while self.in_flight > 0:
+            if self.metrics.ticks - start >= limit:
+                for lane, s in enumerate(self.slots):
+                    if not s.free:
+                        done.append(self._detach(lane, converged=False,
+                                                 force=True,
+                                                 allow_retry=False))
+                stranded = list(self.backoff)
+                self.backoff = []
+                while (q := self.admission.next_ready(self.now + 10**9)) \
+                        is not None:
+                    stranded.append(q)
+                for q in stranded:
+                    done.append(self._finalize(
+                        q, FAILED, WATCHDOG, lane=-1, dist=None,
+                        quality=ResultQuality(settled=0, residual=0,
+                                              epochs=q.total_epochs,
+                                              completed=False)))
+                break
+            done.extend(self.step())
+        return done

@@ -1,0 +1,211 @@
+"""Datatypes of the serving layer: config, queries, results, metrics.
+
+Everything here is host-side Python (the compiled engine programs live in
+``serve.service``). Time is measured in *ticks* — one service-loop
+iteration == one engine epoch when any lane is busy — so latencies and
+SLOs are machine-independent and bench gates stay deterministic;
+wall-clock is reported separately by the benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core.types import ResultQuality
+
+# Terminal statuses of a query.
+COMPLETED = "completed"  # converged; result bit-equal to a solo run
+PARTIAL = "partial"      # preempted/watchdog-cut; quality-tagged result
+FAILED = "failed"        # shed and retries exhausted; no result
+
+# Causes (why a query left a lane / the queue).
+CONVERGED = "converged"
+DEADLINE = "deadline"    # per-query epoch budget exhausted
+SHED = "shed"            # admission rejected / dropped from the queue
+WATCHDOG = "watchdog"    # global run watchdog tripped (run_until_idle)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Service-level policy knobs (engine geometry stays in TascadeConfig).
+
+    n_lanes          -- K concurrent query lanes of the shared engine.
+    epoch_budget     -- default per-query deadline, in engine epochs; a
+                        lane over budget is *parked* (frontier cleared, no
+                        new relaxations) so its in-tree updates drain
+                        naturally while other lanes keep working.
+    quiesce_patience -- parked ticks before the lane-preemption path
+                        force-purges the lane's queues/caches
+                        (``TascadeEngine.quiesce_lane``) and harvests a
+                        quality-tagged partial result.
+    max_pending      -- bounded admission queue depth; None derives it
+                        from the engine's ``lane_capacity_share`` (the
+                        same knob that provisions shared silicon):
+                        ``ceil(n_lanes / share)``.
+    admission        -- overload policy when the queue is full:
+                        "reject_new" (the arriving query is shed) or
+                        "drop_oldest" (the head of the queue is shed to
+                        make room). Both are counted, and shed queries
+                        enter the retry path — never silently dropped.
+    max_retries      -- attempts granted to a shed or preempted query
+                        beyond the first.
+    backoff_base     -- retry backoff in ticks: attempt k re-enters
+                        admission after ``backoff_base * 2**(k-1)`` ticks.
+    budget_escalation-- budget multiplier per deadline-preempted retry
+                        (a query that was making progress gets more time).
+    slo_ticks        -- latency objective (ticks, submit -> terminal) the
+                        benchmarks gate p99 against; None = no SLO.
+    max_ticks        -- global watchdog on ``run_until_idle``: on trip,
+                        busy lanes finalize as quality-tagged partials and
+                        queued queries fail with cause "watchdog" — the
+                        loop can never hang a CI job.
+    """
+
+    n_lanes: int = 8
+    epoch_budget: int = 64
+    quiesce_patience: int = 8
+    max_pending: Optional[int] = None
+    admission: str = "reject_new"
+    max_retries: int = 2
+    backoff_base: int = 2
+    budget_escalation: float = 2.0
+    slo_ticks: Optional[int] = None
+    max_ticks: int = 100_000
+
+    def __post_init__(self):
+        if self.n_lanes < 1:
+            raise ValueError(f"n_lanes must be >= 1, got {self.n_lanes}")
+        if self.epoch_budget < 1:
+            raise ValueError(
+                f"epoch_budget must be >= 1, got {self.epoch_budget}")
+        if self.quiesce_patience < 0:
+            raise ValueError(
+                f"quiesce_patience must be >= 0, got "
+                f"{self.quiesce_patience}")
+        if self.max_pending is not None and self.max_pending < 1:
+            raise ValueError(
+                f"max_pending must be >= 1 or None, got {self.max_pending}")
+        if self.admission not in ("reject_new", "drop_oldest"):
+            raise ValueError(
+                f"admission must be 'reject_new' or 'drop_oldest', got "
+                f"{self.admission!r}")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_base < 1:
+            raise ValueError(
+                f"backoff_base must be >= 1, got {self.backoff_base}")
+        if self.budget_escalation < 1.0:
+            raise ValueError(
+                f"budget_escalation must be >= 1.0, got "
+                f"{self.budget_escalation}")
+        if self.max_ticks < 1:
+            raise ValueError(f"max_ticks must be >= 1, got {self.max_ticks}")
+
+    def derived_max_pending(self, lane_capacity_share: float) -> int:
+        """Admission queue depth: explicit, or derived from the engine's
+        capacity share (less provisioned silicon per lane -> shallower
+        backpressure buffer before shedding)."""
+        if self.max_pending is not None:
+            return self.max_pending
+        return max(1, math.ceil(self.n_lanes / lane_capacity_share))
+
+
+@dataclasses.dataclass
+class Query:
+    """One in-flight query (mutable across retries)."""
+
+    qid: int
+    root: int                # seed vertex of the label-correcting run
+    budget: int              # epoch budget for the CURRENT attempt
+    submit_tick: int         # first submission (latency anchor)
+    ready_tick: int = 0      # earliest tick the query may (re-)enter a lane
+    attempts: int = 0        # retries consumed (0 on first attempt)
+    total_epochs: int = 0    # engine epochs consumed across all attempts
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Terminal record of a query — every submitted query gets exactly one.
+
+    ``dist`` is the global label array for completed/partial results
+    (None for failed queries) and ``quality`` says how partial: a
+    completed result has ``quality.completed`` True and zero residual.
+    """
+
+    qid: int
+    root: int
+    status: str              # COMPLETED | PARTIAL | FAILED
+    cause: str               # CONVERGED | DEADLINE | SHED | WATCHDOG
+    quality: ResultQuality
+    submit_tick: int
+    finish_tick: int
+    attempts: int
+    lane: int = -1           # last lane served on (-1: never attached)
+    dist: Optional[np.ndarray] = None
+
+    @property
+    def latency_ticks(self) -> int:
+        """Submit-to-terminal latency in service ticks (queue wait +
+        retries included)."""
+        return self.finish_tick - self.submit_tick
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Service-lifetime counters; the accounting identity
+
+        submitted == completed + partial + failed + in_flight
+
+    must hold at every tick (``TascadeService.accounted``), with
+    in_flight == 0 once ``run_until_idle`` returns — no query is ever
+    silently dropped."""
+
+    submitted: int = 0
+    completed: int = 0
+    partial: int = 0
+    failed: int = 0
+    rejected_new: int = 0     # admission rejections (reject_new events)
+    shed_oldest: int = 0      # queue-head evictions (drop_oldest events)
+    preemptions: int = 0      # deadline parks
+    forced_purges: int = 0    # quiesce_lane firings after parked patience
+    purged_entries: int = 0   # queue/cache/wire entries discarded by purges
+    retries: int = 0          # re-admissions granted by the retry policy
+    starvation_ticks: int = 0  # ticks ending with a free lane AND a ready
+                               # pending query (must stay 0: liveness)
+    ticks: int = 0
+    engine_epochs: int = 0    # epochs actually stepped (idle ticks excluded)
+    sent_total: int = 0
+    hop_bytes: float = 0.0
+    retransmits: int = 0
+    overflow: int = 0         # engine pending-queue drops (must stay 0)
+    latencies: list = dataclasses.field(default_factory=list)
+
+    def record_latency(self, ticks: int):
+        self.latencies.append(int(ticks))
+
+    def latency_percentile(self, q: float) -> float:
+        """q in [0, 100]; NaN with no terminal results yet."""
+        if not self.latencies:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.latencies), q))
+
+    @property
+    def p50_ticks(self) -> float:
+        return self.latency_percentile(50.0)
+
+    @property
+    def p99_ticks(self) -> float:
+        return self.latency_percentile(99.0)
+
+    @property
+    def terminal(self) -> int:
+        return self.completed + self.partial + self.failed
+
+    @property
+    def lost(self) -> int:
+        """Queries unaccounted for after drain (must be 0)."""
+        return self.submitted - self.terminal

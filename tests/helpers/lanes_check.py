@@ -108,6 +108,95 @@ def check_jaxpr_lane_invariants(mesh, vpad, u):
               f"{nlev} level(s)")
 
 
+def check_lane_recycling(mesh, ndev):
+    """``quiesce_lane`` must scrub a lane so completely that a recycled
+    lane behaves bit-identically to a fresh one — in particular, stale MIN
+    cache lines from the previous occupant must not filter the next
+    query's (larger) values — while untouched lanes keep their exact
+    state."""
+    from jax.sharding import PartitionSpec as P
+
+    vpad, u, L = 256, 64, 4
+    geom = MeshGeom.from_mesh(mesh, vpad)
+    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                        capacity_ratio=4, mode=CascadeMode.TASCADE,
+                        policy=WritePolicy.WRITE_THROUGH, n_lanes=L)
+    engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=u * L)
+    axes = tuple(mesh.axis_names)
+    victim = 2
+
+    rng = np.random.default_rng(17)
+
+    def batch(lo, hi):
+        idx = rng.integers(0, vpad, size=(ndev, u)).astype(np.int32)
+        lane = rng.integers(0, L, size=(ndev, u)).astype(np.int32)
+        val = rng.uniform(lo, hi, size=(ndev, u)).astype(np.float32)
+        return idx * L + lane, val
+
+    # Round 1 seeds every lane with SMALL values (cache lines + labels);
+    # round 2 re-queries the victim lane with LARGER values that a stale
+    # round-1 cache line would filter out.
+    i1, v1 = batch(0.0, 1.0)
+    i2, v2 = batch(2.0, 3.0)
+    i2 = (i2 // L) * L + victim   # round 2 targets the victim lane only
+
+    def run(recycle):
+        def shard_fn(i1, v1, i2, v2):
+            dest = jnp.full((vpad // ndev * L,), jnp.inf, jnp.float32)
+            state = engine.init_state()
+            state, dest, _ = engine.step(
+                state, dest, UpdateStream(i1.reshape(-1), v1.reshape(-1)),
+                drain=True)
+            if recycle:
+                state, _ = engine.quiesce_lane(state, jnp.int32(victim))
+                # The service resets the victim's label column on attach.
+                ext = jnp.arange(dest.shape[0]) % L == victim
+                dest = jnp.where(ext, jnp.inf, dest)
+            state, dest, _ = engine.step(
+                state, dest, UpdateStream(i2.reshape(-1), v2.reshape(-1)),
+                drain=True)
+            return dest
+
+        fn = compat.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(axes), P(axes), P(axes), P(axes)),
+            out_specs=P(axes), check_vma=False)
+        dest = fn(jnp.asarray(i1), jnp.asarray(v1),
+                  jnp.asarray(i2), jnp.asarray(v2))
+        return np.asarray(dest).reshape(vpad, L)
+
+    got = run(recycle=True)
+    keep = run(recycle=False)
+
+    # Reference for the recycled lane: a fresh engine that only ever saw
+    # the round-2 victim-lane updates.
+    def shard_ref(i2, v2):
+        dest = jnp.full((vpad // ndev * L,), jnp.inf, jnp.float32)
+        state = engine.init_state()
+        state, dest, _ = engine.step(
+            state, dest, UpdateStream(i2.reshape(-1), v2.reshape(-1)),
+            drain=True)
+        return dest
+
+    ref = np.asarray(compat.shard_map(
+        shard_ref, mesh=mesh, in_specs=(P(axes), P(axes)),
+        out_specs=P(axes), check_vma=False)(
+            jnp.asarray(i2), jnp.asarray(v2))).reshape(vpad, L)
+
+    np.testing.assert_array_equal(
+        got[:, victim], ref[:, victim],
+        err_msg="recycled lane != fresh lane (stale residue survived "
+                "quiesce_lane)")
+    for l in range(L):
+        if l == victim:
+            continue
+        np.testing.assert_array_equal(
+            got[:, l], keep[:, l],
+            err_msg=f"quiesce_lane({victim}) perturbed untouched lane {l}")
+    print(f"OK lanes recycling: lane {victim} quiesced + re-queried "
+          f"bit-equal to a fresh lane; other {L - 1} lanes untouched")
+
+
 def check_scatter_reduce_lanes(mesh, ndev):
     vpad, u, L = 256, 64, 4
     rng = np.random.default_rng(3)
@@ -147,6 +236,7 @@ def main():
     ndev = 8
 
     check_jaxpr_lane_invariants(mesh, vpad=256, u=32)
+    check_lane_recycling(mesh, ndev)
     check_scatter_reduce_lanes(mesh, ndev)
 
     g = rmat_graph(9, edge_factor=8, seed=1, weighted=True)

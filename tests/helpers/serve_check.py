@@ -1,0 +1,172 @@
+"""Subprocess helper: the always-on query service on a fake 8-device mesh.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8. Checks the
+serving-layer contracts end to end, clean AND under the PR 7 fault plan:
+
+  1. completed results are BIT-equal to solo ``run_sssp`` runs — lane
+     attach/detach over the live engine never perturbs other lanes,
+  2. lane recycling: more queries than lanes, every lane serves >= 2
+     queries, recycled-lane results still bit-equal (quiesce-on-attach
+     scrubs stale cache lines),
+  3. forced-purge recycling: quiesce_patience=0 + a tiny epoch budget
+     exercises park -> purge -> re-attach; the NEXT query on the purged
+     lane is still bit-equal and partials are quality-tagged,
+  4. liveness: starvation_ticks == 0 (a free lane is never left idle
+     while a ready query waits),
+  5. conservation: submitted == completed + partial + failed after drain,
+     zero lost, zero engine overflow; every shed/preempted query is
+     accounted through the retry path,
+  6. all of the above with FaultPlan(drop 5%, corrupt 2%) — completion
+     detection must wait out the recovery backlog.
+
+Prints one line per check; exits non-zero on failure.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import CascadeMode, TascadeConfig, compat
+from repro.core.faults import FaultPlan
+from repro.graph import apps
+from repro.graph.partition import shard_graph
+from repro.graph.rmat import rmat_graph
+from repro.serve import ServeConfig, TascadeService
+from repro.serve.types import COMPLETED, PARTIAL
+
+
+def _solo(mesh, sg, root, cfg):
+    d, m = apps.run_sssp(mesh, sg, root, cfg)
+    assert int(m.completed) == 1
+    return np.asarray(d)
+
+
+def check_bit_equal_and_recycling(mesh, sg, cfg, roots, *, label,
+                                  fault_plan=None):
+    """Submit len(roots) queries through K=4 lanes; every completed result
+    must match the solo run and every lane must recycle."""
+    ecfg = cfg if fault_plan is None else dataclasses.replace(
+        cfg, fault_plan=fault_plan)
+    scfg = ServeConfig(n_lanes=4, epoch_budget=256, quiesce_patience=8,
+                      max_pending=len(roots))
+    svc = TascadeService(mesh, sg, ecfg, scfg)
+    for r in roots:
+        svc.submit(r)
+    results = svc.run_until_idle()
+    assert svc.accounted and svc.metrics.lost == 0, (
+        svc.metrics.submitted, svc.metrics.terminal, svc.in_flight)
+    assert svc.metrics.overflow == 0
+    assert svc.metrics.starvation_ticks == 0, svc.metrics.starvation_ticks
+    assert len(results) == len(roots)
+    lanes_used = {}
+    for res in results:
+        assert res.status == COMPLETED, (res.qid, res.status, res.cause)
+        assert res.quality.completed and res.quality.residual == 0
+        lanes_used[res.lane] = lanes_used.get(res.lane, 0) + 1
+        ref = _solo(mesh, sg, res.root, cfg)
+        np.testing.assert_array_equal(
+            res.dist, ref,
+            err_msg=f"[{label}] query {res.qid} (root {res.root}, lane "
+                    f"{res.lane}) != solo run")
+    assert len(lanes_used) == scfg.n_lanes, lanes_used
+    assert all(n >= 2 for n in lanes_used.values()), (
+        f"[{label}] some lane never recycled: {lanes_used}")
+    print(f"OK serve[{label}]: {len(roots)} queries over "
+          f"{scfg.n_lanes} lanes bit-equal to solo runs, every lane "
+          f"recycled (per-lane {sorted(lanes_used.values())}), "
+          f"starvation_ticks=0")
+    return svc
+
+
+def check_forced_purge_recycling(mesh, sg, cfg, roots):
+    """Tiny budgets + zero patience + a delay-heavy fault plan: a parked
+    lane cannot drain while its updates sit in retransmit backlog, so the
+    watchdog force-purges it (clean drains finish inside one epoch — the
+    engine walks every level per step — hence the faults). Retries
+    escalate budgets until completion; the purge path must leave the lane
+    clean for the next query."""
+    ecfg = dataclasses.replace(
+        cfg, fault_plan=FaultPlan(seed=3, drop_rate=0.1, delay_rate=0.3))
+    scfg = ServeConfig(n_lanes=2, epoch_budget=2, quiesce_patience=0,
+                      max_retries=4, budget_escalation=4.0,
+                      max_pending=len(roots))
+    svc = TascadeService(mesh, sg, ecfg, scfg)
+    for r in roots:
+        svc.submit(r)
+    results = svc.run_until_idle()
+    assert svc.accounted and svc.metrics.lost == 0
+    assert svc.metrics.forced_purges > 0, "purge path never exercised"
+    assert svc.metrics.purged_entries >= 0
+    assert svc.metrics.retries > 0
+    n_done = 0
+    for res in results:
+        if res.status == COMPLETED:
+            n_done += 1
+            ref = _solo(mesh, sg, res.root, cfg)
+            np.testing.assert_array_equal(
+                res.dist, ref,
+                err_msg=f"post-purge query {res.qid} (root {res.root}) "
+                        f"!= solo run")
+        else:
+            # Budget-cut partial: quality must expose the shortfall.
+            assert res.status == PARTIAL
+            assert not res.quality.completed
+            assert res.dist is not None and res.quality.settled >= 1
+    assert n_done > 0, "no query ever completed despite escalation"
+    print(f"OK serve[purge]: {svc.metrics.forced_purges} forced purges "
+          f"({svc.metrics.purged_entries} entries), "
+          f"{svc.metrics.retries} retries, {n_done}/{len(roots)} "
+          f"eventually completed bit-equal, partials quality-tagged")
+
+
+def check_shedding_accounting(mesh, sg, cfg, roots):
+    """Overload a 1-deep queue: sheds must flow through retry/backoff and
+    end accounted — nothing lost, both admission policies."""
+    for policy in ("reject_new", "drop_oldest"):
+        scfg = ServeConfig(n_lanes=2, epoch_budget=256, max_pending=1,
+                          admission=policy, max_retries=1, backoff_base=2)
+        svc = TascadeService(mesh, sg, cfg, scfg)
+        for r in roots:
+            svc.submit(r)
+        svc.run_until_idle()
+        m = svc.metrics
+        shed = m.rejected_new if policy == "reject_new" else m.shed_oldest
+        assert shed > 0, f"{policy}: overload never shed"
+        assert m.lost == 0 and svc.accounted
+        assert m.terminal == m.submitted
+        print(f"OK serve[shed/{policy}]: {shed} shed events, "
+              f"{m.retries} retries, {m.failed} failed — all "
+              f"{m.submitted} accounted")
+
+
+def main():
+    mesh = compat.make_mesh((2, 4), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
+    ndev = 8
+    g = rmat_graph(9, edge_factor=8, seed=1, weighted=True)
+    sg = shard_graph(g, ndev)
+    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                        capacity_ratio=8, mode=CascadeMode.TASCADE,
+                        exchange_slack=2.0)
+    rng = np.random.default_rng(11)
+    deg_order = np.argsort(-g.degrees)
+    roots = [int(r) for r in deg_order[:8]]
+    more = [int(r) for r in rng.choice(deg_order[:64], size=4,
+                                       replace=False)]
+
+    check_bit_equal_and_recycling(mesh, sg, cfg, roots + more,
+                                  label="clean")
+    plan = FaultPlan(seed=7, drop_rate=0.05, corrupt_rate=0.02)
+    check_bit_equal_and_recycling(mesh, sg, cfg, roots + more,
+                                  label="faulted", fault_plan=plan)
+    check_forced_purge_recycling(mesh, sg, cfg, roots[:4])
+    check_shedding_accounting(mesh, sg, cfg, roots)
+
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

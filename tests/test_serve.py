@@ -1,0 +1,266 @@
+"""Serving layer: fast policy-unit and single-device end-to-end checks
+inline; the real multi-device contracts (bit-equality vs solo runs under
+lane recycling and forced purges, clean and faulted) in a subprocess with
+8 fake host devices (XLA locks the device count at first init)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import CascadeMode, ResultQuality, TascadeConfig, compat
+from repro.graph import apps
+from repro.graph.partition import shard_graph
+from repro.graph.rmat import rmat_graph
+from repro.serve import (
+    AdmissionController,
+    DeadlineWatchdog,
+    Query,
+    RetryPolicy,
+    ServeConfig,
+    TascadeService,
+)
+from repro.serve.deadline import LaneSlot
+from repro.serve.types import COMPLETED, DEADLINE, SHED
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _mesh1():
+    return compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
+
+
+def _q(qid=0, root=0, budget=8, submit=0, ready=0, attempts=0):
+    return Query(qid=qid, root=root, budget=budget, submit_tick=submit,
+                 ready_tick=ready, attempts=attempts)
+
+
+# --------------------------------------------------------------- configs
+
+def test_serve_config_validation():
+    for bad in (dict(n_lanes=0), dict(epoch_budget=0),
+                dict(quiesce_patience=-1), dict(max_pending=0),
+                dict(admission="lifo"), dict(max_retries=-1),
+                dict(backoff_base=0), dict(budget_escalation=0.5),
+                dict(max_ticks=0)):
+        with pytest.raises(ValueError):
+            ServeConfig(**bad)
+
+
+def test_derived_max_pending():
+    assert ServeConfig(max_pending=3).derived_max_pending(0.25) == 3
+    assert ServeConfig(n_lanes=8).derived_max_pending(0.25) == 32
+    assert ServeConfig(n_lanes=8).derived_max_pending(1.0) == 8
+    assert ServeConfig(n_lanes=1).derived_max_pending(1.0) == 1
+
+
+def test_engine_config_max_epochs_validation():
+    with pytest.raises(ValueError):
+        TascadeConfig(max_epochs=-1)
+    assert TascadeConfig(max_epochs=0).max_epochs == 0
+
+
+# ------------------------------------------------------------- admission
+
+def test_admission_reject_new():
+    ac = AdmissionController(ServeConfig(max_pending=2))
+    assert ac.offer(_q(0)) == (True, None)
+    assert ac.offer(_q(1)) == (True, None)
+    assert ac.offer(_q(2)) == (False, None)   # full: arrival shed
+    assert len(ac) == 2 and ac.admitted == 2
+
+
+def test_admission_drop_oldest():
+    ac = AdmissionController(ServeConfig(max_pending=2,
+                                         admission="drop_oldest"))
+    ac.offer(_q(0))
+    ac.offer(_q(1))
+    admitted, victim = ac.offer(_q(2))
+    assert admitted and victim is not None and victim.qid == 0
+    assert [q.qid for q in ac.pending] == [1, 2]
+
+
+def test_admission_next_ready_is_fifo_among_ready():
+    ac = AdmissionController(ServeConfig(max_pending=8))
+    ac.offer(_q(0, ready=5))   # backoff not yet expired
+    ac.offer(_q(1, ready=0))
+    ac.offer(_q(2, ready=0))
+    assert ac.has_ready(0)
+    assert ac.next_ready(0).qid == 1   # oldest READY, not oldest queued
+    assert ac.next_ready(0).qid == 2
+    assert ac.next_ready(0) is None and not ac.has_ready(0)
+    assert ac.next_ready(5).qid == 0
+    assert len(ac) == 0
+
+
+# ----------------------------------------------------------- retry policy
+
+def test_retry_backoff_grows_exponentially():
+    rp = RetryPolicy(ServeConfig(max_retries=3, backoff_base=2))
+    assert [rp.backoff_ticks(k) for k in (1, 2, 3)] == [2, 4, 8]
+
+
+def test_retry_escalates_budget_only_on_deadline():
+    rp = RetryPolicy(ServeConfig(max_retries=2, backoff_base=2,
+                                 budget_escalation=2.0))
+    q = _q(budget=8)
+    r = rp.reschedule(q, DEADLINE, tick=10)
+    assert r is q and q.attempts == 1 and q.ready_tick == 12
+    assert q.budget == 16
+    r = rp.reschedule(q, SHED, tick=20)
+    assert q.attempts == 2 and q.ready_tick == 24
+    assert q.budget == 16                       # sheds never escalate
+    assert rp.reschedule(q, SHED, tick=30) is None   # exhausted
+
+
+# -------------------------------------------------------------- watchdog
+
+def test_watchdog_park_and_purge():
+    wd = DeadlineWatchdog(quiesce_patience=1)
+    slots = [LaneSlot(), LaneSlot(query=_q(0, budget=2)),
+             LaneSlot(query=_q(1, budget=100))]
+    wd.note_epoch(slots)
+    assert wd.to_park(slots) == []
+    wd.note_epoch(slots)
+    assert slots[0].epochs_used == 0            # free lanes never charged
+    assert wd.to_park(slots) == [1]
+    slots[1].parked = True
+    assert wd.to_park(slots) == []              # parked lanes not re-parked
+    assert wd.to_purge(slots) == []
+    wd.note_epoch(slots)
+    assert wd.to_purge(slots) == []             # parked_ticks == patience
+    wd.note_epoch(slots)
+    assert wd.to_purge(slots) == [1]            # patience exceeded
+    slots[1].reset()
+    assert slots[1].free and wd.to_purge(slots) == []
+
+
+def test_result_quality_exported():
+    rq = ResultQuality(settled=3, residual=0, epochs=5, completed=True)
+    assert rq.completed and rq.settled == 3
+
+
+# ----------------------------------------------- global run watchdog (apps)
+
+def _tiny_setup(ndev=1):
+    g = rmat_graph(7, edge_factor=6, seed=2, weighted=True)
+    sg = shard_graph(g, ndev)
+    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                        capacity_ratio=4, mode=CascadeMode.TASCADE)
+    return g, sg, cfg
+
+
+def test_run_metrics_completed_flag():
+    import dataclasses
+    mesh = _mesh1()
+    g, sg, cfg = _tiny_setup()
+    root = int(np.argmax(g.degrees))
+    _, m = apps.run_sssp(mesh, sg, root, cfg)
+    assert int(m.completed) == 1
+    capped = dataclasses.replace(cfg, max_epochs=1)
+    _, m1 = apps.run_sssp(mesh, sg, root, capped)
+    assert int(m1.epochs) == 1 and int(m1.completed) == 0
+
+
+def test_pagerank_completed_flag():
+    import dataclasses
+    mesh = _mesh1()
+    g, sg, cfg = _tiny_setup()
+    _, m = apps.run_pagerank(mesh, sg, cfg, iters=3)
+    assert int(m.completed) == 1
+    capped = dataclasses.replace(cfg, max_epochs=2)
+    _, m2 = apps.run_pagerank(mesh, sg, capped, iters=3)
+    assert int(m2.epochs) == 2 and int(m2.completed) == 0
+
+
+# ------------------------------------------- single-device service e2e
+
+def test_service_single_device_bit_equal():
+    mesh = _mesh1()
+    g, sg, cfg = _tiny_setup()
+    roots = [int(r) for r in np.argsort(-g.degrees)[:5]]
+    svc = TascadeService(mesh, sg, cfg,
+                         ServeConfig(n_lanes=2, epoch_budget=256,
+                                     max_pending=8))
+    for r in roots:
+        svc.submit(r)
+    results = svc.run_until_idle()
+    assert len(results) == len(roots)
+    assert svc.accounted and svc.metrics.lost == 0
+    assert svc.metrics.starvation_ticks == 0
+    for res in results:
+        assert res.status == COMPLETED and res.quality.residual == 0
+        ref, m = apps.run_sssp(mesh, sg, res.root, cfg)
+        assert int(m.completed) == 1
+        np.testing.assert_array_equal(res.dist, np.asarray(ref))
+    # Latency stats exist and respect ordering.
+    assert svc.metrics.p50_ticks <= svc.metrics.p99_ticks
+
+
+def test_service_liveness_property():
+    """Randomized arrivals/budgets/policies: no tick may end with a free
+    lane and a ready pending query, and accounting must hold at EVERY
+    tick — not just after drain."""
+    mesh = _mesh1()
+    g, sg, cfg = _tiny_setup()
+    vmax = g.num_vertices
+    rng = np.random.default_rng(29)
+    for trial in range(4):
+        policy = ("reject_new", "drop_oldest")[trial % 2]
+        scfg = ServeConfig(n_lanes=int(rng.integers(1, 4)),
+                           epoch_budget=int(rng.integers(2, 40)),
+                           quiesce_patience=int(rng.integers(0, 3)),
+                           max_pending=int(rng.integers(1, 5)),
+                           admission=policy,
+                           max_retries=int(rng.integers(0, 3)),
+                           backoff_base=int(rng.integers(1, 4)))
+        svc = TascadeService(mesh, sg, cfg, scfg)
+        ticks = 0
+        while svc.in_flight > 0 or ticks < 30:
+            if ticks < 30 and rng.random() < 0.4:
+                svc.submit(int(rng.integers(0, vmax)))
+            svc.step()
+            assert svc.accounted, (trial, ticks)
+            ticks += 1
+            assert ticks < 5000, f"trial {trial}: service wedged"
+        m = svc.metrics
+        assert m.starvation_ticks == 0, (trial, m.starvation_ticks)
+        assert m.lost == 0 and m.terminal == m.submitted
+
+
+def test_service_global_watchdog_degrades_gracefully():
+    """An impossible deadline regime + max_ticks trip must terminate with
+    every query accounted (partial/failed), never a hang."""
+    mesh = _mesh1()
+    g, sg, cfg = _tiny_setup()
+    svc = TascadeService(mesh, sg, cfg,
+                         ServeConfig(n_lanes=1, epoch_budget=1,
+                                     quiesce_patience=0, max_retries=50,
+                                     max_pending=4, max_ticks=12))
+    for r in range(3):
+        svc.submit(int(np.argsort(-g.degrees)[r]))
+    svc.run_until_idle()
+    m = svc.metrics
+    assert svc.in_flight == 0 and m.lost == 0
+    assert m.terminal == m.submitted == 3
+
+
+# ------------------------------------------------------- multi-device
+
+@pytest.mark.slow
+@pytest.mark.parametrize("devices,script", [
+    (8, "serve_check.py"),
+])
+def test_distributed_serving(devices, script):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "helpers" / script)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL_OK" in proc.stdout
