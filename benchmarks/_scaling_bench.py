@@ -1,0 +1,211 @@
+"""Deep-mesh weak-scaling benchmark (spawned by benchmarks.run).
+
+One process with ``BENCH_SCALING_DEVICES`` fake CPU devices (default 32)
+sweeps RMAT scale x mesh depth on TASCADE engines:
+
+  * weak-scaling grid: devices n in {8, 16, 32} with RMAT scale grown as
+    ``BENCH_SCALE + log2(n/8)`` (constant edges per device), each n at
+    every mesh depth its factorization supports — depth 2 (4x2, 4x4),
+    depth 3 (2x2x2, 4x2x2) and the deep depth-4 meshes 2x2x2x2 and
+    4x2x2x2, one tree level per axis;
+  * rows ``scale/{bfs,sssp}/d{depth}_n{n}`` carry GTEPS (the
+    devices-curve), total sent / hop_bytes / table_elems, and the
+    per-level curves ``sent_lv= / hop_lv= / table_lv=`` ("|"-separated,
+    leaf -> root);
+  * machine-independent invariants are self-gated per row:
+      - ``geom=1``  — per-level table work tracks the entering coverage
+        geometrically (coverage(l+1) == coverage(l) / peers(l)),
+      - ``mono=1``  — per-level sent and wire bytes (sent * msg_bytes)
+        are monotone non-increasing leaf -> root: coalescing must shrink
+        traffic as updates ascend the tree. The raw ``hop_lv`` curve is
+        reported but NOT gated — hop-weighted bytes scale with the level
+        axis's size (mean_hops = size/4), so a level crossing a larger
+        axis legitimately costs more hops per message,
+      - ``bitequal=1`` — a 2-lane multi-source sweep is per-lane bit-equal
+        to solo runs at that depth;
+  * ``scale/cache_ab/d{depth}/{interleaved,batched_cache}`` A/B rows time
+    ``batch_cache_passes`` at every depth with bit-equality asserted — the
+    data behind the config default (see DESIGN.md).
+
+Prints ``name,us_per_call,derived`` CSV; ends with SCALING_BENCH_DONE.
+"""
+import os
+import sys
+
+ndev_max = int(os.environ.get("BENCH_SCALING_DEVICES", "32"))
+os.environ["XLA_FLAGS"] = \
+    f"--xla_force_host_platform_device_count={ndev_max}"
+
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CascadeMode, MeshGeom, ReduceOp, TascadeConfig,
+                        TascadeEngine)
+from repro.graph import apps
+from repro.graph.partition import shard_graph
+from repro.graph.rmat import rmat_graph
+from repro.launch import mesh as launch
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def timed(fn, *args, reps=3):
+    """Best-of-reps wall time (min is the noise-robust statistic: shared
+    CPUs only ever add time)."""
+    out = fn(*args)  # warm / compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out[0] if isinstance(out, tuple) else out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out
+
+
+def gteps_of(edges: float, us: float) -> float:
+    return edges / max(us, 1e-9) / 1e3
+
+
+def cfg_for(depth, **over):
+    axes = tuple(f"ax{i}" for i in range(depth))
+    base = dict(region_axes=axes[-1:], cascade_axes=axes[:-1],
+                capacity_ratio=8, mode=CascadeMode.TASCADE,
+                exchange_slack=2.0, max_exchange_rounds=8)
+    base.update(over)
+    return TascadeConfig(**base)
+
+
+def engine_of(mesh, vpad, cfg):
+    geom = MeshGeom.from_mesh(mesh, vpad)
+    return TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=8)
+
+
+def geometric_ok(engine) -> bool:
+    """coverage(l+1) == coverage(l) / peers(l), exactly, at every level."""
+    cov = engine.geom.padded_elements
+    for li, spec in enumerate(engine.levels):
+        if li > 0 and (spec.plan is None or spec.plan.coverage != cov):
+            return False
+        if cov % spec.num_peers:
+            return False
+        cov //= spec.num_peers
+    return cov == engine.geom.shard_size
+
+
+def level_curves(engine, sent_lv):
+    """Per-level curves from the static level specs + measured sent:
+    wire(l) = sent(l) * msg_bytes(l) (bytes entering the wire — the gated
+    monotone quantity), hop(l) = wire(l) * mean_hops(l) (mirrors
+    engine.step's accounting), and the per-level table sizes."""
+    wire_lv, hop_lv, tbl_lv = [], [], []
+    vpad = engine.geom.padded_elements
+    for li, spec in enumerate(engine.levels):
+        mb = spec.fmt.msg_bytes if spec.fmt is not None else 8
+        wire_lv.append(float(sent_lv[li]) * mb)
+        hop_lv.append(wire_lv[-1] * spec.mean_hops)
+        tbl_lv.append(spec.plan.coverage if spec.plan is not None else vpad)
+    return wire_lv, hop_lv, tbl_lv
+
+
+def fmt_curve(vals):
+    return "|".join(f"{v:.0f}" for v in vals)
+
+
+def monotone_ok(vals) -> bool:
+    return all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def main():
+    base_scale = int(os.environ.get("BENCH_SCALE", "10"))
+    # (devices, depth): every depth each n's factorization supports, the
+    # depth-4 deep meshes last. Weak scaling: constant edges per device.
+    grid = [(8, 2), (8, 3), (16, 2), (16, 3), (16, 4), (32, 4)]
+    grid = [(n, d) for n, d in grid if n <= ndev_max]
+
+    graphs = {}
+    for n in sorted({n for n, _ in grid}):
+        scale = base_scale + int(np.log2(n // 8))
+        g = rmat_graph(scale, edge_factor=8, seed=1, weighted=True)
+        graphs[n] = (g, shard_graph(g, n), int(np.argmax(g.degrees)))
+
+    app_runners = (
+        ("bfs", apps.run_bfs, apps.run_bfs_multi),
+        ("sssp", apps.run_sssp, apps.run_sssp_multi),
+    )
+
+    for n, depth in grid:
+        g, sg, root = graphs[n]
+        mesh = launch.make_scaling_mesh(depth, ndev=n)
+        shape = "x".join(str(s)
+                         for s in mesh.devices.shape)
+        cfg = cfg_for(depth)
+        engine = engine_of(mesh, sg.vpad, cfg)
+        geom_ok = int(geometric_ok(engine))
+        tbl = engine.table_elems
+
+        # Lane bit-equality at this exact (depth, n): a 2-source sweep
+        # must match two solo runs bit-for-bit.
+        roots = [root, int(np.argsort(-g.degrees)[1])]
+        for app, run1, runk in app_runners:
+            us, (res, m) = timed(run1, mesh, sg, root, cfg)
+            assert int(m.completed) == 1, (app, n, depth, "epoch bound hit")
+            assert int(m.overflow) == 0, (app, n, depth)
+            sent_lv = np.asarray(m.sent_levels)
+            assert int(sent_lv.sum()) == int(m.sent_total), (
+                "sent_levels must sum to sent_total")
+            wire_lv, hop_lv, tbl_lv = level_curves(engine, sent_lv)
+            assert abs(sum(hop_lv) - float(m.hop_bytes)) <= \
+                1e-6 * max(float(m.hop_bytes), 1.0), (
+                "per-level hop curve must sum to the measured hop_bytes")
+            mono = int(monotone_ok(list(sent_lv)) and monotone_ok(wire_lv))
+
+            dist_b, mb = runk(mesh, sg, roots, cfg)
+            bitequal = 1
+            for l, r in enumerate(roots):
+                d_solo, _ = run1(mesh, sg, r, cfg)
+                if not np.array_equal(np.asarray(dist_b[l]),
+                                      np.asarray(d_solo)):
+                    bitequal = 0
+            er = float(m.edges_relaxed)
+            row(f"scale/{app}/d{depth}_n{n}", us,
+                f"devices={n};depth={depth};mesh={shape};"
+                f"edges_relaxed={er:.0f};gteps={gteps_of(er, us):.6f};"
+                f"msgs={int(m.sent_total)};hop_bytes={float(m.hop_bytes):.0f};"
+                f"table_elems={tbl};sent_lv={fmt_curve(sent_lv)};"
+                f"hop_lv={fmt_curve(hop_lv)};table_lv={fmt_curve(tbl_lv)};"
+                f"geom={geom_ok};mono={mono};bitequal={bitequal};"
+                f"epochs={int(m.epochs)}")
+
+    # ---- batch_cache_passes A/B at every depth (n = 16) ----
+    # Same engine, same updates; ONLY the drain schedule differs
+    # (interleaved per-round cache passes vs one batched pass per drain).
+    # Results must stay bit-equal; the wall-clock column is the data the
+    # config default rests on.
+    n_ab = min(16, ndev_max)
+    g, sg, root = graphs[n_ab]
+    for depth in sorted({d for n, d in grid if n == n_ab}):
+        mesh = launch.make_scaling_mesh(depth, ndev=n_ab)
+        outs = {}
+        for tag, batched in (("interleaved", False), ("batched_cache", True)):
+            cfg = cfg_for(depth, batch_cache_passes=batched)
+            us, (res, m) = timed(apps.run_bfs, mesh, sg, root, cfg)
+            assert int(m.overflow) == 0
+            outs[tag] = np.asarray(res)
+            row(f"scale/cache_ab/d{depth}/{tag}", us,
+                f"devices={n_ab};depth={depth};msgs={int(m.sent_total)};"
+                f"hop_bytes={float(m.hop_bytes):.0f};"
+                f"epochs={int(m.epochs)}")
+        assert np.array_equal(outs["interleaved"], outs["batched_cache"]), (
+            f"batch_cache_passes changed the BFS result at depth {depth}")
+
+    print("SCALING_BENCH_DONE", flush=True)
+
+
+if __name__ == "__main__":
+    main()

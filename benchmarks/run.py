@@ -1,10 +1,13 @@
 """Benchmark harness: one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Multi-device engine benchmarks
-(paper Figs. 3-7 + Histogram) and the serving benchmark (Poisson load on
-the always-on query service) each run in a spawned 8-fake-device
-subprocess with a per-ROW wall-clock timeout (``BENCH_ROW_TIMEOUT``, a
-wedged bench is killed as soon as it stops producing rows); kernel
+(paper Figs. 3-7 + Histogram), the serving benchmark (Poisson load on
+the always-on query service) and the deep-mesh weak-scaling sweep
+(``scale/*`` rows: GTEPS-vs-devices and per-level traffic curves at mesh
+depths 2-4, see DESIGN.md) each run in a spawned fake-device subprocess
+(8 devices; the scaling sweep takes ``BENCH_SCALING_DEVICES``, default
+32) with a per-ROW wall-clock timeout (``BENCH_ROW_TIMEOUT``, a wedged
+bench is killed as soon as it stops producing rows); kernel
 microbenchmarks and the strong-scaling / storage models run in-process
 (1 device).
 
@@ -87,7 +90,9 @@ def _parse_derived(derived: str) -> dict:
                        ("p99_ticks", "p99_ticks"), ("lost", "lost"),
                        ("shed", "shed"), ("submitted", "submitted"),
                        ("completed", "completed"), ("slo_ok", "slo_ok"),
-                       ("starved", "starved"), ("accounted", "accounted")):
+                       ("starved", "starved"), ("accounted", "accounted"),
+                       ("devices", "devices"), ("depth", "depth"),
+                       ("geom", "geom"), ("mono", "mono")):
         m = re.search(rf"{key}=(-?[\d.]+(?:e[+-]?\d+)?)", derived)
         if m:
             out[alias] = float(m.group(1))
@@ -161,6 +166,14 @@ def engine_benchmarks():
 def serve_benchmarks():
     return _sub_bench("_serve_bench.py", "SERVE_BENCH_DONE",
                       ("SERVE",), "serve_bench")
+
+
+def scaling_benchmarks():
+    """Deep-mesh weak-scaling sweep (``scale/*`` rows): its own subprocess
+    with BENCH_SCALING_DEVICES fake devices (default 32, so the 4x2x2x2
+    depth-4 mesh exists) — independent of the 8-device engine bench."""
+    return _sub_bench("_scaling_bench.py", "SCALING_BENCH_DONE",
+                      ("SCALING",), "scaling_bench")
 
 
 def kernel_benchmarks():
@@ -420,6 +433,72 @@ def serve_row_gates(rows: list[dict]) -> list[str]:
     return out
 
 
+def scaling_row_gates(rows: list[dict]) -> list[str]:
+    """Cross-row gates for the weak-scaling sweep (``scale/*``), all
+    machine-independent — GTEPS itself is never gated (wall-clock):
+
+      * every depth in {2, 3, 4} must be present for both bfs and sssp
+        (the whole point of the sweep is the deep-mesh curve; a silently
+        truncated grid must fail, not pass by omission),
+      * every ``scale/{app}/*`` row must carry its three self-gated
+        invariant flags green: ``geom=1`` (per-level table work tracks the
+        entering coverage geometrically), ``mono=1`` (per-level sent /
+        wire bytes monotone non-increasing leaf -> root), ``bitequal=1``
+        (lane sweep bit-equal to solo runs at that depth),
+      * at a fixed device count, a DEEPER mesh must not send more
+        hop-weighted traffic: hop_bytes(depth d) <= hop_bytes(depth d')
+        for d > d' on the same app/devices (the reduction tree exists to
+        shrink traffic; a depth that inflates it is a regression),
+      * each ``scale/cache_ab/<depth>/*`` pair must agree on msgs and
+        hop_bytes exactly (the drain schedule must not change traffic).
+    """
+    out: list[str] = []
+    sweep = [r for r in rows if r["name"].startswith("scale/")
+             and not r["name"].startswith("scale/cache_ab/")]
+    if sweep:
+        for app in ("bfs", "sssp"):
+            depths = {int(r["depth"]) for r in sweep
+                      if f"/{app}/" in r["name"] and "depth" in r}
+            missing = {2, 3, 4} - depths
+            if missing:
+                out.append(f"scale/{app}: depth(s) {sorted(missing)} "
+                           "missing from the sweep grid")
+    for r in sweep:
+        for flag, what in (("geom", "geometric coverage tracking"),
+                           ("mono", "per-level traffic monotonicity"),
+                           ("bitequal", "lane/solo bit-equality")):
+            if f"{flag}=1" not in r.get("derived", ""):
+                out.append(f"{r['name']}: {what} violated ({flag}!=1)")
+    by_key = {}
+    for r in sweep:
+        if "depth" in r and "devices" in r and r.get("hop_bytes"):
+            app = r["name"].split("/")[1]
+            by_key.setdefault((app, int(r["devices"])), []).append(
+                (int(r["depth"]), float(r["hop_bytes"]), r["name"]))
+    for (app, n), pts in by_key.items():
+        pts.sort()
+        for (d0, h0, _), (d1, h1, name1) in zip(pts, pts[1:]):
+            if d1 > d0 and h1 > h0:
+                out.append(f"{name1}: hop_bytes {h1:.0f} exceeds the "
+                           f"shallower depth-{d0} mesh's {h0:.0f} at "
+                           f"n={n} — deeper trees must shrink traffic")
+    ab = {}
+    for r in rows:
+        if r["name"].startswith("scale/cache_ab/"):
+            _, _, depth, tag = r["name"].split("/")
+            ab.setdefault(depth, {})[tag] = r
+    for depth, pair in ab.items():
+        a, b = pair.get("interleaved"), pair.get("batched_cache")
+        if a is None or b is None:
+            out.append(f"scale/cache_ab/{depth}: A/B row missing")
+            continue
+        for key in ("sent", "hop_bytes"):
+            if a.get(key) != b.get(key):
+                out.append(f"scale/cache_ab/{depth}: {key} differs between "
+                           "drain schedules (must be traffic-neutral)")
+    return out
+
+
 def compare_snapshots(old_path: str, rows: list[dict],
                       wall_tol: float = 0.25,
                       traffic_tol: float = 0.01) -> list[str]:
@@ -496,6 +575,10 @@ def compare_snapshots(old_path: str, rows: list[dict],
                 regressions.append(
                     f"{r['name']}: {o['us_per_call']:.0f}us -> "
                     f"{r['us_per_call']:.0f}us ({dus * 100:+.1f}%)")
+        # scale/* rows get the machine-independent gates (traffic drift,
+        # table growth) but never the wall-clock gate: deep-mesh sweeps on
+        # oversubscribed fake-device CPUs time too noisily to gate.
+        if r["name"].startswith(("fig4/", "scale/")):
             for label, dt in (("sent", dsent), ("hop_bytes", dhop)):
                 if dt is not None and abs(dt) > traffic_tol:
                     flag = "  << REGRESSION"
@@ -544,6 +627,7 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     ok = engine_benchmarks()
     ok = serve_benchmarks() and ok
+    ok = scaling_benchmarks() and ok
     kernel_benchmarks()
     flush_snapshot()
     strong_scaling_model()
@@ -556,7 +640,8 @@ def main(argv=None) -> None:
     if compare_path is not None and Path(compare_path).exists():
         regressions = compare_snapshots(compare_path, ROWS)
     if compare_path is not None:
-        for gates in (codec_row_gates, fault_row_gates, serve_row_gates):
+        for gates in (codec_row_gates, fault_row_gates, serve_row_gates,
+                      scaling_row_gates):
             for line in gates(ROWS):
                 print(f"REGRESSION {line}", flush=True)
                 regressions.append(line)

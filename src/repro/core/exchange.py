@@ -93,6 +93,7 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.geom import CompactPlan
 from repro.core.types import (
@@ -105,8 +106,9 @@ from repro.core.types import (
 )
 
 # Sort key for invalid (sentinel) entries on the unpacked path: larger than
-# any real index.
-_BIG = jnp.int32(2**30)
+# any real index.  numpy scalar (same int32 semantics in jnp ops) so the
+# import stays backend-free — see the NO_IDX note in types.py.
+_BIG = np.int32(2**30)
 
 
 class RouteResult(NamedTuple):
@@ -633,11 +635,23 @@ def wire_to_stream(wire, fmt: WireFormat | None, dtype=jnp.float32) -> UpdateStr
 
 def all_to_all_wire(wire, axis_name, fmt: WireFormat | None,
                     dtype=jnp.float32) -> UpdateStream:
-    """Exchange packed buckets along one mesh axis — ONE collective on the
-    packed wire block (two only on the unpacked fallback). Returns the
-    [P*K] entries received (bucket j = what peer j sent me)."""
+    """Exchange packed buckets along one mesh axis — ONE collective per
+    level-round. The unpacked fallback (``fmt is None``: compact keys too
+    wide for the single packed word, e.g. >127 peers at 24 idx bits on a
+    deep mesh) concatenates its idx and value-bit lanes into one
+    ``[P, 2K]`` i32 block so it issues the same single ``all_to_all`` as
+    the packed wire; only a non-32-bit working dtype still needs two.
+    Returns the [P*K] entries received (bucket j = what peer j sent me)."""
     if fmt is None:
         idx, val = wire
+        if jnp.dtype(val.dtype).itemsize == 4:
+            k = idx.shape[1]
+            block = jnp.concatenate(
+                [idx, jax.lax.bitcast_convert_type(val, jnp.int32)], axis=1)
+            recv = jax.lax.all_to_all(block, axis_name, split_axis=0,
+                                      concat_axis=0)
+            return wire_to_stream(
+                (recv[:, :k], bits_val(recv[:, k:], val.dtype)), None, dtype)
         ridx = jax.lax.all_to_all(idx, axis_name, split_axis=0, concat_axis=0)
         rval = jax.lax.all_to_all(val, axis_name, split_axis=0, concat_axis=0)
         return wire_to_stream((ridx, rval), None, dtype)

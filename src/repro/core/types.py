@@ -17,12 +17,18 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.codec import PayloadCodec
 from repro.core.faults import FaultPlan
 
 # Sentinel index marking an inactive update slot / empty cache line.
-NO_IDX = jnp.int32(-1)
+# A numpy scalar, NOT jnp.int32(-1): materializing a jax array here would
+# initialize the backend at import time, which breaks the multi-process
+# launch path (launch.mesh.init_distributed must set device flags and the
+# collective implementation BEFORE the backend comes up).  np.int32 has the
+# same strong int32 dtype semantics inside every jnp op.
+NO_IDX = np.int32(-1)
 
 
 class ReduceOp(str, enum.Enum):

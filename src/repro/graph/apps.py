@@ -57,6 +57,9 @@ class RunMetrics(NamedTuple):
                               # cut off by an epoch bound (the
                               # TascadeConfig.max_epochs watchdog or the
                               # caller's own max_epochs/iters)
+    sent_levels: jnp.ndarray  # int32[nlev] messages exchanged per tree
+                              # level (sums to sent_total) — the weak-scaling
+                              # bench gates per-level monotonicity on it
 
 
 _N_METRICS = len(RunMetrics._fields)
@@ -173,6 +176,7 @@ class EpochStats(NamedTuple):
     filtered: jnp.ndarray     # int32 P-cache-filtered updates (local)
     coalesced: jnp.ndarray    # int32 coalesced updates (local)
     retransmits: jnp.ndarray  # int32 at-least-once re-emissions (local)
+    sent_levels: jnp.ndarray  # int32[nlev] per-tree-level messages (local)
 
 
 def _make_epoch_fn(engine: TascadeEngine, *, cand_fn, n_shard, n_emax,
@@ -251,6 +255,7 @@ def _make_epoch_fn(engine: TascadeEngine, *, cand_fn, n_shard, n_emax,
             filtered=stats.filtered,
             coalesced=stats.coalesced,
             retransmits=stats.retransmits,
+            sent_levels=stats.sent.astype(jnp.int32),
         )
         return state, dist, frontier, skip, lane_active, es
 
@@ -304,12 +309,14 @@ def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
                 acc[3] + es.coalesced,
                 acc[4] + es.n_relaxed,
                 acc[5] + es.retransmits,
+                acc[6] + es.sent_levels,
             )
             return (state, dist, frontier, skip, active, epoch + 1,
                     lane_ep, acc)
 
         acc0 = (jnp.int32(0), jnp.float32(0), jnp.int32(0), jnp.int32(0),
-                jnp.float32(0), jnp.int32(0))
+                jnp.float32(0), jnp.int32(0),
+                jnp.zeros((len(engine.levels),), jnp.int32))
         skip0 = jnp.zeros((n_shard, lanes), jnp.int32)
         lane_ep0 = jnp.zeros((lanes,), jnp.int32)
         state, dist, _, _, active, epoch, lane_ep, acc = jax.lax.while_loop(
@@ -328,6 +335,7 @@ def _build_label_correcting(mesh, sg, cfg, *, init_fn, cand_fn, max_epochs,
             lane_epochs=lane_ep,  # psummed lane_active => replicated
             retransmits=jax.lax.psum(acc[5], axes),
             completed=(active == 0).astype(jnp.int32),
+            sent_levels=jax.lax.psum(acc[6], axes),
         )
         # Single-lane callers keep the historical [shard] result shape.
         return (dist[:, 0] if lanes == 1 else dist), m
@@ -463,6 +471,7 @@ def _build_pagerank(mesh, sg, cfg, iters, d, dense):
                 )[:-1]
                 sums = engine.dense_reduce(part)
                 stats_sent = jnp.int32(0)
+                sent_lv = jnp.zeros((len(engine.levels),), jnp.int32)
                 # dense-tree traffic: per axis stage, each device moves
                 # (P-1)/P of its current block over ~P/4 mean torus hops.
                 size = float(n_vpad)
@@ -488,18 +497,21 @@ def _build_pagerank(mesh, sg, cfg, iters, d, dense):
                 state, sums, stats = engine.step(state, sums, new,
                                                  drain=True, flush=True)
                 stats_sent = jnp.sum(stats.sent, dtype=jnp.int32)
+                sent_lv = stats.sent.astype(jnp.int32)
                 hopb = stats.hop_bytes
                 filtered, coalesced = stats.filtered, stats.coalesced
                 overflow = state.overflow
                 retrans = stats.retransmits
             rank = (1.0 - d) / n + d * sums
             acc = (acc[0] + stats_sent, acc[1] + hopb, acc[2] + filtered,
-                   acc[3] + coalesced, acc[4] + overflow, acc[5] + retrans)
+                   acc[3] + coalesced, acc[4] + overflow, acc[5] + retrans,
+                   acc[6] + sent_lv)
             return (rank, acc), None
 
         rank0 = jnp.full((n_shard,), 1.0 / n, jnp.float32)
         acc0 = (jnp.int32(0), jnp.float32(0), jnp.int32(0), jnp.int32(0),
-                jnp.int32(0), jnp.int32(0))
+                jnp.int32(0), jnp.int32(0),
+                jnp.zeros((len(engine.levels),), jnp.int32))
         (rank, acc), _ = jax.lax.scan(body, (rank0, acc0), None, length=iters)
         m = RunMetrics(
             epochs=jnp.int32(iters),
@@ -512,6 +524,7 @@ def _build_pagerank(mesh, sg, cfg, iters, d, dense):
             lane_epochs=jnp.full((1,), iters, jnp.int32),
             retransmits=jax.lax.psum(acc[5], axes),
             completed=jnp.int32(1 if iters == iters_req else 0),
+            sent_levels=jax.lax.psum(acc[6], axes),
         )
         return rank, m
 
@@ -565,6 +578,7 @@ def _build_spmv(mesh, sg, cfg):
             lane_epochs=jnp.ones((1,), jnp.int32),
             retransmits=jax.lax.psum(stats.retransmits, axes),
             completed=jnp.int32(1),  # single drain+flush delivery
+            sent_levels=jax.lax.psum(stats.sent.astype(jnp.int32), axes),
         )
         return y, m
 

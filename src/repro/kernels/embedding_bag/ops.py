@@ -5,6 +5,7 @@ import functools
 
 import jax
 
+from repro.kernels import pallas_mode
 from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
@@ -14,6 +15,6 @@ def embedding_bag(table, idx, *, impl: str = "auto"):
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "pallas":
-        interp = jax.default_backend() != "tpu"
+        interp = pallas_mode.default_interpret()
         return embedding_bag_pallas(table, idx, interpret=interp)
     return embedding_bag_ref(table, idx)

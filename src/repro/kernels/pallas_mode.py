@@ -1,0 +1,55 @@
+"""Process-wide Pallas execution mode.
+
+``interpret=None`` anywhere in the kernel layer means "ask this module".
+The default auto-select is compiled on TPU and the interpreter everywhere
+else, unless ``TASCADE_PALLAS_COMPILED=1`` forces the compiled
+(non-interpret) path — the CI-optional lane that catches lowering and
+layout regressions the interpreter cannot see (tests/test_kernels_compiled
+and the optional CI job run the parity registry under this flag).
+
+``compiled_supported()`` probes the backend once with a one-block canary
+kernel so harnesses can skip gracefully where no compile path exists (the
+CPU backend refuses outright with "Only interpret mode is supported").
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+ENV_COMPILED = "TASCADE_PALLAS_COMPILED"
+
+
+def compiled_requested() -> bool:
+    """True when the environment opts into the compiled-Pallas lane."""
+    return os.environ.get(ENV_COMPILED, "") == "1"
+
+
+def default_interpret() -> bool:
+    """The ``interpret=None`` resolution: False (compiled) on TPU or when
+    ``TASCADE_PALLAS_COMPILED=1``, True (interpreter) otherwise."""
+    import jax
+
+    if compiled_requested():
+        return False
+    return jax.default_backend() != "tpu"
+
+
+@functools.cache
+def compiled_supported() -> bool:
+    """One-shot canary: can this backend lower AND run a trivial
+    ``pallas_call`` with ``interpret=False``?  Cached per process."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def canary(x_ref, o_ref):
+        o_ref[...] = x_ref[...] + 1
+
+    try:
+        out = pl.pallas_call(
+            canary, out_shape=jax.ShapeDtypeStruct((8,), jnp.int32),
+            interpret=False)(jnp.arange(8, dtype=jnp.int32))
+        jax.block_until_ready(out)
+        return bool(out[0] == 1)
+    except Exception:
+        return False

@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 import jax.experimental.pallas as pl
 
+from repro.kernels import pallas_mode
+
 NO_IDX = -1
 
 
@@ -106,7 +108,7 @@ def pcache_merge_batched_pallas(
     kernel)."""
     assert op in ("min", "max", "add") and policy in ("write_through", "write_back")
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = pallas_mode.default_interpret()
     L, u = idx.shape
     s = tags.shape[1]
     size_arr = jnp.asarray(sizes if sizes is not None else (s,) * L,
@@ -160,12 +162,12 @@ def pcache_merge_pallas(
     """Merge a sentinel-padded update stream into a direct-mapped cache.
 
     Returns (tags, vals, emit_idx, emit_val); emissions positional per entry.
-    ``interpret=None`` auto-selects by backend: compiled on TPU, interpreter
-    everywhere else (CPU/GPU hosts running the TPU kernel for tests).
+    ``interpret=None`` auto-selects via ``pallas_mode``: compiled on TPU or
+    under ``TASCADE_PALLAS_COMPILED=1``, interpreter everywhere else.
     """
     assert op in ("min", "max", "add") and policy in ("write_through", "write_back")
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = pallas_mode.default_interpret()
     u = idx.shape[0]
     s = tags.shape[0]
     if u % block:

@@ -48,6 +48,8 @@ import jax
 import jax.numpy as jnp
 import jax.experimental.pallas as pl
 
+from repro.kernels import pallas_mode
+
 _SEG = {
     "min": jax.ops.segment_min,
     "max": jax.ops.segment_max,
@@ -124,11 +126,11 @@ def route_pack_pallas(
 ):
     """Fused scatter epilogue; see ``ops.route_pack`` for the contract.
 
-    ``interpret=None`` auto-selects by backend: compiled on TPU, interpreter
-    everywhere else (CPU/GPU hosts running the TPU kernel for tests).
+    ``interpret=None`` auto-selects via ``pallas_mode``: compiled on TPU or
+    under ``TASCADE_PALLAS_COMPILED=1``, interpreter everywhere else.
     """
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = pallas_mode.default_interpret()
     n_lanes = len(wire_lanes)
     packs = tuple(wire_packs) if wire_packs else (1,) * n_lanes
     # "bits" lanes scatter as unsigned patterns (init must be the 0

@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 import jax.experimental.pallas as pl
 
+from repro.kernels import pallas_mode
+
 _SEG_REDUCE = {
     "add": jax.ops.segment_sum,
     "min": jax.ops.segment_min,
@@ -72,12 +74,12 @@ def segment_coalesce_pallas(
 
     seg: int32[U] in [0, num_segments]; id == num_segments parks padding.
     Returns f32-like[num_segments] (identity where a segment is empty).
-    ``interpret=None`` auto-selects by backend: compiled on TPU, interpreter
-    everywhere else (CPU/GPU hosts running the TPU kernel for tests).
+    ``interpret=None`` auto-selects via ``pallas_mode``: compiled on TPU or
+    under ``TASCADE_PALLAS_COMPILED=1``, interpreter everywhere else.
     """
     assert op in _SEG_REDUCE
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = pallas_mode.default_interpret()
     u = seg.shape[0]
     if u % block:
         pad = block - u % block

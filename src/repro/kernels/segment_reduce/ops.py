@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import pallas_mode
 from repro.kernels.segment_reduce.ref import segment_reduce_ref
 from repro.kernels.segment_reduce.segment_reduce import segment_reduce_pallas
 
@@ -16,7 +17,7 @@ def segment_reduce(data, seg, num_segments: int, *, op: str = "add",
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "pallas":
-        interp = jax.default_backend() != "tpu"
+        interp = pallas_mode.default_interpret()
         return segment_reduce_pallas(data, seg, num_segments, op=op,
                                      block=block, interpret=interp)
     return segment_reduce_ref(data, seg, num_segments, op=op)

@@ -1,17 +1,97 @@
-"""Production mesh builders.
+"""Mesh construction and the multi-process launch path.
 
-A function (not a module-level constant) so importing this module never
-touches jax device state. Single pod = 16x16 = 256 chips (data, model);
-multi-pod = 2 pods x 256 = 512 chips (pod, data, model).
+Single-process: ``make_production_mesh`` / ``make_debug_mesh`` /
+``make_scaling_mesh`` build named meshes over the devices the backend
+actually exposes.  The production shapes (16x16 single-pod, 2x16x16
+multi-pod) are *targets*: when the process sees fewer devices the shape is
+derived from ``jax.device_count()`` by balanced factorization instead of
+letting jax throw an opaque reshape error (``strict=True`` restores the
+hard requirement with an actionable message).
+
+Multi-process: ``init_distributed()`` wires this process into a
+``jax.distributed`` cluster from ``TASCADE_*`` environment variables
+(coordinator address, process count/index, per-process fake-device count),
+and ``spawn_single_host`` is the single-host smoke mode — it launches N
+copies of a worker script, each its own jax process with its own
+``--xla_force_host_platform_device_count`` so an 8-device mesh can be
+driven by 2 real processes on one machine.  ``init_distributed`` must run
+before the first device query of the process.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state.
 """
 from __future__ import annotations
 
+import os
+import socket
+import subprocess
+import sys
+
 from repro.core import compat
 
+ENV_COORDINATOR = "TASCADE_COORDINATOR"
+ENV_NUM_PROCESSES = "TASCADE_NUM_PROCESSES"
+ENV_PROCESS_ID = "TASCADE_PROCESS_ID"
+ENV_LOCAL_DEVICES = "TASCADE_LOCAL_DEVICES"
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+# Target (shape, axis names) of the paper-scale deployments: single pod =
+# 16x16 = 256 chips (data, model); multi-pod = 2 pods x 256 = 512 chips.
+PRODUCTION_SHAPES = {
+    False: ((16, 16), ("data", "model")),
+    True: ((2, 16, 16), ("pod", "data", "model")),
+}
+
+
+def balanced_shape(ndev: int, depth: int) -> tuple[int, ...]:
+    """Factor ``ndev`` into exactly ``depth`` axis sizes, as balanced as the
+    prime factorization allows, largest first (16, 4 -> (2, 2, 2, 2);
+    32, 4 -> (4, 2, 2, 2); 8, 2 -> (4, 2)).  Axes of size 1 pad out when
+    ``ndev`` has fewer prime factors than ``depth``."""
+    if ndev < 1 or depth < 1:
+        raise ValueError(f"need ndev >= 1 and depth >= 1, got {ndev}/{depth}")
+    factors, n, p = [], ndev, 2
+    while p * p <= n:
+        while n % p == 0:
+            factors.append(p)
+            n //= p
+        p += 1
+    if n > 1:
+        factors.append(n)
+    sizes = [1] * depth
+    for f in sorted(factors, reverse=True):
+        i = min(range(depth), key=lambda j: sizes[j])
+        sizes[i] *= f
+    return tuple(sorted(sizes, reverse=True))
+
+
+def _prod(shape):
+    out = 1
+    for s in shape:
+        out *= s
+    return out
+
+
+def make_production_mesh(*, multi_pod: bool = False, strict: bool = False):
+    """The paper-scale mesh — 16x16 (single pod) or 2x16x16 (multi-pod) —
+    over however many devices this process actually sees.
+
+    When the global device count is below the target, the shape is derived
+    from ``jax.device_count()`` over the same axis names (so smoke runs on
+    laptops/CI work), unless ``strict=True``, which raises with the exact
+    counts instead of the opaque reshape error jax would produce."""
+    import jax
+
+    shape, axes = PRODUCTION_SHAPES[multi_pod]
+    need, have = _prod(shape), jax.device_count()
+    if have < need:
+        if strict:
+            raise ValueError(
+                f"production mesh {'x'.join(map(str, shape))} needs {need} "
+                f"devices but jax.device_count() == {have}; launch more "
+                f"processes (init_distributed / spawn_single_host) or drop "
+                f"strict=True to derive a {len(axes)}-axis shape from the "
+                f"actual device count")
+        shape = balanced_shape(have, len(axes))
     return compat.make_mesh(shape, axes,
                             axis_types=compat.auto_axis_types(len(axes)))
 
@@ -20,3 +100,117 @@ def make_debug_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for subprocess tests (8 fake host devices)."""
     return compat.make_mesh(shape, axes,
                             axis_types=compat.auto_axis_types(len(axes)))
+
+
+def make_scaling_mesh(depth: int, *, ndev: int | None = None, axes=None):
+    """A depth-``depth`` mesh over the global device count, shape derived by
+    balanced factorization — the deep-mesh weak-scaling configurations
+    (8 -> 2x2x2 at depth 3, 16 -> 2x2x2x2 at depth 4, 32 -> 4x2x2x2).
+    ``ndev`` below the global count takes the first ``ndev`` devices, so a
+    weak-scaling sweep can walk device counts inside one process."""
+    import jax
+
+    total = jax.device_count()
+    ndev = total if ndev is None else ndev
+    if ndev > total:
+        raise ValueError(f"ndev={ndev} but only {total} devices are visible")
+    if axes is None:
+        axes = tuple(f"ax{i}" for i in range(depth))
+    if len(axes) != depth:
+        raise ValueError(f"{len(axes)} axis names for depth {depth}")
+    shape = balanced_shape(ndev, depth)
+    devices = jax.devices()[:ndev] if ndev < total else None
+    return compat.make_mesh(shape, axes,
+                            axis_types=compat.auto_axis_types(depth),
+                            devices=devices)
+
+
+def init_distributed(*, coordinator: str | None = None,
+                     num_processes: int | None = None,
+                     process_id: int | None = None,
+                     local_devices: int | None = None) -> bool:
+    """Join this process to a ``jax.distributed`` cluster.
+
+    Arguments default from the environment (``TASCADE_COORDINATOR``,
+    ``TASCADE_NUM_PROCESSES``, ``TASCADE_PROCESS_ID``,
+    ``TASCADE_LOCAL_DEVICES``); with no coordinator configured this is a
+    no-op returning False, so worker scripts can call it unconditionally.
+
+    Must run before the process's first device query: it installs the
+    per-process fake-device XLA flag (single-host smoke mode) and switches
+    the CPU collective implementation to gloo — the default CPU client
+    refuses cross-process computations outright — before initializing the
+    cluster.  Raises RuntimeError if the jax backend is already live.
+    """
+    env = os.environ
+    coordinator = coordinator or env.get(ENV_COORDINATOR)
+    if coordinator is None:
+        return False
+    num_processes = int(num_processes if num_processes is not None
+                        else env.get(ENV_NUM_PROCESSES, "1"))
+    process_id = int(process_id if process_id is not None
+                     else env.get(ENV_PROCESS_ID, "0"))
+    local_devices = local_devices if local_devices is not None \
+        else env.get(ENV_LOCAL_DEVICES)
+
+    import jax
+    from jax._src import xla_bridge
+
+    if xla_bridge.backends_are_initialized():
+        raise RuntimeError(
+            "init_distributed() called after the jax backend initialized; "
+            "call it before the first device query / computation")
+    if local_devices:
+        flag = f"--xla_force_host_platform_device_count={int(local_devices)}"
+        prev = env.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in prev:
+            env["XLA_FLAGS"] = f"{prev} {flag}".strip()
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:  # non-CPU wheels / jax without the option
+        pass
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return True
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def spawn_single_host(script, num_processes: int, local_devices: int, *,
+                      env=None, timeout: float = 600.0, args=()):
+    """Single-host multi-process smoke mode: run ``num_processes`` copies of
+    ``script`` (each calling ``init_distributed()`` early), every process a
+    separate jax process with ``local_devices`` fake CPU devices, all wired
+    to a coordinator on a free local port.  Returns a list of
+    ``(returncode, combined_output)`` in process-id order."""
+    port = _free_port()
+    base = dict(os.environ)
+    base.update(env or {})
+    # Each worker derives its own fake-device flag from TASCADE_LOCAL_DEVICES
+    # inside init_distributed; an inherited count would mask it.
+    base.pop("XLA_FLAGS", None)
+    base[ENV_COORDINATOR] = f"localhost:{port}"
+    base[ENV_NUM_PROCESSES] = str(num_processes)
+    base[ENV_LOCAL_DEVICES] = str(local_devices)
+    procs = []
+    for pid in range(num_processes):
+        e = dict(base)
+        e[ENV_PROCESS_ID] = str(pid)
+        procs.append(subprocess.Popen(
+            [sys.executable, str(script), *map(str, args)], env=e,
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True))
+    results = []
+    for p in procs:
+        try:
+            out, _ = p.communicate(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            p.kill()
+            out, _ = p.communicate()
+            out = (out or "") + "\n[spawn_single_host] TIMEOUT"
+        results.append((p.returncode, out))
+    return results

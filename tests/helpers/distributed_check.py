@@ -1,0 +1,62 @@
+"""Subprocess worker for the multi-process launch smoke.
+
+Joins a ``jax.distributed`` cluster from the ``TASCADE_*`` environment
+(``launch.mesh.init_distributed``; a no-op for the single-process reference
+run), builds the SAME mesh/graph/config in every process, runs BFS
+end-to-end on the global mesh, and prints a byte-level digest of the full
+distance vector plus the run counters.  The spawning test
+(``tests/test_launch.py``) requires every process's digest — and the
+single-process reference's — to be identical: the multi-process launch
+must be bit-equal to the single-process run.
+
+Must run with ``TASCADE_LOCAL_DEVICES`` (multi-process) or ``XLA_FLAGS``
+(single-process) providing the fake CPU devices.
+"""
+import hashlib
+import sys
+
+from repro.launch import mesh as launch
+
+DISTRIBUTED = launch.init_distributed()
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.core import CascadeMode, TascadeConfig  # noqa: E402
+from repro.graph import apps  # noqa: E402
+from repro.graph.partition import shard_graph  # noqa: E402
+from repro.graph.rmat import rmat_graph  # noqa: E402
+
+
+def main():
+    ndev = jax.device_count()
+    print(f"DEVICES global={ndev} local={jax.local_device_count()} "
+          f"nproc={jax.process_count()} distributed={int(DISTRIBUTED)}",
+          flush=True)
+
+    mesh = launch.make_scaling_mesh(2, axes=("data", "model"))
+    # Deterministic graph, identical in every process.
+    g = rmat_graph(8, edge_factor=8, seed=3, weighted=True)
+    sg = shard_graph(g, ndev)
+    root = int(np.argmax(g.degrees))
+    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+                        capacity_ratio=8, mode=CascadeMode.TASCADE,
+                        exchange_slack=2.0, max_exchange_rounds=8)
+    dist, m = apps.run_bfs(mesh, sg, root, cfg)
+
+    if jax.process_count() > 1:
+        from jax.experimental import multihost_utils
+        full = np.asarray(multihost_utils.process_allgather(dist, tiled=True))
+    else:
+        full = np.asarray(dist)
+    digest = hashlib.sha256(full.astype(np.float32).tobytes()).hexdigest()
+    print(f"DIGEST sha={digest} epochs={int(m.epochs)} "
+          f"sent={int(m.sent_total)} completed={int(m.completed)} "
+          f"finite={int(np.isfinite(full).sum())}", flush=True)
+    assert int(m.completed) == 1, "BFS hit an epoch bound"
+    assert int(m.overflow) == 0
+    print("DIST_OK", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

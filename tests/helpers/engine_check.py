@@ -284,6 +284,68 @@ def check_sort_free_level_round(mesh, vpad, u):
               f"all_to_all(s) for {nlev} level(s)")
 
 
+def check_unpacked_fallback_single_collective(mesh, vpad, u):
+    """Unpacked-fallback acceptance (depth->=4 meshes at the 31-bit edge):
+    when a level's compact key cannot fit the packed word (fmt None), the
+    fallback wire must STILL lower to zero sorts and exactly ONE all_to_all
+    per level-round — the idx and value-bit lanes ride one fused [P, 2K]
+    i32 block, not two collectives — and the received stream must be
+    element-for-element identical (value bits included) to the packed
+    wire's, since both use the same counting-rank slots."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.exchange import all_to_all_wire, route_and_pack
+    from repro.core.types import wire_format_for
+
+    geom = MeshGeom.from_mesh(mesh, vpad)
+    peers = geom.axis_size("data")
+    fmt = wire_format_for(peers, vpad)
+    assert fmt is not None
+
+    def peer_fn(idx):
+        return geom.owner_coord(idx, "data")
+
+    axes = tuple(mesh.axis_names)
+    rng = np.random.default_rng(17)
+    idx = rng.integers(0, vpad, size=(8, u)).astype(np.int32)
+    idx = np.where(rng.random((8, u)) < 0.85, idx, -1)
+
+    for dtype in (jnp.float32, jnp.int32):
+        val = rng.integers(-9, 9, size=(8, u)).astype(np.dtype(dtype))
+        val = np.where(idx == -1, 0, val)
+        got = {}
+        for name, f in (("unpacked", None), ("packed", fmt)):
+            def shard_fn(i, v, f=f):
+                new = UpdateStream(i.reshape(-1), v.reshape(-1))
+                rr = route_and_pack(make_stream(u, dtype, counted=True),
+                                    new, peer_fn, peers, u, op=ReduceOp.MIN,
+                                    fmt=f, num_elements=vpad)
+                s = all_to_all_wire(rr.wire, "data", f, dtype=dtype)
+                return s.idx.reshape(1, -1), s.val.reshape(1, -1)
+
+            fn = compat.shard_map(shard_fn, mesh=mesh,
+                                  in_specs=(P(axes), P(axes)),
+                                  out_specs=(P(axes), P(axes)),
+                                  check_vma=False)
+            jaxpr = jax.make_jaxpr(fn)(jnp.asarray(idx), jnp.asarray(val))
+            n_sorts = count_sorts(jaxpr.jaxpr)
+            n_a2a = count_primitive(jaxpr.jaxpr, "all_to_all")
+            assert n_sorts == 0, f"{name}: {n_sorts} sorts"
+            assert n_a2a == 1, (
+                f"{name} wire must fuse into ONE all_to_all per "
+                f"level-round, lowered {n_a2a}")
+            ri, rv = jax.jit(fn)(jnp.asarray(idx), jnp.asarray(val))
+            got[name] = (np.asarray(ri), np.asarray(rv))
+        np.testing.assert_array_equal(got["unpacked"][0], got["packed"][0])
+        np.testing.assert_array_equal(
+            got["unpacked"][1].view(np.uint32) if dtype is jnp.float32
+            else got["unpacked"][1],
+            got["packed"][1].view(np.uint32) if dtype is jnp.float32
+            else got["packed"][1])
+        print(f"OK unpacked fallback {np.dtype(dtype).name}: "
+              "0 sorts, 1 all_to_all, bit-equal to packed")
+
+
 def check_wire_codecs(mesh, ndev):
     """Payload-codec acceptance (the compressed-wire tentpole):
 
@@ -436,6 +498,7 @@ def main():
     rng = np.random.default_rng(0)
 
     check_sort_free_level_round(mesh, vpad, u)
+    check_unpacked_fallback_single_collective(mesh, vpad, u)
     check_idx_table_extents(mesh, vpad=2048, u=16)
     check_route_pack_fusion(mesh, vpad=2048, u=16)
     check_overflow_accounting(mesh, ndev)

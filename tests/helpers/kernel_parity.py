@@ -309,16 +309,20 @@ def _rp_make(rng, case):
 
 
 def _rp_run(impl, inputs, case):
+    from repro.kernels import pallas_mode
     from repro.kernels.route_pack.ops import route_pack
 
     inits, kinds, packs, _ = _rp_layout(case)
+    # interpret follows the process-wide mode (interpreter off-TPU, compiled
+    # under TASCADE_PALLAS_COMPILED=1) so the same registry cell doubles as
+    # the compiled-lane parity check in test_kernels_compiled.
     wire, li, lv = route_pack(
         jnp.asarray(inputs["wdest"]), jnp.asarray(inputs["ldest"]),
         tuple(jnp.asarray(l) for l in inputs["lanes"]),
         jnp.asarray(inputs["lidx"]), jnp.asarray(inputs["lval"]),
         wire_inits=inits, wire_kinds=kinds, wire_packs=packs,
         num_wire=case["P"] * case["K"], num_left=case["C"], impl=impl,
-        block=case["block"], interpret=True)
+        block=case["block"], interpret=pallas_mode.default_interpret())
     return (*wire, li, lv)
 
 

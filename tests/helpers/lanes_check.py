@@ -1,7 +1,9 @@
-"""Subprocess helper: batched query lanes on a fake 8-device mesh.
+"""Subprocess helper: batched query lanes on a fake-device mesh.
 
-Run with XLA_FLAGS=--xla_force_host_platform_device_count=8. Checks the
-GTEPS-protocol contracts of lane batching:
+Run with XLA_FLAGS=--xla_force_host_platform_device_count={8,16}: 8 devices
+exercise the original (2, 4) two-level mesh, 16 devices the depth-4
+weak-scaling mesh (2, 2, 2, 2) — one tree level per axis, three of them
+cascade levels — on the SAME checks. Contracts of lane batching:
 
   1. a K-lane multi-source SSSP/BFS sweep is per-lane BIT-equal to K
      independent single-source runs,
@@ -11,7 +13,11 @@ GTEPS-protocol contracts of lane batching:
      primitives and exactly ONE all_to_all per level-round, regardless of K
      (all lanes share every collective),
   4. lane-batched scatter-reduce through the public API is per-lane
-     bit-equal to independent reductions, for MIN and ADD.
+     bit-equal to independent reductions, for MIN and ADD,
+  5. ``quiesce_lane`` recycling is bit-clean at every depth, including the
+     self-healing-exchange buffers: with a FaultPlan active the retransmit
+     slot and replay buffer must not leak a purged lane's stale entries
+     into the next occupant.
 
 Prints one line per check; exits non-zero on failure.
 """
@@ -27,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import (
     CascadeMode,
+    FaultPlan,
     MeshGeom,
     ReduceOp,
     TascadeConfig,
@@ -70,18 +77,18 @@ def check_one_executable(mesh, sg, roots, cfg):
     print(f"OK lanes: one executable serves any {len(roots)}-root batch")
 
 
-def check_jaxpr_lane_invariants(mesh, vpad, u):
+def check_jaxpr_lane_invariants(mesh, vpad, u, region, cascade):
     """ZERO sorts, ONE all_to_all per level-round — independent of K."""
     from jax.sharding import PartitionSpec as P
 
+    ndev = mesh.devices.size
     geom = MeshGeom.from_mesh(mesh, vpad)
     for k in (1, 4, 8):
-        cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+        cfg = TascadeConfig(region_axes=region, cascade_axes=cascade,
                             capacity_ratio=4, mode=CascadeMode.FULL_CASCADE,
                             policy=WritePolicy.WRITE_THROUGH, n_lanes=k)
         engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=u * k)
         nlev = len(engine.levels)
-        shard = vpad // mesh.devices.size
 
         def shard_fn(dest, idx, val):
             state = engine.init_state()
@@ -95,8 +102,8 @@ def check_jaxpr_lane_invariants(mesh, vpad, u):
                               out_specs=P(axes), check_vma=False)
         jaxpr = jax.make_jaxpr(fn)(
             jnp.zeros((vpad * k,), jnp.float32),
-            jnp.zeros((8, u * k), jnp.int32),
-            jnp.zeros((8, u * k), jnp.float32),
+            jnp.zeros((ndev, u * k), jnp.int32),
+            jnp.zeros((ndev, u * k), jnp.float32),
         )
         n_sorts = count_sorts(jaxpr.jaxpr)
         n_a2a = count_primitive(jaxpr.jaxpr, "all_to_all")
@@ -108,19 +115,24 @@ def check_jaxpr_lane_invariants(mesh, vpad, u):
               f"{nlev} level(s)")
 
 
-def check_lane_recycling(mesh, ndev):
+def check_lane_recycling(mesh, ndev, region, cascade, fault_plan=None):
     """``quiesce_lane`` must scrub a lane so completely that a recycled
     lane behaves bit-identically to a fresh one — in particular, stale MIN
     cache lines from the previous occupant must not filter the next
     query's (larger) values — while untouched lanes keep their exact
-    state."""
+    state.  With ``fault_plan`` the engine additionally carries a
+    retransmit slot and replay buffer per level; a purged lane's wire
+    slots parked there (e.g. a delayed round-1 message awaiting replay)
+    must be invalidated too, or they would re-deliver stale updates into
+    the recycled lane."""
     from jax.sharding import PartitionSpec as P
 
     vpad, u, L = 256, 64, 4
     geom = MeshGeom.from_mesh(mesh, vpad)
-    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+    cfg = TascadeConfig(region_axes=region, cascade_axes=cascade,
                         capacity_ratio=4, mode=CascadeMode.TASCADE,
-                        policy=WritePolicy.WRITE_THROUGH, n_lanes=L)
+                        policy=WritePolicy.WRITE_THROUGH, n_lanes=L,
+                        fault_plan=fault_plan)
     engine = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=u * L)
     axes = tuple(mesh.axis_names)
     victim = 2
@@ -183,21 +195,24 @@ def check_lane_recycling(mesh, ndev):
         out_specs=P(axes), check_vma=False)(
             jnp.asarray(i2), jnp.asarray(v2))).reshape(vpad, L)
 
+    tag = "faulted" if fault_plan is not None else "clean"
     np.testing.assert_array_equal(
         got[:, victim], ref[:, victim],
-        err_msg="recycled lane != fresh lane (stale residue survived "
-                "quiesce_lane)")
+        err_msg=f"[{tag}] recycled lane != fresh lane (stale residue "
+                "survived quiesce_lane)")
     for l in range(L):
         if l == victim:
             continue
         np.testing.assert_array_equal(
             got[:, l], keep[:, l],
-            err_msg=f"quiesce_lane({victim}) perturbed untouched lane {l}")
-    print(f"OK lanes recycling: lane {victim} quiesced + re-queried "
-          f"bit-equal to a fresh lane; other {L - 1} lanes untouched")
+            err_msg=f"[{tag}] quiesce_lane({victim}) perturbed untouched "
+                    f"lane {l}")
+    print(f"OK lanes recycling [{tag}, {len(engine.levels)} levels]: lane "
+          f"{victim} quiesced + re-queried bit-equal to a fresh lane; "
+          f"other {L - 1} lanes untouched")
 
 
-def check_scatter_reduce_lanes(mesh, ndev):
+def check_scatter_reduce_lanes(mesh, ndev, region, cascade):
     vpad, u, L = 256, 64, 4
     rng = np.random.default_rng(3)
     idx = np.minimum(rng.zipf(1.5, size=(ndev, u)).astype(np.int64) - 1,
@@ -208,7 +223,7 @@ def check_scatter_reduce_lanes(mesh, ndev):
     val = np.where(idx == -1, 0, val)
     for op, policy in ((ReduceOp.MIN, WritePolicy.WRITE_THROUGH),
                        (ReduceOp.ADD, WritePolicy.WRITE_BACK)):
-        cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+        cfg = TascadeConfig(region_axes=region, cascade_axes=cascade,
                             capacity_ratio=4, policy=policy,
                             mode=CascadeMode.TASCADE, n_lanes=L)
         dest = jnp.full((L, vpad), op.identity, jnp.float32)
@@ -231,17 +246,30 @@ def check_scatter_reduce_lanes(mesh, ndev):
 
 
 def main():
-    mesh = compat.make_mesh((2, 4), ("data", "model"),
-                            axis_types=compat.auto_axis_types(2))
-    ndev = 8
+    ndev = jax.device_count()
+    if ndev >= 16:
+        # Depth-4 weak-scaling mesh: one tree level per axis, the last
+        # three of them cascade levels.
+        mesh = compat.make_mesh((2, 2, 2, 2), ("ax0", "ax1", "ax2", "ax3"),
+                                axis_types=compat.auto_axis_types(4))
+        region, cascade = ("ax3",), ("ax0", "ax1", "ax2")
+    else:
+        mesh = compat.make_mesh((2, 4), ("data", "model"),
+                                axis_types=compat.auto_axis_types(2))
+        region, cascade = ("model",), ("data",)
+    ndev = mesh.devices.size
 
-    check_jaxpr_lane_invariants(mesh, vpad=256, u=32)
-    check_lane_recycling(mesh, ndev)
-    check_scatter_reduce_lanes(mesh, ndev)
+    check_jaxpr_lane_invariants(mesh, vpad=256, u=32, region=region,
+                                cascade=cascade)
+    check_lane_recycling(mesh, ndev, region, cascade)
+    check_lane_recycling(mesh, ndev, region, cascade,
+                         fault_plan=FaultPlan(seed=5, drop_rate=0.15,
+                                              dup_rate=0.1, delay_rate=0.15))
+    check_scatter_reduce_lanes(mesh, ndev, region, cascade)
 
     g = rmat_graph(9, edge_factor=8, seed=1, weighted=True)
     sg = shard_graph(g, ndev)
-    cfg = TascadeConfig(region_axes=("model",), cascade_axes=("data",),
+    cfg = TascadeConfig(region_axes=region, cascade_axes=cascade,
                         capacity_ratio=8, mode=CascadeMode.TASCADE,
                         exchange_slack=2.0)
     roots = [int(r) for r in np.argsort(-g.degrees)[:4]]

@@ -1,9 +1,14 @@
 """Per-architecture smoke tests: reduced/tiny configs of the same family run
-one real forward/train step on CPU with shape + finiteness asserts."""
+one real forward/train step on CPU with shape + finiteness asserts.
+
+Also the production-mesh construction paths: below the 16x16 target the
+shape must be derived from the actual device count (not silently assumed),
+and ``strict=True`` must raise with an actionable message."""
 import numpy as np
 import pytest
 
 from repro.configs.registry import all_arch_names, get_bundle
+from repro.launch import mesh as launch
 
 ARCHS = all_arch_names()
 
@@ -46,3 +51,36 @@ def test_param_counts_sane():
     assert 2.6e10 < w < 4.0e10, f"qwen32 param count {w:.3g}"
     d = get_bundle("deepseek-moe-16b").config.param_count
     assert 1.2e10 < d < 2.2e10, f"deepseek count {d:.3g} not ~16B"
+
+
+def test_production_mesh_derives_from_device_count():
+    """Below the 256-device target the mesh shape must come from the real
+    device count — the old code hardcoded 16x16 and let jax throw an opaque
+    reshape error on any smaller machine."""
+    import jax
+
+    have = jax.device_count()
+    m = launch.make_production_mesh()
+    assert m.axis_names == ("data", "model")
+    assert m.devices.size == have
+    assert m.shape == dict(zip(("data", "model"),
+                               launch.balanced_shape(have, 2)))
+    mp = launch.make_production_mesh(multi_pod=True)
+    assert mp.axis_names == ("pod", "data", "model")
+    assert mp.devices.size == have
+
+
+def test_production_mesh_strict_is_actionable():
+    import jax
+
+    have = jax.device_count()
+    if have >= 256:
+        pytest.skip("strict path needs < 256 devices")
+    with pytest.raises(ValueError) as ei:
+        launch.make_production_mesh(strict=True)
+    msg = str(ei.value)
+    assert "256" in msg and str(have) in msg
+    assert "init_distributed" in msg and "strict=True" in msg
+    with pytest.raises(ValueError) as ei:
+        launch.make_production_mesh(multi_pod=True, strict=True)
+    assert "512" in str(ei.value)

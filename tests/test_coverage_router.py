@@ -56,14 +56,19 @@ from repro.core.types import (
 
 OPS = [ReduceOp.MIN, ReduceOp.MAX, ReduceOp.ADD]
 
-# (axis_sizes, exchanged axes, this level's axes): one- and two-axis
+# (axis_sizes, exchanged axes, this level's axes): one- to three-axis
 # exchanged prefixes, single and joint level-axis groups — the shapes the
-# engine's PROXY_MERGE / FULL_CASCADE / TASCADE plans produce.
+# engine's PROXY_MERGE / FULL_CASCADE / TASCADE plans produce, including
+# the depth-4 weak-scaling meshes (2x2x2x2, 4x2x2x2) where three axes have
+# already been exchanged by the time the last level routes.
 CONFIGS = [
     ((2, 4), ("ax1",), ("ax0",)),
     ((4, 2), ("ax0",), ("ax1",)),
     ((2, 2, 2), ("ax0", "ax1"), ("ax2",)),
     ((2, 2, 2), ("ax0",), ("ax1", "ax2")),
+    ((2, 2, 2, 2), ("ax0", "ax1", "ax2"), ("ax3",)),
+    ((4, 2, 2, 2), ("ax1", "ax2", "ax3"), ("ax0",)),
+    ((2, 2, 2, 2), ("ax0", "ax1"), ("ax2", "ax3")),
 ]
 
 
@@ -292,6 +297,41 @@ def test_engine_plan_structure():
                         mode=CascadeMode.OWNER_DIRECT)
     assert TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=64).table_elems \
         == 0
+
+
+@pytest.mark.parametrize("sizes,region,cascade", [
+    ((2, 2, 2, 2), ("ax3",), ("ax0", "ax1", "ax2")),
+    ((4, 2, 2, 2), ("ax0",), ("ax1", "ax2", "ax3")),
+])
+def test_engine_plan_structure_deep(sizes, region, cascade):
+    """Depth-4 weak-scaling meshes: a 4-level engine must shrink each
+    level's entering coverage geometrically — coverage(ℓ+1) ==
+    coverage(ℓ) / peers(ℓ) exactly, down to shard size at the last level —
+    and size every table and wire format in that coverage space."""
+    from repro.core import CascadeMode, ReduceOp, TascadeEngine
+
+    geom = _geom(sizes, 1024)
+    vpad = geom.padded_elements
+    cfg = TascadeConfig(region_axes=region, cascade_axes=cascade,
+                        mode=CascadeMode.FULL_CASCADE)
+    eng = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=64)
+    assert len(eng.levels) == len(sizes)
+    cov = vpad
+    covs = []
+    for li, spec in enumerate(eng.levels):
+        covs.append(cov)
+        if li == 0:
+            assert spec.plan is None
+        else:
+            assert spec.plan is not None
+            assert spec.plan.coverage == cov
+            assert spec.fmt is not None
+            assert spec.fmt.idx_bits == max(1, (cov - 1).bit_length())
+        assert cov % spec.num_peers == 0, (li, cov, spec.num_peers)
+        cov //= spec.num_peers
+    assert cov == geom.shard_size  # full tree: root coverage == one shard
+    assert covs == sorted(covs, reverse=True)  # monotone shrinkage
+    assert eng.table_elems == sum(covs)
 
 
 def test_compacted_router_smoke():

@@ -1,0 +1,60 @@
+"""CI-optional compiled-Pallas parity lane (``TASCADE_PALLAS_COMPILED=1``).
+
+The tier-1 sweep in ``test_kernels.py`` runs every Pallas kernel through
+the interpreter off-TPU; this module re-runs the same unified parity
+registry with compiled (non-interpret) ``pallas_call`` — the only way to
+catch lowering and layout regressions the interpreter cannot see.  It is
+opt-in by environment flag (the CI ``pallas-compiled`` job sets it) and
+skips gracefully, as a unit, on backends with no Pallas compile path: the
+CPU backend refuses ``interpret=False`` outright ("Only interpret mode is
+supported on CPU backend"), which ``pallas_mode.compiled_supported()``
+detects with a one-block canary kernel.
+
+The flag flips ``pallas_mode.default_interpret()`` process-wide, so every
+``interpret=None`` auto-select in the kernel layer — and the hardwired
+route_pack parity runner — lands on the compiled path without the registry
+knowing anything about the lane.
+"""
+import os
+
+import pytest
+
+pytestmark = pytest.mark.slow  # compiled-Pallas cross-product (opt-in lane)
+
+from helpers import kernel_parity
+
+from repro.kernels import pallas_mode
+
+if not pallas_mode.compiled_requested():
+    pytestmark = [pytest.mark.slow, pytest.mark.skip(
+        reason=f"set {pallas_mode.ENV_COMPILED}=1 to opt into the "
+               f"compiled-Pallas lane")]
+
+
+@pytest.fixture(scope="module")
+def compiled_backend():
+    """Skip the whole lane where the backend cannot compile Pallas."""
+    import jax
+
+    if not pallas_mode.compiled_supported():
+        pytest.skip(f"backend {jax.default_backend()!r} has no Pallas "
+                    f"compile path (canary pallas_call failed)")
+
+
+def test_flag_reaches_auto_select():
+    """The env flag must flip the process-wide interpret auto-select —
+    otherwise the whole module would silently re-test the interpreter."""
+    assert os.environ.get(pallas_mode.ENV_COMPILED) == "1"
+    assert pallas_mode.default_interpret() is False
+
+
+_CASES = [c for c in kernel_parity.all_cases() if c[1] == "pallas"]
+
+
+@pytest.mark.parametrize("name,impl,ci,seed",
+                         [c[:4] for c in _CASES],
+                         ids=[c[4] for c in _CASES])
+def test_kernel_parity_compiled(compiled_backend, name, impl, ci, seed):
+    """One registry cell, compiled: seeded random inputs -> backend vs
+    oracle, with pallas_call actually lowered instead of interpreted."""
+    kernel_parity.check(name, impl, ci, seed)

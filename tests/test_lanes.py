@@ -63,6 +63,9 @@ def test_lane_arg_contract():
 @pytest.mark.slow
 @pytest.mark.parametrize("devices,script", [
     (8, "lanes_check.py"),
+    # 16 devices flip the helper onto the depth-4 (2,2,2,2) weak-scaling
+    # mesh: 4-level recycling (clean + fault-plan retransmit buffers).
+    (16, "lanes_check.py"),
 ])
 def test_distributed_lanes(devices, script):
     env = dict(os.environ)

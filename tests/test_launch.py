@@ -1,0 +1,89 @@
+"""Launch-path tests: balanced mesh factorization (pure) and the
+single-host multi-process smoke — ``spawn_single_host`` drives two real
+``jax.distributed`` processes with 4 fake devices each and the resulting
+BFS must be bit-equal to a single-process 8-device run of the same worker.
+"""
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.launch import mesh as launch
+
+REPO = Path(__file__).resolve().parent.parent
+WORKER = REPO / "tests" / "helpers" / "distributed_check.py"
+
+
+@pytest.mark.parametrize("ndev,depth,want", [
+    (16, 4, (2, 2, 2, 2)),
+    (32, 4, (4, 2, 2, 2)),
+    (8, 3, (2, 2, 2)),
+    (8, 2, (4, 2)),
+    (12, 2, (4, 3)),
+    (7, 2, (7, 1)),
+    (1, 3, (1, 1, 1)),
+    (256, 2, (16, 16)),
+    (512, 3, (8, 8, 8)),
+])
+def test_balanced_shape(ndev, depth, want):
+    got = launch.balanced_shape(ndev, depth)
+    assert got == want
+    prod = 1
+    for s in got:
+        prod *= s
+    assert prod == ndev
+
+
+def test_balanced_shape_rejects_degenerate():
+    with pytest.raises(ValueError):
+        launch.balanced_shape(0, 2)
+    with pytest.raises(ValueError):
+        launch.balanced_shape(8, 0)
+
+
+def _worker_env(extra):
+    env = dict(os.environ)
+    for k in (launch.ENV_COORDINATOR, launch.ENV_NUM_PROCESSES,
+              launch.ENV_PROCESS_ID, launch.ENV_LOCAL_DEVICES):
+        env.pop(k, None)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.update(extra)
+    return env
+
+
+def _digest_of(output):
+    m = re.search(r"DIGEST (sha=\S+ epochs=\S+ sent=\S+ completed=\S+ "
+                  r"finite=\S+)", output)
+    assert m, f"no DIGEST line in worker output:\n{output}"
+    return m.group(1)
+
+
+@pytest.mark.slow
+def test_multiprocess_bfs_bitequal_to_single_process():
+    """Tentpole acceptance: a 2-process jax.distributed launch (4 fake
+    devices each) runs BFS end-to-end and every process's full distance
+    digest matches the single-process 8-device reference exactly."""
+    ref = subprocess.run(
+        [sys.executable, str(WORKER)],
+        env=_worker_env({"XLA_FLAGS":
+                         "--xla_force_host_platform_device_count=8"}),
+        capture_output=True, text=True, timeout=600)
+    assert ref.returncode == 0, \
+        f"stdout:\n{ref.stdout}\nstderr:\n{ref.stderr}"
+    assert "DIST_OK" in ref.stdout
+    assert "distributed=0" in ref.stdout
+    ref_digest = _digest_of(ref.stdout)
+
+    results = launch.spawn_single_host(
+        WORKER, 2, 4,
+        env={"PYTHONPATH": str(REPO / "src")}, timeout=600)
+    assert len(results) == 2
+    for pid, (rc, out) in enumerate(results):
+        assert rc == 0, f"proc {pid} rc={rc}:\n{out}"
+        assert "DIST_OK" in out
+        assert "global=8 local=4 nproc=2 distributed=1" in out
+        assert _digest_of(out) == ref_digest, \
+            f"proc {pid} digest diverged from single-process reference"

@@ -94,3 +94,42 @@ def test_word64_realization_switch():
 def test_codec_string_coercion():
     fmt = wire_format_for(4, 64, codec="u16")
     assert fmt is not None and fmt.codec is PayloadCodec.U16
+
+
+def test_depth4_engine_boundary_compaction_reenables_packing():
+    """Depth-4 weak-scaling meshes at the 31-bit edge: a first level whose
+    full-element key overflows int32 must fall back unpacked (fmt None),
+    while owner-digit compaction shrinks the entering coverage geometrically
+    so every DEEPER level comes back under the edge and packs again."""
+    from repro.core import CascadeMode, MeshGeom, ReduceOp, TascadeConfig
+    from repro.core.engine import TascadeEngine
+
+    for sizes, region, cascade, p0 in (
+            ((2, 2, 2, 2), ("ax3",), ("ax0", "ax1", "ax2"), 2),
+            ((4, 2, 2, 2), ("ax0",), ("ax1", "ax2", "ax3"), 4)):
+        names = tuple(f"ax{i}" for i in range(len(sizes)))
+        geom = MeshGeom(axis_names=names, axis_sizes=sizes,
+                        num_elements=1 << 30)
+        assert geom.padded_elements == 1 << 30
+        cfg = TascadeConfig(region_axes=region, cascade_axes=cascade,
+                            mode=CascadeMode.FULL_CASCADE)
+        eng = TascadeEngine(cfg, geom, ReduceOp.MIN, update_cap=64)
+        assert len(eng.levels) == 4
+        lv0 = eng.levels[0]
+        assert lv0.num_peers == p0
+        # (P+1) << 30 > 2**31 for P in {2, 4}: level 0 cannot pack.
+        assert wire_format_for(lv0.num_peers, 1 << 30) is None
+        assert lv0.fmt is None
+        cov = (1 << 30) // lv0.num_peers
+        for spec in eng.levels[1:]:
+            # entering coverage is back under the 31-bit edge -> packed
+            assert spec.plan is not None and spec.plan.coverage == cov
+            assert spec.fmt is not None
+            assert spec.fmt.idx_bits == (cov - 1).bit_length()
+            cov //= spec.num_peers
+        # Without compaction nothing recovers: every level stays unpacked.
+        import dataclasses
+        off = TascadeEngine(
+            dataclasses.replace(cfg, compact_tables=False), geom,
+            ReduceOp.MIN, update_cap=64)
+        assert all(s.fmt is None for s in off.levels)
